@@ -1,0 +1,33 @@
+"""Benchmark: paper Fig. 5 — FPS / FPS/W / FPS/W/mm2, SPOGA vs baselines."""
+
+from repro.core.accelerator_sim import (
+    ACCELS, WORKLOADS, fig5_comparison, headline_ratios,
+)
+
+
+def run() -> list[str]:
+    comp = fig5_comparison()
+    lines = ["", "=== Fig. 5: system-level comparison (4 CNNs, 8 GEMM groups) ==="]
+    lines.append(f"{'accel':14s} {'workload':14s} {'FPS':>12s} {'FPS/W':>10s} "
+                 f"{'FPS/W/mm2':>11s} {'power W':>9s} {'area mm2':>9s}")
+    for name in ACCELS:
+        for w in WORKLOADS:
+            r = comp[name][w]
+            lines.append(
+                f"{name:14s} {w:14s} {r.fps:12.1f} {r.fps_per_w:10.3f} "
+                f"{r.fps_per_w_mm2:11.5f} {r.power_w:9.2f} {r.area_mm2:9.1f}")
+        g = comp[name]["gmean"]
+        lines.append(
+            f"{name:14s} {'GMEAN':14s} {g['fps']:12.1f} {g['fps_per_w']:10.3f} "
+            f"{g['fps_per_w_mm2']:11.5f}")
+    lines.append("")
+    lines.append("=== headline ratios vs paper Sec. IV-C ===")
+    for key, vals in headline_ratios(comp).items():
+        delta = 100.0 * (vals["ours"] / vals["paper"] - 1.0)
+        lines.append(f"{key:45s} ours={vals['ours']:6.2f}  paper={vals['paper']:5.1f}"
+                     f"  ({delta:+.0f}%)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

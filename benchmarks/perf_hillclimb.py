@@ -1,0 +1,101 @@
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Runs tagged dry-run variants of the three selected cells and appends them
+to ``results/perf.jsonl``; each variant is one hypothesis in the
+hypothesis -> change -> measure -> validate loop.
+
+MUST run as its own process (sets the 512-device XLA flag):
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--cell A|B|C]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+OUT = "results/perf.jsonl"
+
+
+def run(tag: str, **kw):
+    from repro.launch.dryrun import run_cell
+
+    rec = run_cell(extra_tags={"tag": tag}, **kw)
+    from benchmarks.roofline import roofline_terms
+
+    t = roofline_terms(rec)
+    rec["roofline"] = {k: v for k, v in t.items() if k != "model_flops"}
+    os.makedirs("results", exist_ok=True)
+    with open(OUT, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"[{tag}] compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+          f"collective={t['collective_s']:.3e}s dom={t['dominant']} "
+          f"hbm={rec.get('hbm_per_device_gib')}GiB")
+    return rec
+
+
+# --------------------------------------------------------------------------
+# Cell A — paper-representative: mistral-large-123b x train_4k.
+# The paper's axis: INT8 GEMM dataflows. bf16 -> int8_deas (prior work) ->
+# int8_spoga (paper) -> int8_direct (beyond paper), plus remat & collective
+# iterations on the dominant terms.
+# --------------------------------------------------------------------------
+
+def cell_a():
+    base = dict(arch="mistral-large-123b", shape_name="train_4k",
+                multi_pod=False, microbatches=8)
+    run("A0_bf16_baseline", quant_mode="bf16", **base)
+    run("A1_int8_deas_paper_baseline", quant_mode="int8_deas", **base)
+    run("A2_int8_spoga_paper", quant_mode="int8_spoga", **base)
+    run("A3_int8_direct_beyond", quant_mode="int8_direct", **base)
+    # memory-term iterations on the best dataflow
+    run("A4_spoga_remat_dots", quant_mode="int8_spoga", remat_policy="dots", **base)
+    run("A5_spoga_bf16_grads", quant_mode="int8_spoga",
+        grad_reduce_dtype="bf16", **base)
+    run("A6_spoga_mb4", quant_mode="int8_spoga",
+        **{**base, "microbatches": 4})
+
+
+# --------------------------------------------------------------------------
+# Cell B — worst roofline fraction: mistral-large-123b x decode_32k
+# (memory-bound on KV-cache reads; rl_frac ~0.003).
+# --------------------------------------------------------------------------
+
+def cell_b():
+    base = dict(arch="mistral-large-123b", shape_name="decode_32k",
+                multi_pod=False)
+    run("B0_bf16_cache_baseline", quant_mode="bf16", **base)
+    run("B1_int8_kv_cache", quant_mode="bf16", kv_cache_dtype="int8", **base)
+    run("B2_int8_kv_plus_weights", quant_mode="int8_direct",
+        kv_cache_dtype="int8", **base)
+
+
+# --------------------------------------------------------------------------
+# Cell C — most collective-bound: granite-moe-3b-a800m x prefill_32k
+# (collective term ~1.2x the memory term at baseline).
+# --------------------------------------------------------------------------
+
+def cell_c():
+    base = dict(arch="granite-moe-3b-a800m", shape_name="prefill_32k",
+                multi_pod=False)
+    run("C0_baseline", quant_mode="bf16", **base)
+    run("C1_no_fsdp_serving", quant_mode="bf16", fsdp=False, **base)
+    run("C2_no_fsdp_int8", quant_mode="int8_spoga", fsdp=False, **base)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "all"])
+    args = ap.parse_args()
+    if args.cell in ("A", "all"):
+        cell_a()
+    if args.cell in ("B", "all"):
+        cell_b()
+    if args.cell in ("C", "all"):
+        cell_c()
+
+
+if __name__ == "__main__":
+    main()

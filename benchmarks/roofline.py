@@ -1,0 +1,166 @@
+"""Roofline analysis from the dry-run's compiled artifacts (EXPERIMENTS.md).
+
+Reads ``results/dryrun.jsonl`` (written by ``repro.launch.dryrun``) and for
+every (arch x shape x mesh x quant_mode) cell derives the three roofline
+terms on TPU v5e targets:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          [197e12 bf16]
+    memory     = HLO_bytes_per_device / HBM_bw              [819e9 B/s]
+    collective = collective_bytes_per_device / (links * 50e9 B/s)
+
+plus MODEL_FLOPS = 6*N*D (train) or 2*N*D (prefill/decode), with N the
+*active* parameter count (MoE: shared + top-k routed), and the useful-
+compute ratio MODEL_FLOPS / (HLO_FLOPs * devices).
+
+The dominant term is the bottleneck the perf loop (EXPERIMENTS.md, Perf)
+iterates on.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+PEAK_FLOPS_BF16 = 197e12      # per v5e chip
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9                # B/s per chip
+ICI_LINK_BW = 50e9            # B/s per link per direction
+LINKS_PER_CHIP = 4            # 2D torus (16x16 pod)
+
+_PARAM_CACHE: dict[str, tuple[float, float]] = {}
+
+
+def param_counts(arch: str) -> dict:
+    """Active/matmul parameter decomposition (cached; shapes only).
+
+    * ``active``      — total with MoE experts scaled to top-k/E.
+    * ``matmul``      — active params that do per-token matmul work
+                        (excludes the embedding gather; includes the
+                        unembedding head once for tied embeddings).
+    * ``enc_matmul``  — encoder-stack share of ``matmul`` (enc-dec only).
+    * ``head``        — unembedding matrix size (V*d).
+    """
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+
+    cfg = get_config(arch)
+    shapes = model_lib.param_shapes(cfg)
+    total = active = matmul = enc_matmul = 0.0
+    head = float(cfg.vocab_size * cfg.d_model)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = math.prod(leaf.shape)
+        total += n
+        keys = [str(getattr(e, "key", getattr(e, "name", ""))) for e in path]
+        name = keys[-1]
+        a = n
+        if name.startswith("experts_") and cfg.moe is not None:
+            a = n * cfg.moe.top_k / cfg.moe.num_experts
+        active += a
+        if name == "embed":          # gather, not matmul (head counted below)
+            continue
+        matmul += a
+        if any(k.startswith("enc_") for k in keys):
+            enc_matmul += a
+    if cfg.tie_embeddings:
+        matmul += head               # tied: the table is also the head matmul
+    out = {"total": total, "active": active, "matmul": matmul,
+           "enc_matmul": enc_matmul, "head": head}
+    _PARAM_CACHE[arch] = out
+    return out
+
+
+def model_flops(rec: dict) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = matmul-active params,
+    adjusted for what each step actually computes: prefill evaluates the
+    head at the LAST position only, and enc-dec prefill runs the encoder
+    over the source but the decoder on a single token."""
+    from repro.configs import SHAPES
+
+    shape = SHAPES[rec["shape"]]
+    pc = param_counts(rec["arch"])
+    b, s = shape.global_batch, shape.seq_len
+    if rec["kind"] == "train":
+        return 6.0 * pc["matmul"] * b * s
+    body = pc["matmul"] - pc["head"]            # per-token matmul params
+    if rec["kind"] == "prefill":
+        if pc["enc_matmul"] > 0:                 # enc-dec: encoder over S
+            return 2.0 * pc["enc_matmul"] * b * s + 2.0 * pc["matmul"] * b
+        return 2.0 * body * b * s + 2.0 * pc["head"] * b
+    return 2.0 * pc["matmul"] * b               # decode: 1 token/seq, full head
+
+
+def roofline_terms(rec: dict) -> dict:
+    peak = PEAK_FLOPS_INT8 if rec.get("quant_mode", "bf16").startswith("int8") \
+        else PEAK_FLOPS_BF16
+    cost = rec.get("cost_cal") or rec["cost"]          # depth-calibrated if present
+    coll = rec.get("collectives_cal") or rec["collectives"]
+    compute = max(cost["flops_per_device"], 0.0) / peak
+    memory = max(cost["bytes_accessed_per_device"], 0.0) / HBM_BW
+    collective = max(coll["total_bytes"], 0.0) / (LINKS_PER_CHIP * ICI_LINK_BW)
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec)
+    hlo_total = cost["flops_per_device"] * rec["devices"]
+    bound = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "roofline_frac": compute / bound if bound else 0.0,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_total if hlo_total > 0 else 0.0,
+        # achieved fraction of peak if the dominant term sets step time
+        "mfu_bound": (mf / rec["devices"] / bound) / PEAK_FLOPS_BF16 if bound else 0.0,
+    }
+
+
+def load_records(path: str = "results/dryrun.jsonl") -> dict:
+    """Latest ok record per (arch, shape, mesh, quant_mode, tags)."""
+    recs: dict[tuple, dict] = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if not r.get("ok"):
+                continue
+            key = (r["arch"], r["shape"], r["mesh"], r.get("quant_mode", "bf16"),
+                   r.get("tag", ""))
+            recs[key] = r
+    return recs
+
+
+def run(path: str = "results/dryrun.jsonl", mesh: str = "16x16",
+        quant_mode: str | None = "bf16") -> list[str]:
+    recs = load_records(path)
+    lines = ["", f"=== roofline ({mesh}, v5e: 197TF bf16 / 819GB/s HBM / "
+                 f"{LINKS_PER_CHIP}x50GB/s ICI) ==="]
+    lines.append(
+        f"{'arch':22s} {'shape':12s} {'qm':10s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'collect_s':>10s} {'dom':>7s} {'rl_frac':>8s} {'useful':>7s} {'mfu_bnd':>8s}")
+    rows = [r for k, r in sorted(recs.items())
+            if r["mesh"] == mesh and (quant_mode is None or r["quant_mode"] == quant_mode)
+            and not r.get("tag")]
+    for r in rows:
+        t = roofline_terms(r)
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['quant_mode']:10s} "
+            f"{t['compute_s']:10.3e} {t['memory_s']:10.3e} {t['collective_s']:10.3e} "
+            f"{t['dominant']:>7s} {t['roofline_frac']:8.3f} {t['useful_ratio']:7.3f} "
+            f"{t['mfu_bound']:8.4f}")
+    if not rows:
+        lines.append("(no dry-run records found — run python -m repro.launch.dryrun)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

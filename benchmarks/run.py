@@ -1,0 +1,42 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-kernels]
+
+Sections:
+  * Table I   — photonic scalability (N x M vs data rate / laser power)
+  * Fig. 5    — FPS / FPS/W / FPS/W/mm2 for SPOGA vs HOLYLIGHT vs DEAPCNN
+  * kernels   — INT8 GEMM dataflow comparison (HLO bytes + host timing)
+  * roofline  — v5e roofline terms per (arch x shape) from the dry-run
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-kernels", action="store_true",
+                    help="skip the XLA-timed kernel section (fast mode)")
+    ap.add_argument("--dryrun-jsonl", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    from benchmarks import fig5_fps, table1_scalability
+
+    out: list[str] = []
+    out += table1_scalability.run()
+    out += fig5_fps.run()
+
+    if not args.skip_kernels:
+        from benchmarks import kernel_bench
+
+        out += kernel_bench.run()
+
+    from benchmarks import roofline
+
+    out += roofline.run(args.dryrun_jsonl, mesh="16x16")
+    out += roofline.run(args.dryrun_jsonl, mesh="2x16x16")
+
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

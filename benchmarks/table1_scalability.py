@@ -1,0 +1,29 @@
+"""Benchmark: paper Table I — scalability (N, M) vs data rate & laser power."""
+
+from repro.core.photonic_model import PAPER_TABLE_I, scalability_table
+
+
+def run() -> list[str]:
+    lines = ["", "=== Table I: scalability (N x M per GEMM core) ==="]
+    table = scalability_table()
+    hdr = f"{'Architecture':16s} " + "".join(
+        f"| {dr:>2g} GS/s (ours) | (paper) " for dr in (1.0, 5.0, 10.0)
+    )
+    lines.append(hdr)
+    n_match = n_total = 0
+    for row, cells in PAPER_TABLE_I.items():
+        parts = [f"{row:16s} "]
+        for dr, paper_nm in cells.items():
+            ours = table[row][dr]
+            ok = ours == paper_nm
+            n_match += ok
+            n_total += 1
+            parts.append(f"| {ours[0]:>4d}x{ours[1]:<3d} {'ok ' if ok else 'XX '} "
+                         f"| {paper_nm[0]:>3d}x{paper_nm[1]:<3d} ")
+        lines.append("".join(parts))
+    lines.append(f"Table I reproduction: {n_match}/{n_total} cells exact")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,14 @@
+"""Reproduce the paper's own evaluation: Table I and Fig. 5.
+
+    PYTHONPATH=src python examples/photonic_sim.py
+
+Prints the link-budget scalability table (15/15 cells exact vs the paper)
+and the transaction-level FPS / FPS/W / FPS/W/mm2 comparison of SPOGA vs
+HOLYLIGHT (MAW) and DEAPCNN (AMW) on MobileNet-V2, ShuffleNet-V2,
+ResNet-50 and GoogLeNet, with the headline ratios vs the paper's Sec IV-C.
+"""
+
+from benchmarks import fig5_fps, table1_scalability
+
+print("\n".join(table1_scalability.run()))
+print("\n".join(fig5_fps.run()))

@@ -1,0 +1,62 @@
+"""Serve a small model with batched requests: prefill + decode w/ KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3.2-1b --smoke
+    PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b --smoke \\
+        --batch 8 --gen 32          # bounded-state decode (RG-LRU + local attn)
+
+Every architecture family serves through the same two entry points
+(``prefill`` then repeated ``decode_step``); dense GQA, MLA, MoE,
+xLSTM state, RG-LRU and enc-dec cross-attention caches all work.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.launch.serve import serve_batch
+from repro.models import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--quant-mode", default="bf16")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    cfg = cfg.with_(quant_mode=args.quant_mode, remat=False)
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    if cfg.is_encoder_decoder:
+        batch = {
+            "src_embeds": jax.random.normal(
+                key, (args.batch, args.prompt_len, cfg.d_model)) * 0.02,
+            "tgt_tokens": jax.random.randint(
+                key, (args.batch, 4), 0, cfg.vocab_size),
+        }
+    else:
+        batch = {"tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+
+    t0 = time.time()
+    out, timings = serve_batch(cfg, params, batch,
+                               cache_len=args.prompt_len + args.gen, gen_tokens=args.gen)
+    dt = time.time() - t0
+    toks = args.batch * args.gen
+    print(f"[serve_lm] {args.arch}: generated {out.shape} "
+          f"({toks} tokens in {dt:.2f}s = {toks / dt:.1f} tok/s incl. compile)")
+    print("[serve_lm] sample:", np.asarray(out[0, :12]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` describes any of the 10 assigned architectures (dense /
+MoE / MLA / SSM / hybrid / enc-dec / stub-frontend) plus the SPOGA
+quantization execution mode.  Configs are plain frozen dataclasses so they
+hash (static jit args) and serialize trivially.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Quantization execution modes (DESIGN.md §3)
+QUANT_MODES = ("bf16", "int8_deas", "int8_spoga", "int8_direct")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0          # routed experts
+    top_k: int = 0
+    num_shared_experts: int = 0   # DeepSeekMoE-style always-on experts
+    d_expert: int = 0             # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+    first_k_dense: int = 0        # leading layers that use a dense FFN
+    d_ff_dense: int = 0           # hidden size of those dense FFN layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | vlm | audio | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None       # defaults to d_model // n_heads
+    # block pattern, cycled through the stack; entries in
+    # {"attn", "local_attn", "moe", "mlstm", "slstm", "rglru"}
+    block_pattern: tuple = ("attn",)
+    # attention
+    sliding_window: Optional[int] = None  # for local_attn blocks
+    rope_theta: float = 10_000.0
+    use_mla: bool = False
+    mla: Optional[MLAConfig] = None
+    # MoE
+    moe: Optional[MoEConfig] = None
+    # recurrent (rglru / xlstm)
+    conv_width: int = 4
+    lru_width: Optional[int] = None
+    # encoder-decoder
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    # modality frontend stub: None | "vision" | "audio"
+    frontend: Optional[str] = None
+    # numerics
+    quant_mode: str = "bf16"
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    tie_embeddings: bool = False
+    # scan/remat
+    scan_layers: bool = True
+    remat: bool = True
+    # "nothing"  — recompute the whole period in bwd (min memory, +33% flops)
+    # "dots"     — save matmul outputs, recompute elementwise only
+    remat_policy: str = "nothing"
+    # KV cache storage dtype for decode: "bf16" | "int8" (SPOGA-sliced
+    # storage: int8 payload + per-(pos, head) scale; halves cache HBM reads)
+    kv_cache_dtype: str = "bf16"
+    # Fully unroll every lax.scan (layers + loss chunks). Used by the
+    # dry-run's cost-calibration pass: XLA's HloCostAnalysis counts a
+    # while-loop body ONCE (not x trip count), so scanned stacks would
+    # under-report flops/bytes/collectives by ~n_layers. Never enable for
+    # real execution of deep configs (compile time is O(depth)).
+    scan_unroll: bool = False
+
+    def __post_init__(self):
+        if self.quant_mode not in QUANT_MODES:
+            raise ValueError(f"quant_mode must be in {QUANT_MODES}")
+        if self.family == "moe" and self.moe is None:
+            raise ValueError("moe family requires moe config")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.block_pattern)
+
+    def layer_type(self, i: int) -> str:
+        if self.moe is not None and i < self.moe.first_k_dense:
+            return "dense_ffn_layer"
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str           # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str           # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"      # cosine | linear | constant
+    zero1: bool = True            # shard optimizer state over the data axis
+    fsdp: bool = True             # ZeRO-3 weight sharding over the data axis
+    microbatches: int = 1         # gradient accumulation steps per update
+    grad_compression: bool = False  # int8 compressed gradient all-reduce
+    # dtype of the gradient reduce-scatter payload: "f32" (exact) or
+    # "bf16" (halves the dominant DP collective; AdamW still updates the
+    # f32 master copy)
+    grad_reduce_dtype: str = "f32"

@@ -1,0 +1,27 @@
+"""SPOGA core: bit-sliced integer GEMM dataflows + photonic hardware models.
+
+The paper's primary contribution, adapted TPU-natively (see DESIGN.md §2):
+fused radix-weighted accumulation of INT4-sliced partial products
+(:mod:`repro.core.spoga`), the prior-work DEAS baseline, and the analytical
+photonic scalability / transaction-level performance models that regenerate
+the paper's Table I and Fig. 5.
+"""
+
+from repro.core.slicing import slice_tc, slice_sm, slice_nibbles, reconstruct
+from repro.core.spoga import (
+    direct_matmul,
+    spoga_matmul,
+    deas_matmul,
+    quantized_matmul,
+)
+
+__all__ = [
+    "slice_tc",
+    "slice_sm",
+    "slice_nibbles",
+    "reconstruct",
+    "direct_matmul",
+    "spoga_matmul",
+    "deas_matmul",
+    "quantized_matmul",
+]

@@ -1,0 +1,81 @@
+"""INT8 -> nibble (INT4 slice) decompositions used by the SPOGA dataflow.
+
+The paper splits every INT8 operand into a Most Significant Nibble (MSN)
+and Least Significant Nibble (LSN) so that the analog photonic cores only
+ever see 4-bit operands (Sec. II-C).  Two exact decompositions are
+implemented:
+
+* ``tc``  — two's-complement slicing: ``x = 16 * msn + lsn`` with a *signed*
+  MSN in [-8, 7] and an *unsigned* LSN in [0, 15].  This is the natural
+  digital-hardware encoding and what the TPU kernel uses.
+
+* ``sm``  — sign-magnitude slicing, faithful to the paper's +ve/-ve
+  aggregation lanes: the sign of ``x`` is folded into both magnitude
+  nibbles, giving ``msn in [-8, 8]`` and ``lsn in [-15, 15]`` with
+  ``x = 16 * msn + lsn`` still exact.  A product of two sliced values then
+  carries the product sign, exactly as the optical signal picks the + or -
+  lane.
+
+Both reconstruct **exactly** for the full int8 range including -128
+(property-tested in tests/test_slicing.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RADIX = 16  # one nibble
+RADIX_BITS = 4
+
+__all__ = [
+    "RADIX",
+    "RADIX_BITS",
+    "slice_tc",
+    "slice_sm",
+    "reconstruct",
+    "slice_nibbles",
+]
+
+
+def slice_tc(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two's-complement nibble slicing of an int8 array.
+
+    Returns ``(msn, lsn)`` as int8 arrays with ``x == 16 * msn + lsn``;
+    ``msn`` is the arithmetically-shifted signed high nibble in [-8, 7],
+    ``lsn`` the unsigned low nibble in [0, 15].
+    """
+    if x.dtype != jnp.int8:
+        raise TypeError(f"slice_tc expects int8, got {x.dtype}")
+    msn = jnp.right_shift(x, RADIX_BITS)  # arithmetic shift for signed ints
+    lsn = jnp.bitwise_and(x, RADIX - 1)   # always in [0, 15]
+    return msn, lsn
+
+
+def slice_sm(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sign-magnitude nibble slicing (paper's +/- lane encoding).
+
+    The sign is folded into both nibbles: ``msn = sign(x) * (|x| >> 4)``,
+    ``lsn = sign(x) * (|x| & 15)``.  Exact: ``x == 16 * msn + lsn``.
+    Magnitude is computed in int32 so that ``|-128|`` does not overflow.
+    """
+    if x.dtype != jnp.int8:
+        raise TypeError(f"slice_sm expects int8, got {x.dtype}")
+    wide = x.astype(jnp.int32)
+    sign = jnp.sign(wide)
+    mag = jnp.abs(wide)
+    msn = (sign * (mag >> RADIX_BITS)).astype(jnp.int8)  # in [-8, 8]
+    lsn = (sign * (mag & (RADIX - 1))).astype(jnp.int8)  # in [-15, 15]
+    return msn, lsn
+
+
+def slice_nibbles(x: jnp.ndarray, encoding: str = "tc"):
+    if encoding == "tc":
+        return slice_tc(x)
+    if encoding == "sm":
+        return slice_sm(x)
+    raise ValueError(f"unknown slicing encoding {encoding!r}")
+
+
+def reconstruct(msn: jnp.ndarray, lsn: jnp.ndarray) -> jnp.ndarray:
+    """Exact inverse of either slicing (computed in int32, cast to int8)."""
+    return (msn.astype(jnp.int32) * RADIX + lsn.astype(jnp.int32)).astype(jnp.int8)

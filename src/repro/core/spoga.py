@@ -1,0 +1,121 @@
+"""SPOGA bit-sliced integer GEMM dataflows (pure-JAX reference layer).
+
+Three execution strategies for an INT8 x INT8 -> INT32 GEMM, mirroring the
+paper's Fig. 2:
+
+* :func:`deas_matmul` — the *prior-work* baseline (Fig. 2a): four INT4-slice
+  GEMMs executed as separate kernels whose int32 intermediate matrices are
+  **materialized** (``lax.optimization_barrier`` forbids XLA from fusing
+  them away, exactly like the four photonic cores + ADCs + memory of
+  HOLYLIGHT/DEAPCNN-style designs), then combined by a Digital Electronic
+  Shifter-and-Adder (DEAS) pass.
+
+* :func:`spoga_matmul` — the paper's technique (Fig. 2b/c): the four partial
+  products are produced *inside one fused dataflow* and radix-weighted while
+  being accumulated, never leaving the accumulator.  On TPU the Pallas
+  kernel in ``repro/kernels/spoga_gemm.py`` implements this tile-by-tile in
+  VMEM; this jnp expression is its algebraic twin and is what the dry-run
+  lowers on CPU.
+
+* :func:`direct_matmul` — beyond-paper endpoint: native int8 x int8 -> int32
+  ``dot_general`` (the MXU's byte-capable path; one op, zero slicing).
+
+All three are **exactly** equal in int32 arithmetic (property-tested).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.slicing import RADIX_BITS, slice_nibbles
+
+__all__ = [
+    "direct_matmul",
+    "spoga_matmul",
+    "deas_matmul",
+    "spoga_dot_slices",
+    "quantized_matmul",
+]
+
+
+def _dot_i32(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 contraction over the last/first dims."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def direct_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Native int8 GEMM with int32 accumulation (no slicing)."""
+    return _dot_i32(x, w)
+
+
+def spoga_dot_slices(xm, xl, wm, wl):
+    """The four nibble partial GEMMs + in-accumulator radix weighting.
+
+    O = (Xm.Wm << 8) + ((Xm.Wl + Xl.Wm) << 4) + Xl.Wl
+
+    This is the PWAB: three radix groups (16^2, 16^1, 16^0), the 16^1 lane
+    receiving *two* homodyne contributions (the cross terms), all summed
+    into a single accumulator before one "ADC" (output write).
+    """
+    mm = _dot_i32(xm, wm)
+    ml = _dot_i32(xm, wl)
+    lm = _dot_i32(xl, wm)
+    ll = _dot_i32(xl, wl)
+    return (mm << (2 * RADIX_BITS)) + ((ml + lm) << RADIX_BITS) + ll
+
+
+def spoga_matmul(x: jnp.ndarray, w: jnp.ndarray, *, encoding: str = "tc") -> jnp.ndarray:
+    """Fused bit-sliced INT8 GEMM (the paper's SPOGA dataflow), int32 out.
+
+    ``encoding``: ``"tc"`` (two's-complement nibbles, TPU-native) or ``"sm"``
+    (sign-magnitude, faithful to the paper's +/- optical lanes).
+    """
+    xm, xl = slice_nibbles(x, encoding)
+    wm, wl = slice_nibbles(w, encoding)
+    return spoga_dot_slices(xm, xl, wm, wl)
+
+
+def deas_matmul(x: jnp.ndarray, w: jnp.ndarray, *, encoding: str = "tc") -> jnp.ndarray:
+    """Prior-work baseline: 4 separate INT4 GEMMs, materialized, then DEAS.
+
+    ``optimization_barrier`` pins each intermediate matrix as a real buffer
+    (4 x M x N x int32 of extra HBM traffic), reproducing the
+    ADC-conversion + memory round-trip structure the paper eliminates.
+    """
+    xm, xl = slice_nibbles(x, encoding)
+    wm, wl = slice_nibbles(w, encoding)
+    # Four independent "photonic cores", each producing an intermediate
+    # int32 matrix that must be stored before post-processing.
+    partials = (_dot_i32(xm, wm), _dot_i32(xm, wl), _dot_i32(xl, wm), _dot_i32(xl, wl))
+    mm, ml, lm, ll = jax.lax.optimization_barrier(partials)
+    # DEAS: digital shift-and-add over the stored intermediates.
+    return (mm << (2 * RADIX_BITS)) + ((ml + lm) << RADIX_BITS) + ll
+
+
+def quantized_matmul(
+    x_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    x_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    *,
+    mode: str = "int8_spoga",
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """W8A8 GEMM with dequantizing epilogue.
+
+    ``x_q``: (..., K) int8, row-wise scale ``x_scale`` (..., 1)
+    ``w_q``: (K, N) int8, per-output-channel scale ``w_scale`` (N,) or (1, N)
+    """
+    if mode == "int8_spoga":
+        acc = spoga_matmul(x_q, w_q)
+    elif mode == "int8_deas":
+        acc = deas_matmul(x_q, w_q)
+    elif mode == "int8_direct":
+        acc = direct_matmul(x_q, w_q)
+    else:
+        raise ValueError(f"unknown quantized matmul mode {mode!r}")
+    return (acc.astype(jnp.float32) * x_scale * jnp.reshape(w_scale, (1,) * (acc.ndim - 1) + (-1,))).astype(out_dtype)

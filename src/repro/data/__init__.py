@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokenPipeline, batch_specs
+
+__all__ = ["SyntheticTokenPipeline", "batch_specs"]

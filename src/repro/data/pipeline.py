@@ -1,0 +1,89 @@
+"""Deterministic, shardable synthetic data pipeline.
+
+Stateless by construction: batch ``i`` is a pure function of
+``(seed, step=i)`` — ``jax.random.fold_in`` — so a restarted worker (fault
+tolerance) or a re-sharded elastic job regenerates *exactly* the same
+stream with no iterator state to checkpoint.  Per-host slicing takes the
+host's batch shard by index, the multi-host analogue of tf.data sharding.
+
+Synthetic text is a structured Markov-ish stream (not iid uniform) so that
+a ~100M-parameter model shows a real, monotonically decreasing loss in the
+end-to-end example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for one global batch of the given shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.bfloat16
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            return {
+                "src_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f),
+                "tgt_tokens": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.frontend is not None:
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            return {
+                "src_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f),
+                "tgt_tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            }
+        if cfg.frontend is not None:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+    def global_batch_at(self, step: int) -> jnp.ndarray:
+        """(global_batch, seq_len) int32 tokens; pure function of step."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        v = max(self.vocab_size, 4)
+        b, s = self.global_batch, self.seq_len
+        # low-order structure: tokens = base pattern + rare jumps
+        base = jax.random.randint(k1, (b, 1), 0, v)
+        drift = jnp.cumsum(jax.random.bernoulli(k2, 0.1, (b, s)).astype(jnp.int32), axis=1)
+        noise = jax.random.randint(k3, (b, s), 0, 7)
+        return ((base + 13 * drift + noise) % self.vocab_size).astype(jnp.int32)
+
+    def host_batch_at(self, step: int) -> jnp.ndarray:
+        g = self.global_batch_at(step)
+        hb = self.host_batch
+        return g[self.host_id * hb : (self.host_id + 1) * hb]
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.host_batch_at(step)
+            step += 1

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the SPOGA GEMM hot-spot.
+
+``spoga_gemm``  — the paper's fused bit-sliced dataflow (one kernel).
+``deas_gemm``   — prior-work baseline with materialized slice partials.
+``ops``         — jit'd dispatch (TPU kernel / interpret / jnp fallback).
+``ref``         — pure-jnp exact oracles.
+"""
+
+from repro.kernels.ops import int8_gemm
+from repro.kernels.spoga_gemm import spoga_gemm
+from repro.kernels.deas_gemm import deas_gemm
+
+__all__ = ["int8_gemm", "spoga_gemm", "deas_gemm"]

@@ -1,0 +1,124 @@
+"""Prior-work (DEAS) bit-sliced INT8 GEMM — Pallas baseline kernels.
+
+Faithful kernel-level model of the Fig. 2(a) pipeline that SPOGA replaces:
+
+* ``nibble_gemm`` runs ONE INT4-slice GEMM and writes its int32
+  intermediate matrix to HBM — one photonic core + its per-time-step
+  ADC conversions + intermediate memory store;
+* four such calls produce the four intermediate matrices;
+* ``deas_combine_kernel`` is the Digital Electronic Shifter-and-Adder: it
+  re-reads all four intermediates from HBM and shift-adds them.
+
+Compared to the fused SPOGA kernel this moves an extra
+``4 write + 4 read = 8 x M x N x 4`` bytes of int32 HBM traffic per GEMM —
+exactly the overhead class the paper eliminates (Sec. II-D), now visible to
+``cost_analysis()`` in the benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.spoga_gemm import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_M,
+    DEFAULT_BLOCK_N,
+    RADIX_BITS,
+    _dot_i32,
+    _slice_tc,
+)
+
+
+def _nibble_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k_tiles: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _dot_i32(x_ref[...], w_ref[...])
+
+    @pl.when(pl.program_id(2) == n_k_tiles - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+def _nibble_gemm(x, w, bm, bn, bk, interpret):
+    m, k = x.shape
+    _, n = w.shape
+    gm, gn, gk = m // bm, n // bn, k // bk
+    return pl.pallas_call(
+        functools.partial(_nibble_gemm_kernel, n_k_tiles=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)
+
+
+def _deas_combine_kernel(mm_ref, ml_ref, lm_ref, ll_ref, o_ref):
+    o_ref[...] = (
+        (mm_ref[...] << (2 * RADIX_BITS))
+        + ((ml_ref[...] + lm_ref[...]) << RADIX_BITS)
+        + ll_ref[...]
+    )
+
+
+def _deas_combine(mm, ml, lm, ll, bm, bn, interpret):
+    m, n = mm.shape
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _deas_combine_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[spec] * 4,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(mm, ml, lm, ll)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def deas_gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(M, K) int8 @ (K, N) int8 -> (M, N) int32 via 4 materialized slices."""
+    if x.dtype != jnp.int8 or w.dtype != jnp.int8:
+        raise TypeError("deas_gemm expects int8 operands")
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+
+    xm, xl = _slice_tc(xp)
+    wm, wl = _slice_tc(wp)
+    # Four separate cores -> four HBM-resident intermediate matrices.
+    partials = (
+        _nibble_gemm(xm, wm, bm, bn, bk, interpret),
+        _nibble_gemm(xm, wl, bm, bn, bk, interpret),
+        _nibble_gemm(xl, wm, bm, bn, bk, interpret),
+        _nibble_gemm(xl, wl, bm, bn, bk, interpret),
+    )
+    mm, ml, lm, ll = jax.lax.optimization_barrier(partials)
+    out = _deas_combine(mm, ml, lm, ll, bm, bn, interpret)
+    return out[:m, :n] if (pm or pn) else out

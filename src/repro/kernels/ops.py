@@ -1,0 +1,74 @@
+"""Jit'd dispatch wrappers: Pallas TPU kernels with a jnp fallback.
+
+``int8_gemm(x, w, mode=...)`` is the single entry point the model layers
+call.  On TPU backends the Pallas kernels run natively; elsewhere (CPU
+dry-run / tests) either ``interpret=True`` executes the kernel body in
+Python, or the algebraically identical jnp path is lowered so that pjit
+sharding and cost analysis still see the same dataflow structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spoga as _spoga
+from repro.kernels.deas_gemm import deas_gemm
+from repro.kernels.spoga_gemm import spoga_gemm
+
+MODES = ("int8_spoga", "int8_deas", "int8_direct")
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "use_pallas", "interpret"))
+def int8_gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    mode: str = "int8_spoga",
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """INT8 (M,K) @ (K,N) -> int32 (M,N) under the selected dataflow."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if mode == "int8_direct":
+        return _spoga.direct_matmul(x, w)
+    if use_pallas or interpret:
+        fn = spoga_gemm if mode == "int8_spoga" else deas_gemm
+        return fn(x, w, interpret=interpret or not _on_tpu())
+    fn = _spoga.spoga_matmul if mode == "int8_spoga" else _spoga.deas_matmul
+    return fn(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def int8_gemm_dequant(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    x_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """W8A8 GEMM + dequantizing epilogue in one fused pass (f32 out).
+
+    TPU: the ``spoga_gemm_dequant`` Pallas kernel (saves the (M, N) int32
+    HBM round trip between GEMM and epilogue); elsewhere the jnp twin.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        from repro.kernels.spoga_gemm_dequant import spoga_gemm_dequant
+
+        return spoga_gemm_dequant(x, w, x_scale, w_scale,
+                                  interpret=interpret or not _on_tpu())
+    acc = _spoga.spoga_matmul(x, w)
+    return acc.astype(jnp.float32) * x_scale * w_scale

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (exact int32 arithmetic)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_int8_gemm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Ground-truth INT8 GEMM with int32 accumulation.
+
+    Every bit-sliced strategy (SPOGA fused, DEAS materialized) must equal
+    this exactly: bit-slicing is an identity in integer arithmetic.
+    """
+    return jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def ref_spoga_gemm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Algebraic twin of the fused kernel (nibble slices + radix combine)."""
+    xm = jnp.right_shift(x, 4)
+    xl = jnp.bitwise_and(x, 15)
+    wm = jnp.right_shift(w, 4)
+    wl = jnp.bitwise_and(w, 15)
+    d = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return (d(xm, wm) << 8) + ((d(xm, wl) + d(xl, wm)) << 4) + d(xl, wl)
+
+
+def ref_spoga_gemm_dequant(x, w, x_scale, w_scale):
+    """W8A8 with dequantizing epilogue: (x @ w) * x_scale * w_scale (f32)."""
+    acc = ref_int8_gemm(x, w)
+    return acc.astype(jnp.float32) * x_scale * w_scale

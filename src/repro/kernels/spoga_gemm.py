@@ -1,0 +1,118 @@
+"""SPOGA fused bit-sliced INT8 GEMM — Pallas TPU kernel.
+
+TPU-native adaptation of the SPOGA DPU (paper Fig. 3):
+
+* an (bm x bk) x (bk x bn) tile pair plays the role of a bank of OAMEs:
+  both int8 tiles are nibble-sliced *in VMEM* and the four INT4 partial
+  products are computed back-to-back on the MXU
+  (``dot_general(..., preferred_element_type=int32)``);
+* the radix-position weighting happens **inside the accumulator update**
+  (``<< 8``, ``<< 4``, ``<< 0``) — the in-transduction capacitor trick —
+  so no per-slice intermediate matrix ever exists outside VMEM;
+* the K-grid loop accumulating into the VMEM ``acc_ref`` scratch is the
+  homodyne charge accumulation over up-to-249 OAMEs;
+* exactly one output write per (bm x bn) tile = the single ADC per dot
+  product.
+
+Tile defaults are MXU-aligned (multiples of 128 on the lane dim) and sized
+so the working set (x, w tiles int8 + int32 accumulator + 4 partial tiles)
+stays well under ~16 MB of VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+RADIX_BITS = 4
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_K = 512
+
+
+def _slice_tc(t):
+    # Two's-complement nibble slicing, elementwise on the VMEM tile (VPU).
+    msn = jnp.right_shift(t, RADIX_BITS)      # signed high nibble in [-8, 7]
+    lsn = jnp.bitwise_and(t, (1 << RADIX_BITS) - 1)  # unsigned low nibble
+    return msn, lsn
+
+
+def _dot_i32(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def spoga_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k_tiles: int):
+    """One grid step: slice tiles, 4 MXU partials, fused radix accumulate."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # (bm, bk) int8
+    w = w_ref[...]  # (bk, bn) int8
+    xm, xl = _slice_tc(x)
+    wm, wl = _slice_tc(w)
+
+    # Four "wavelengths". The 16^1 cross terms share one radix lane.
+    mm = _dot_i32(xm, wm)
+    cross = _dot_i32(xm, wl) + _dot_i32(xl, wm)
+    ll = _dot_i32(xl, wl)
+
+    # PWAB: positional weighting fused into the charge accumulation.
+    acc_ref[...] += (mm << (2 * RADIX_BITS)) + (cross << RADIX_BITS) + ll
+
+    @pl.when(pl.program_id(2) == n_k_tiles - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]  # the single "ADC" per output tile
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def spoga_gemm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(M, K) int8 @ (K, N) int8 -> (M, N) int32, SPOGA fused dataflow."""
+    if x.dtype != jnp.int8 or w.dtype != jnp.int8:
+        raise TypeError(f"spoga_gemm expects int8 operands, got {x.dtype}, {w.dtype}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    # Pad to tile multiples; zero padding is exact for integer GEMM.
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+    gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(spoga_gemm_kernel, n_k_tiles=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n] if (pm or pn) else out

@@ -1,0 +1,279 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes with ShapeDtypeStruct inputs (no allocation), and record
+memory / cost / collective statistics for the roofline analysis.
+
+MUST be invoked as its own process (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above runs before any other import so the host platform
+exposes 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import SHAPES, cells, get_config          # noqa: E402
+from repro.configs.base import TrainConfig                   # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.steps import lower_cell                    # noqa: E402
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _bytes_of_shape(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-buffer bytes per collective kind from (S)HLO text."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            marker = f" {kind}("
+            alt = f" {kind}-start("
+            if marker in line or alt in line:
+                cut = line.split(marker)[0] if marker in line else line.split(alt)[0]
+                nbytes = sum(
+                    _bytes_of_shape(dt, dims) for dt, dims in _SHAPE_RE.findall(cut)
+                )
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += nbytes
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items() if k in _COLLECTIVES)
+    return stats
+
+
+def calibrated_costs(cfg, shape, mesh, tcfg) -> dict | None:
+    """Depth-correct flops/bytes/collectives via shallow *unrolled* lowers.
+
+    XLA's HloCostAnalysis counts a while-loop body once, so the scanned
+    layer stack under-reports by ~n_layers.  Lowering the same cell at 1
+    and 2 pattern-periods with ``scan_unroll=True`` (no while loops) gives
+    an exact per-period cost; extrapolating to the full depth recovers the
+    true per-step totals.  Memory analysis still comes from the full-depth
+    scan compile (that is the deployable program).
+    """
+    from repro.models.transformer import layer_layout
+
+    lead, n_periods, tail = layer_layout(cfg)
+    period = cfg.pattern_period
+    if n_periods < 2:
+        return None
+
+    def costs_at(k: int):
+        kw = dict(n_layers=lead + k * period, scan_unroll=True)
+        if cfg.is_encoder_decoder:
+            kw["n_encoder_layers"] = max(1, k * cfg.n_encoder_layers // n_periods)
+        cfg_k = cfg.with_(**kw)
+        compiled = lower_cell(cfg_k, shape, mesh, tcfg).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_stats(compiled.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)), coll)
+
+    f1, b1, c1 = costs_at(1)
+    f2, b2, c2 = costs_at(2)
+    scale = (n_periods - 1) + len(tail) / period
+
+    def extrap(v1, v2):
+        # clamp: fusion differences between the two shallow compiles can
+        # make v2 < v1 on fixed-cost-dominated cells; the linear
+        # extrapolation must never fall below the single-period compile.
+        return max(v1 + (v2 - v1) * scale, v1, 0.0)
+
+    coll = {}
+    for kind in _COLLECTIVES:
+        coll[kind] = {
+            "count": int(round(extrap(c1[kind]["count"], c2[kind]["count"]))),
+            "bytes": int(round(extrap(c1[kind]["bytes"], c2[kind]["bytes"]))),
+        }
+    coll["total_bytes"] = sum(v["bytes"] for k, v in coll.items() if k in _COLLECTIVES)
+    return {
+        "flops_per_device": extrap(f1, f2),
+        "bytes_accessed_per_device": extrap(b1, b2),
+        "collectives": coll,
+        "periods": n_periods,
+    }
+
+
+# Gradient-accumulation defaults for train_4k so activations fit 16 GiB
+# v5e HBM (chosen from the measured buffer tables, EXPERIMENTS.md Dry-run).
+TRAIN_MICROBATCHES = {
+    "mistral-large-123b": 8,
+    "granite-moe-3b-a800m": 4,
+    "deepseek-moe-16b": 4,
+    "recurrentgemma-9b": 2,
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, quant_mode: str,
+             zero1: bool = True, fsdp: bool = True, microbatches: int = 1,
+             calibrate: bool = True, remat_policy: str = "nothing",
+             kv_cache_dtype: str = "bf16", grad_reduce_dtype: str = "f32",
+             extra_tags: dict | None = None) -> dict:
+    cfg = get_config(arch).with_(quant_mode=quant_mode,
+                                 remat_policy=remat_policy,
+                                 kv_cache_dtype=kv_cache_dtype)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tcfg = TrainConfig(zero1=zero1, fsdp=fsdp, microbatches=microbatches,
+                       grad_reduce_dtype=grad_reduce_dtype)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "quant_mode": quant_mode,
+        "zero1": zero1,
+        "fsdp": fsdp,
+        "microbatches": microbatches,
+        "remat_policy": remat_policy,
+        "kv_cache_dtype": kv_cache_dtype,
+        "grad_reduce_dtype": grad_reduce_dtype,
+        **(extra_tags or {}),
+    }
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, tcfg)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+        rec["hbm_per_device_gib"] = round(
+            (mem.argument_size_in_bytes + mem.output_size_in_bytes
+             + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3
+        )
+    cost = compiled.cost_analysis() or {}
+    rec["cost"] = {
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+    }
+    rec["collectives"] = collective_stats(compiled.as_text())
+    if calibrate:
+        try:
+            cal = calibrated_costs(cfg, shape, mesh, tcfg)
+            if cal is not None:
+                rec["cost_cal"] = {
+                    "flops_per_device": cal["flops_per_device"],
+                    "bytes_accessed_per_device": cal["bytes_accessed_per_device"],
+                }
+                rec["collectives_cal"] = cal["collectives"]
+        except Exception as e:  # noqa: BLE001 — calibration is best-effort
+            rec["cal_error"] = f"{type(e).__name__}: {e}"
+    rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the unrolled cost-calibration lowers")
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = [(a, s) for a, s, skipped in cells() if not skipped]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        todo = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.out and args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"], r["quant_mode"]))
+                except json.JSONDecodeError:
+                    pass
+
+    n_fail = 0
+    for arch, shape_name in todo:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            key = (arch, shape_name, mesh_name, args.quant_mode)
+            if key in done:
+                print(f"[skip] {key}")
+                continue
+            print(f"[dryrun] {arch} x {shape_name} on {mesh_name} ({args.quant_mode})",
+                  flush=True)
+            try:
+                mb = args.microbatches
+                if mb == 1 and shape_name == "train_4k":
+                    mb = TRAIN_MICROBATCHES.get(arch, 1)
+                rec = run_cell(arch, shape_name, mp, args.quant_mode,
+                               zero1=not args.no_zero1, fsdp=not args.no_fsdp,
+                               microbatches=mb,
+                               calibrate=not args.no_calibrate)
+                print(f"  ok: hbm/dev={rec.get('hbm_per_device_gib')}GiB "
+                      f"flops/dev={rec['cost']['flops_per_device']:.3e} "
+                      f"coll={rec['collectives']['total_bytes']:.3e}B "
+                      f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+                rec = {
+                    "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "quant_mode": args.quant_mode, "ok": False,
+                    "error": f"{type(e).__name__}: {e}",
+                }
+                n_fail += 1
+                print(f"  FAIL: {rec['error']}", flush=True)
+                traceback.print_exc()
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    print(f"dry-run complete, failures: {n_fail}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

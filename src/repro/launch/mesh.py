@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Single pod: 16 x 16 = 256 chips -> ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips -> ("pod", "data", "model"); the
+"pod" axis carries pure data parallelism (gradient all-reduce over DCN),
+"model" stays inside a pod's ICI domain — the standard multi-pod layout.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,197 @@
+"""Step builders shared by the dry-run, trainer and server.
+
+For a (arch-config, shape-cell, mesh) triple this module produces:
+
+* the jittable step function (train_step / prefill_step / serve_step),
+* ShapeDtypeStruct trees for every input (``input_specs`` — no allocation),
+* in/out NamedShardings,
+
+so ``jax.jit(step, in_shardings, out_shardings).lower(**specs).compile()``
+is the single code path everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.data.pipeline import batch_specs
+from repro.models import model as model_lib
+from repro.optim.optimizers import adamw_init, adamw_update
+from repro.runtime import sharding as shard_lib
+
+# enc-dec decode cells cross-attend to a fixed-length encoded source
+CROSS_LEN_FOR_DECODE = 4_096
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, grad_specs=None):
+    """fwd+bwd (+ optional gradient accumulation over microbatches) + AdamW.
+
+    Microbatching (``tcfg.microbatches > 1``) scans fwd+bwd over k slices
+    of the batch, accumulating fp32 grads — the activation working set
+    shrinks by k while arithmetic is unchanged (mean of per-microbatch
+    grads == full-batch grad for a mean loss over equal slices).
+
+    ``grad_specs``: PartitionSpec tree matching params; constraining each
+    microbatch gradient to the FSDP spec lets the SPMD partitioner emit
+    reduce-scatter instead of (all-reduce + slice) — without it, full-size
+    fp32 gradient buffers dominate HBM at 100B scale.
+    """
+
+    def grads_of(params, batch):
+        loss, g = jax.value_and_grad(model_lib.lm_loss)(params, cfg, batch)
+        if tcfg.grad_reduce_dtype == "bf16":
+            # halve the DP reduce-scatter payload; AdamW's f32 master
+            # update absorbs the rounding (same trick as mixed precision)
+            g = jax.tree_util.tree_map(lambda gg: gg.astype(jnp.bfloat16), g)
+        if grad_specs is not None:
+            g = jax.tree_util.tree_map(
+                lambda gg, sp: jax.lax.with_sharding_constraint(gg, sp), g, grad_specs
+            )
+        return loss, g
+
+    def train_step(params, opt_state, batch):
+        k = tcfg.microbatches
+        if k > 1:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+            )
+
+            def constrain(tree):
+                if grad_specs is None:
+                    return tree
+                return jax.tree_util.tree_map(
+                    lambda t, sp: jax.lax.with_sharding_constraint(t, sp),
+                    tree, grad_specs)
+
+            def accum(acc, mb):
+                loss_sum, g_acc = acc
+                loss, g = grads_of(params, mb)
+                # constrain the f32 accumulator to the FSDP grad specs:
+                # unconstrained, XLA keeps it replicated over "data" and
+                # all-gathers every microbatch's sharded gradient in f32 —
+                # measured 91 GiB/device of weight-shaped all-gathers per
+                # layer-step at 123B (EXPERIMENTS.md Perf A-log).
+                g_acc = constrain(jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                ))
+                return (loss_sum + loss, g_acc), None
+
+            zeros = constrain(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ))
+            # unroll with the rest of the scans during cost calibration —
+            # HloCostAnalysis counts a while body once (see dryrun.py)
+            (loss_sum, grads), _ = jax.lax.scan(accum, (jnp.zeros(()), zeros), micro,
+                                                unroll=cfg.scan_unroll)
+            loss = loss_sum / k
+            grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, tcfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, cfg, batch, cache_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache):
+        return model_lib.decode_step(params, cfg, tokens, cache)
+
+    return serve_step
+
+
+def _cache_len_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.sliding_window is not None and not any(
+        k in ("attn", "moe") for k in cfg.block_pattern
+    ):
+        # hybrid/local-only stacks never need more than the window
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+def cell_program(cfg: ModelConfig, shape: ShapeConfig, mesh, tcfg: TrainConfig | None = None):
+    """-> (fn, kwargs_specs: dict[str, ShapeDtypeStruct tree],
+          in_shardings: dict, out_shardings, donate_argnames)"""
+    tcfg = tcfg or TrainConfig()
+    p_shapes = model_lib.param_shapes(cfg)
+    p_specs = shard_lib.param_specs(p_shapes, mesh, cfg, fsdp=tcfg.fsdp)
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg, tcfg, grad_specs=p_specs)
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        opt_specs = shard_lib.opt_state_specs(opt_shapes, p_specs, mesh, tcfg.zero1)
+        b_shapes = batch_specs(cfg, shape)
+        b_specs = shard_lib.batch_specs_tree(b_shapes, mesh)
+        kwargs = {"params": p_shapes, "opt_state": opt_shapes, "batch": b_shapes}
+        in_sh = {
+            "params": shard_lib.named(p_specs, mesh),
+            "opt_state": shard_lib.named(opt_specs, mesh),
+            "batch": shard_lib.named(b_specs, mesh),
+        }
+        out_sh = (
+            shard_lib.named(p_specs, mesh),
+            shard_lib.named(opt_specs, mesh),
+            None,
+        )
+        return fn, kwargs, in_sh, out_sh, ("params", "opt_state")
+
+    if shape.kind == "prefill":
+        cache_len = _cache_len_for(cfg, shape)
+        fn = make_prefill_step(cfg, cache_len)
+        b_shapes = batch_specs(cfg, shape)
+        b_specs = shard_lib.batch_specs_tree(b_shapes, mesh)
+        kwargs = {"params": p_shapes, "batch": b_shapes}
+        in_sh = {
+            "params": shard_lib.named(p_specs, mesh),
+            "batch": shard_lib.named(b_specs, mesh),
+        }
+        cross = b_shapes["src_embeds"].shape[1] if cfg.is_encoder_decoder else 0
+        c_shapes = model_lib.cache_shapes(cfg, shape.global_batch, cache_len, cross)
+        c_specs = shard_lib.cache_specs(c_shapes, mesh)
+        out_sh = (None, shard_lib.named(c_specs, mesh))
+        return fn, kwargs, in_sh, out_sh, ()
+
+    # decode: one token against a cache of shape.seq_len
+    cache_len = _cache_len_for(cfg, shape)
+    fn = make_serve_step(cfg)
+    cross = CROSS_LEN_FOR_DECODE if cfg.is_encoder_decoder else 0
+    c_shapes = model_lib.cache_shapes(cfg, shape.global_batch, cache_len, cross)
+    c_specs = shard_lib.cache_specs(c_shapes, mesh)
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    kwargs = {"params": p_shapes, "tokens": tok, "cache": c_shapes}
+    in_sh = {
+        "params": shard_lib.named(p_specs, mesh),
+        "tokens": shard_lib.named(shard_lib.batch_pspec(tok.shape, mesh), mesh),
+        "cache": shard_lib.named(c_specs, mesh),
+    }
+    out_sh = (None, shard_lib.named(c_specs, mesh))
+    return fn, kwargs, in_sh, out_sh, ("cache",)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, tcfg: TrainConfig | None = None):
+    """Lower (no compile) one cell. Returns the jax ``Lowered`` object."""
+    fn, kwargs, in_sh, out_sh, donate = cell_program(cfg, shape, mesh, tcfg)
+    names = list(kwargs.keys())
+    in_shardings = tuple(in_sh[n] for n in names)
+    donate_argnums = tuple(i for i, n in enumerate(names) if n in donate)
+    jfn = jax.jit(
+        fn,
+        in_shardings=in_shardings,
+        out_shardings=out_sh,
+        donate_argnums=donate_argnums,
+    )
+    with mesh:
+        return jfn.lower(*[kwargs[n] for n in names])

@@ -1,0 +1,21 @@
+from repro.models.model import (
+    init_params,
+    param_shapes,
+    forward,
+    lm_loss,
+    prefill,
+    decode_step,
+    init_cache,
+    cache_shapes,
+)
+
+__all__ = [
+    "init_params",
+    "param_shapes",
+    "forward",
+    "lm_loss",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "cache_shapes",
+]

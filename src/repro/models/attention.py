@@ -1,0 +1,346 @@
+"""Attention variants: GQA/MQA/MHA, sliding-window, MLA, cross-attention.
+
+Long sequences use a query-chunked exact attention (``lax.scan`` over query
+blocks, fp32 softmax) so no S x S score matrix is ever materialized — the
+XLA-friendly equivalent of a flash kernel, used by both the CPU dry-run and
+as the reference for any future fused TPU attention kernel.  Local
+(sliding-window) blocks additionally slice only the KV band each chunk
+needs, making them O(S * window).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, init_linear, linear, rmsnorm
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(s: int) -> int:
+    for c in (512, 256, 128, 64):
+        if s % c == 0 and s > c:
+            return c
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, d, cfg.n_heads * hd),
+        "wk": init_linear(k2, d, cfg.n_kv_heads * hd),
+        "wv": init_linear(k3, d, cfg.n_kv_heads * hd),
+        "wo": init_linear(k4, cfg.n_heads * hd, d),
+    }
+
+
+def _attend_chunk(q, k, v, q_offset, kv_offset, causal, window):
+    """q: (B, C, G, Hkv, D); k/v: (B, S, Hkv, D). Exact fp32 softmax."""
+    d = q.shape[-1]
+    # bf16 operands, f32 accumulation: never materializes an f32 copy of
+    # the (B, S, H, D) keys (at 32k-decode that copy alone is GiBs/device).
+    scores = jnp.einsum("bcghd,bshd->bcghs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (d ** -0.5)
+    qpos = q_offset + jnp.arange(q.shape[1])[:, None]
+    kpos = kv_offset + jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bcghs,bshd->bcghd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def multihead_attention(q, k, v, *, causal=True, window=None):
+    """q: (B, Sq, Hq, D), k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    Query-chunked, memory O(C x Skv); local attention slices the KV band.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA: qk_dim != v_head_dim)
+    g = hq // hkv
+    qg = q.reshape(b, sq, g, hkv, d)
+    chunk = _pick_chunk(sq)
+    if chunk == sq:
+        out = _attend_chunk(qg, k, v, 0, 0, causal, window)
+        return out.reshape(b, sq, hq, dv)
+
+    n_chunks = sq // chunk
+    qs = qg.reshape(b, n_chunks, chunk, g, hkv, d).transpose(1, 0, 2, 3, 4, 5)
+
+    # NB: chunk bodies are rematerialized — without this, the scan's backward
+    # saves every chunk's softmax probs, i.e. the full S x S score matrix.
+    if window is not None and sq == skv:
+        # Local attention: each chunk only needs KV in [start-window, start+chunk).
+        band = window + chunk
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def body(_, args):
+            qc, idx = args
+            start = jnp.maximum(idx * chunk - window, 0)
+            # clamp so the static-size band stays in bounds
+            start = jnp.minimum(start, skv - band) if skv >= band else 0
+            kc = jax.lax.dynamic_slice_in_dim(k, start, min(band, skv), axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, min(band, skv), axis=1)
+            out = _attend_chunk(qc, kc, vc, idx * chunk, start, causal, window)
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n_chunks)))
+    else:
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def body(_, args):
+            qc, idx = args
+            out = _attend_chunk(qc, k, v, idx * chunk, 0, causal, window)
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n_chunks)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, dv)
+    return out
+
+
+def _constrain_heads(t):
+    """Pin (B, S, H, D) to batch-over-DP x heads-over-"model" (Megatron TP).
+
+    Without the explicit constraint the partitioner reshards the chunked
+    attention's 6-D reshapes through an 'involuntary full
+    rematerialization' (replicate-then-repartition) path."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m.empty or t.ndim != 4:
+            return t
+        dp = tuple(a for a in m.axis_names if a in ("pod", "data"))
+        dp_size = 1
+        for a in dp:
+            dp_size *= m.shape[a]
+        model = m.shape.get("model", 1)
+        first = dp if (dp and t.shape[0] % dp_size == 0) else None
+        heads = "model" if t.shape[2] % model == 0 else None
+        return jax.lax.with_sharding_constraint(t, P(first, None, heads, None))
+    except Exception:  # pragma: no cover
+        return t
+
+
+def attention_block(x, p, cfg: ModelConfig, positions, *, causal=True, window=None):
+    """Full self-attention over x: projections + RoPE + attend + output."""
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm = cfg.quant_mode
+    q = linear(x, p["wq"], qm).reshape(b, s, hq, hd)
+    k = linear(x, p["wk"], qm).reshape(b, s, hkv, hd)
+    v = linear(x, p["wv"], qm).reshape(b, s, hkv, hd)
+    q = _constrain_heads(apply_rope(q, positions, cfg.rope_theta))
+    k = _constrain_heads(apply_rope(k, positions, cfg.rope_theta))
+    v = _constrain_heads(v)
+    out = multihead_attention(q, k, v, causal=causal, window=window)
+    return linear(out.reshape(b, s, hq * hd), p["wo"], qm), (k, v)
+
+
+def quantize_kv(t):
+    """(B, S, H, D) -> int8 payload + per-(b, s, h) f32 scale (SPOGA-style
+    byte-size cache storage; halves decode's dominant HBM stream)."""
+    tf = t.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(tf), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(tf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
+    """One-token decode. x_t: (B, 1, d); cache {"k","v"[,"k_scale","v_scale"]}
+    payloads (B, Smax, Hkv, D); pos (B,). Returns (out, new cache dict)."""
+    b = x_t.shape[0]
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm = cfg.quant_mode
+    int8_cache = cfg.kv_cache_dtype == "int8"
+    q = linear(x_t, p["wq"], qm).reshape(b, 1, hq, hd)
+    k = linear(x_t, p["wk"], qm).reshape(b, 1, hkv, hd)
+    v = linear(x_t, p["wv"], qm).reshape(b, 1, hkv, hd)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+
+    k_cache, v_cache = cache["k"], cache["v"]
+    smax = k_cache.shape[1]
+    if window is not None and smax > window:
+        # Ring-buffer local cache: slot = pos % window over a window-sized cache
+        raise ValueError("local decode cache must be allocated with Smax == window")
+    slot = pos % smax if window is not None else pos
+
+    def upd(c, t, i):
+        return jax.vmap(
+            lambda cc, tt, ii: jax.lax.dynamic_update_slice_in_dim(cc, tt, ii, axis=0)
+        )(c, t, i)
+
+    new_cache = dict(cache)
+    if int8_cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache, v_cache = upd(k_cache, kq, slot), upd(v_cache, vq, slot)
+        k_scale = upd(cache["k_scale"], ks, slot)
+        v_scale = upd(cache["v_scale"], vs, slot)
+        new_cache.update(k_scale=k_scale, v_scale=v_scale)
+    else:
+        k_cache, v_cache = upd(k_cache, k, slot), upd(v_cache, v, slot)
+    new_cache.update(k=k_cache, v=v_cache)
+
+    g = hq // hkv
+    qg = q.reshape(b, 1, g, hkv, hd)
+    # int8 payload feeds the dot (fused dequant / MXU int8 path); the
+    # per-(pos, head) scale factors out of the D-contraction.
+    k_op = k_cache.astype(qg.dtype) if int8_cache else k_cache
+    scores = jnp.einsum("bcghd,bshd->bcghs", qg, k_op,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if int8_cache:
+        scores = scores * k_scale.transpose(0, 2, 1)[:, None, None, :, :]
+    kpos = jnp.arange(smax)[None, :]
+    if window is not None:
+        # Ring cache (smax == window): before the ring wraps only slots
+        # <= pos hold data; after wrapping every slot is within the window.
+        valid = jnp.where(pos[:, None] >= smax, jnp.ones_like(kpos, bool), kpos <= pos[:, None])
+    else:
+        valid = kpos <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if int8_cache:
+        probs = probs * v_scale.transpose(0, 2, 1)[:, None, None, :, :]
+        v_op = v_cache.astype(qg.dtype)
+    else:
+        v_op = v_cache
+    out = jnp.einsum("bcghs,bshd->bcghd", probs.astype(v_op.dtype), v_op,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x_t.dtype).reshape(b, 1, hq * hd)
+    return linear(out, p["wo"], qm), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ModelConfig):
+    return init_attention(key, cfg)
+
+
+def cross_attention_block(x, enc_kv, p, cfg: ModelConfig):
+    """x: (B, St, d) decoder states; enc_kv: precomputed (k, v) from encoder."""
+    b, s, _ = x.shape
+    hd, hq = cfg.resolved_head_dim, cfg.n_heads
+    qm = cfg.quant_mode
+    q = linear(x, p["wq"], qm).reshape(b, s, hq, hd)
+    k, v = enc_kv
+    out = multihead_attention(q, k, v, causal=False, window=None)
+    return linear(out.reshape(b, s, hq * hd), p["wo"], qm)
+
+
+def encode_cross_kv(enc_out, p, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    qm = cfg.quant_mode
+    k = linear(enc_out, p["wk"], qm).reshape(b, s, hkv, hd)
+    v = linear(enc_out, p["wv"], qm).reshape(b, s, hkv, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": init_linear(ks[0], d, m.q_lora_rank),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "w_uq": init_linear(ks[1], m.q_lora_rank, h * qk_dim),
+        "w_dkv": init_linear(ks[2], d, m.kv_lora_rank),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "w_uk": init_linear(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim),
+        "w_uv": init_linear(ks[4], m.kv_lora_rank, h * m.v_head_dim),
+        "w_kr": init_linear(ks[5], d, m.qk_rope_head_dim),
+        "wo": init_linear(ks[6], h * m.v_head_dim, d),
+    }
+
+
+def _mla_qkv(x, p, cfg, positions):
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    qm = cfg.quant_mode
+    cq = rmsnorm(linear(x, p["w_dq"], qm), p["q_norm"], cfg.norm_eps)
+    q = linear(cq, p["w_uq"], qm).reshape(b, s, h, -1)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = rmsnorm(linear(x, p["w_dkv"], qm), p["kv_norm"], cfg.norm_eps)
+    k_rope = linear(x, p["w_kr"], qm).reshape(b, s, 1, m.qk_rope_head_dim)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_block(x, p, cfg: ModelConfig, positions):
+    """Training / prefill MLA (non-absorbed: reconstruct K, V per token)."""
+    m, h = cfg.mla, cfg.n_heads
+    b, s, _ = x.shape
+    qm = cfg.quant_mode
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(x, p, cfg, positions)
+    k_nope = linear(c_kv, p["w_uk"], qm).reshape(b, s, h, m.qk_nope_head_dim)
+    v = linear(c_kv, p["w_uv"], qm).reshape(b, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    out = multihead_attention(q, k, v, causal=True)
+    out = linear(out.reshape(b, s, h * m.v_head_dim), p["wo"], qm)
+    return out, (c_kv, k_rope.reshape(b, s, m.qk_rope_head_dim))
+
+
+def mla_decode(x_t, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
+    """Absorbed-matmul MLA decode: attention runs in the latent space, the
+    cache holds only (c_kv, k_rope) — the MLA memory saving."""
+    m, h = cfg.mla, cfg.n_heads
+    b = x_t.shape[0]
+    qm = cfg.quant_mode
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(x_t, p, cfg, pos[:, None])
+
+    ckv_cache = jax.vmap(
+        lambda c, t, i: jax.lax.dynamic_update_slice_in_dim(c, t, i, axis=0)
+    )(ckv_cache, c_kv_t, pos)
+    krope_cache = jax.vmap(
+        lambda c, t, i: jax.lax.dynamic_update_slice_in_dim(c, t, i, axis=0)
+    )(krope_cache, k_rope_t.reshape(b, 1, m.qk_rope_head_dim), pos)
+
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum(
+        "bchd,lhd->bchl", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
+    )  # (B,1,H,latent)
+    scores = jnp.einsum("bchl,bsl->bchs", q_lat.astype(ckv_cache.dtype), ckv_cache,
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bchr,bsr->bchs", q_rope.astype(krope_cache.dtype), krope_cache,
+                         preferred_element_type=jnp.float32)
+    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    smax = ckv_cache.shape[1]
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bchs,bsl->bchl", probs.astype(ckv_cache.dtype), ckv_cache,
+                         preferred_element_type=jnp.float32)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bchl,lhv->bchv", out_lat, w_uv.astype(jnp.float32))
+    out = out.astype(x_t.dtype).reshape(b, 1, h * m.v_head_dim)
+    return linear(out, p["wo"], qm), (ckv_cache, krope_cache)

@@ -1,0 +1,219 @@
+"""Base layers: norms, embeddings, MLPs and the SPOGA quantized linear.
+
+Functional style: ``init_*`` build param dicts, ``apply``-style functions
+are pure and traceable (the dry-run lowers them with ShapeDtypeStructs).
+Compute dtype is bf16 (params stored fp32, cast on use); integer modes run
+the SPOGA dataflows from :mod:`repro.core.spoga` with int32 accumulation
+(the paper's >=16-bit accumulation requirement) and dequantizing epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spoga as spoga_ops
+from repro.quant.qtensor import INT8_MAX
+
+COMPUTE_DTYPE = jnp.bfloat16
+# Weights are STORED bf16 (fp32 master copies live in the optimizer state):
+# FSDP all-gathers and activation-matmuls move half the bytes, and the fp32
+# path stays exact inside AdamW.  Norm scales / router / Λ stay fp32.
+PARAM_DTYPE = jnp.bfloat16
+
+
+def truncated_normal_init(key, shape, scale=0.02, dtype=PARAM_DTYPE):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear: W8A8 dynamic quantization, SPOGA dataflow forward,
+# straight-through backward (QAT-compatible).
+# ---------------------------------------------------------------------------
+
+def _dynamic_quant(x, axis):
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_forward(x, w, mode):
+    """x (..., K) fp, w (K, N) fp -> (..., N) fp via the int8 dataflow."""
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    xq, xs = _dynamic_quant(xf, axis=-1)
+    wq, ws = _dynamic_quant(wf, axis=0)
+    lead = xq.shape[:-1]
+    acc = {
+        "int8_spoga": spoga_ops.spoga_matmul,
+        "int8_deas": spoga_ops.deas_matmul,
+        "int8_direct": spoga_ops.direct_matmul,
+    }[mode](xq.reshape(-1, xq.shape[-1]), wq)
+    acc = acc.reshape(*lead, -1)
+    return (acc.astype(jnp.float32) * xs * ws).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _qmatmul_ste(x, w, mode: str):
+    return _int8_forward(x, w, mode)
+
+
+def _qmatmul_fwd(x, w, mode):
+    return _int8_forward(x, w, mode), (x, w)
+
+
+def _qmatmul_bwd(mode, res, g):
+    # Straight-through: gradients as if the matmul were full-precision.
+    x, w = res
+    gf = g.astype(jnp.float32)
+    dx = (gf @ w.astype(jnp.float32).T).astype(x.dtype)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    g2 = gf.reshape(-1, gf.shape[-1])
+    dw = (x2.T @ g2).astype(w.dtype)
+    return dx, dw
+
+
+_qmatmul_ste.defvjp(_qmatmul_fwd, _qmatmul_bwd, symbolic_zeros=False)
+
+
+def linear(x, w, quant_mode: str = "bf16"):
+    """The single matmul entry point for every model layer."""
+    if quant_mode == "bf16":
+        return jnp.einsum(
+            "...k,kn->...n", x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE)
+        )
+    return _qmatmul_ste(x.astype(COMPUTE_DTYPE), w, quant_mode)
+
+
+def init_linear(key, d_in, d_out, scale=0.02):
+    return truncated_normal_init(key, (d_in, d_out), scale)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x, gamma, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * gamma).astype(x.dtype)
+
+
+def init_layernorm(d):
+    return {"gamma": jnp.ones((d,), jnp.float32), "beta": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(x, p, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["gamma"] + p["beta"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def init_glu_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(k1, d_model, d_ff),
+        "w_up": init_linear(k2, d_model, d_ff),
+        "w_down": init_linear(k3, d_ff, d_model),
+    }
+
+
+def glu_mlp(x, p, act="silu", quant_mode="bf16"):
+    g = _act(act)(linear(x, p["w_gate"], quant_mode))
+    u = linear(x, p["w_up"], quant_mode)
+    return linear(g * u, p["w_down"], quant_mode)
+
+
+def init_mlp(key, d_model, d_ff):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": init_linear(k1, d_model, d_ff), "w_out": init_linear(k2, d_ff, d_model)}
+
+
+def mlp(x, p, act="gelu", quant_mode="bf16"):
+    return linear(_act(act)(linear(x, p["w_in"], quant_mode)), p["w_out"], quant_mode)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d_model):
+    return truncated_normal_init(
+        key, (vocab, d_model), scale=1.0 / (d_model ** 0.5), dtype=PARAM_DTYPE
+    )
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def unembed(x, table, quant_mode="bf16"):
+    # Output head kept in bf16 even in quantized mode: the paper's INT8
+    # accumulation rounds to 8-bit *between* layers; logits need full range.
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(COMPUTE_DTYPE), table.astype(COMPUTE_DTYPE)
+    ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x: (B, S, H, D) ; positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise 1D conv (Griffin / xLSTM temporal conv)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key, d, width):
+    return truncated_normal_init(key, (width, d), scale=0.1)
+
+
+def causal_conv1d(x, w):
+    """x: (B, S, D), w: (W, D) depthwise causal convolution."""
+    width = w.shape[0]
+    xf = x.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xf)
+    for i in range(width):  # width is tiny (4); unrolled adds, fusable
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out.astype(x.dtype)
+
+
+def conv1d_decode(x_t, conv_state, w):
+    """Single-step conv: x_t (B, D), conv_state (B, W-1, D) -> (y_t, new_state)."""
+    width = w.shape[0]
+    xf = x_t.astype(jnp.float32)
+    hist = jnp.concatenate([conv_state, xf[:, None, :]], axis=1)  # (B, W, D)
+    y = jnp.einsum("bwd,wd->bd", hist, w)
+    return y.astype(x_t.dtype), hist[:, 1:, :]

@@ -1,0 +1,295 @@
+"""Stack assembly: blocks, scan-over-periods, decoder-only / enc-dec stacks.
+
+The layer pattern (cfg.block_pattern) is cycled through the depth.  Layers
+are grouped into ``n_periods`` repetitions of the pattern; parameters of
+slot *s* are stacked along a leading period axis so one ``lax.scan``
+(optionally rematerialized) executes the whole stack with O(1) compile-time
+in depth.  Remainder layers ("tail", e.g. RecurrentGemma's 38 = 12*3 + 2)
+and leading dense-FFN layers (DeepSeekMoE's first layer) run unrolled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models.layers import glu_mlp, init_glu_mlp, init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def effective_kind(kind: str, cfg: ModelConfig) -> str:
+    if kind == "attn" and cfg.use_mla:
+        return "mla"
+    return kind
+
+
+def init_block(key, kind: str, cfg: ModelConfig):
+    kind = effective_kind(kind, cfg)
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": init_rmsnorm(d)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = attn.init_attention(k1, cfg)
+        p["norm2"] = init_rmsnorm(d)
+        p["mlp"] = init_glu_mlp(k2, d, cfg.d_ff)
+    elif kind == "mla":
+        p["attn"] = attn.init_mla(k1, cfg)
+        p["norm2"] = init_rmsnorm(d)
+        p["mlp"] = init_glu_mlp(k2, d, cfg.d_ff)
+    elif kind == "moe":
+        p["attn"] = attn.init_attention(k1, cfg)
+        p["norm2"] = init_rmsnorm(d)
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    elif kind == "dense_ffn_layer":  # MoE stack's leading dense layer(s)
+        p["attn"] = attn.init_attention(k1, cfg)
+        p["norm2"] = init_rmsnorm(d)
+        p["mlp"] = init_glu_mlp(k2, d, cfg.moe.d_ff_dense or cfg.d_ff)
+    elif kind == "rglru":
+        p["cell"] = rec.init_rglru(k1, cfg)
+        p["norm2"] = init_rmsnorm(d)
+        p["mlp"] = init_glu_mlp(k2, d, cfg.d_ff)
+    elif kind == "mlstm":
+        p["cell"] = rec.init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        p["cell"] = rec.init_slstm(k1, cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def apply_block(x, p, kind: str, cfg: ModelConfig, positions, *, causal=True):
+    """Full-sequence (train/prefill) application. Returns (x, aux, cache_out).
+
+    Megatron-SP boundaries: activations live seq-sharded over "model"
+    between layers; ``sp_enter`` all-gathers the sequence entering each
+    TP region (attention / MLP) and ``sp_exit`` reduce-scatters the
+    row-parallel output back — otherwise the SPMD partitioner prefers to
+    all-gather the much larger TP weight shards (see runtime/sharding.py).
+    """
+    from repro.runtime.sharding import sp_enter, sp_exit
+
+    kind = effective_kind(kind, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    cache_out = None
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local_attn", "moe", "dense_ffn_layer"):
+        window = cfg.sliding_window if kind == "local_attn" else None
+        a, kv = attn.attention_block(sp_enter(h), p["attn"], cfg, positions,
+                                     causal=causal, window=window)
+        x = x + sp_exit(a)
+        cache_out = kv
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            f, aux = moe_mod.moe_ffn(h2, p["moe"], cfg)
+        else:
+            f = sp_exit(glu_mlp(sp_enter(h2), p["mlp"], cfg.act, cfg.quant_mode))
+        x = x + f
+    elif kind == "mla":
+        a, ckv = attn.mla_block(sp_enter(h), p["attn"], cfg, positions)
+        x = x + sp_exit(a)
+        cache_out = ckv
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + sp_exit(glu_mlp(sp_enter(h2), p["mlp"], cfg.act, cfg.quant_mode))
+    elif kind == "rglru":
+        a, state = rec.rglru_block(h, p["cell"], cfg, None)
+        x = x + a
+        cache_out = state
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+    elif kind == "mlstm":
+        a, state = rec.mlstm_block(h, p["cell"], cfg, None)
+        x = x + a
+        cache_out = state
+    elif kind == "slstm":
+        a, state = rec.slstm_block(h, p["cell"], cfg, None)
+        x = x + a
+        cache_out = state
+    else:
+        raise ValueError(kind)
+    return x, aux, cache_out
+
+
+def apply_block_prefill(x, p, kind: str, cfg: ModelConfig, positions, cache_template):
+    """Like apply_block but materializes a decode cache into cache_template.
+
+    Recurrent kinds pass the template through the cell so the returned
+    state tree has identical structure/dtypes; attention kinds write the
+    fresh K/V (or MLA latents) into the template buffer (ring-rolled for
+    local attention so decode's ``pos % window`` slotting lines up).
+    """
+    kind_e = effective_kind(kind, cfg)
+    if kind_e in ("rglru", "mlstm", "slstm"):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        cell = {"rglru": rec.rglru_block, "mlstm": rec.mlstm_block, "slstm": rec.slstm_block}[kind_e]
+        a, state = cell(h, p["cell"], cfg, cache_template)
+        x = x + a
+        if kind_e == "rglru":
+            h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+            x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+        state = jax.tree_util.tree_map(
+            lambda tpl, v: v.astype(tpl.dtype), cache_template, state
+        )
+        return x, jnp.zeros((), jnp.float32), state
+
+    x, aux, fresh = apply_block(x, p, kind, cfg, positions)
+    cache = cache_template
+    s = x.shape[1]
+    if kind_e in ("attn", "local_attn", "mla", "moe", "dense_ffn_layer"):
+        if kind_e == "mla":
+            names, vals = ("ckv", "kr"), fresh
+        elif cfg.kv_cache_dtype == "int8":
+            # quantize fresh K/V into the byte-size cache (+ scale planes)
+            kq, ks = attn.quantize_kv(fresh[0])
+            vq, vs = attn.quantize_kv(fresh[1])
+            names = ("k", "v", "k_scale", "v_scale")
+            vals = (kq, vq, ks, vs)
+        else:
+            names, vals = ("k", "v"), fresh
+        for name, val in zip(names, vals):
+            buf = cache[name]
+            cache_len = buf.shape[1]
+            if cache_len >= s:
+                buf = jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros(buf.shape, buf.dtype), val.astype(buf.dtype), 0, axis=1
+                )
+            else:  # local ring: keep the last `cache_len` positions
+                buf = val[:, s - cache_len:, :].astype(buf.dtype)
+                # ring expects slot order [0..W): roll so slot (pos % W) is correct
+                shift = s % cache_len
+                buf = jnp.roll(buf, shift, axis=1)
+            cache = {**cache, name: buf}
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode-time single-token application
+# ---------------------------------------------------------------------------
+
+def apply_block_decode(x_t, p, kind: str, cfg: ModelConfig, cache, pos):
+    kind = effective_kind(kind, cfg)
+    h = rmsnorm(x_t, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local_attn", "moe", "dense_ffn_layer"):
+        window = cfg.sliding_window if kind == "local_attn" else None
+        a, cache = attn.attention_decode(h, p["attn"], cfg, cache, pos, window=window)
+        x_t = x_t + a
+        h2 = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            f, _ = moe_mod.moe_ffn(h2, p["moe"], cfg)
+        else:
+            f = glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+        x_t = x_t + f
+    elif kind == "mla":
+        a, (ckv, kr) = attn.mla_decode(h, p["attn"], cfg, cache["ckv"], cache["kr"], pos)
+        x_t = x_t + a
+        cache = {**cache, "ckv": ckv, "kr": kr}
+        h2 = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
+        x_t = x_t + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+    elif kind == "rglru":
+        a, state = rec.rglru_decode(h, p["cell"], cfg, cache)
+        x_t = x_t + a
+        cache = state
+        h2 = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
+        x_t = x_t + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+    elif kind == "mlstm":
+        a, state = rec.mlstm_decode(h, p["cell"], cfg, cache)
+        x_t = x_t + a
+        cache = state
+    elif kind == "slstm":
+        a, state = rec.slstm_decode(h, p["cell"], cfg, cache)
+        x_t = x_t + a
+        cache = state
+    else:
+        raise ValueError(kind)
+    return x_t, cache
+
+
+# ---------------------------------------------------------------------------
+# Layer layout: periods + tail
+# ---------------------------------------------------------------------------
+
+def layer_layout(cfg: ModelConfig, n_layers=None):
+    """(first_k_dense, n_periods, tail_kinds) for the given depth."""
+    n = n_layers if n_layers is not None else cfg.n_layers
+    lead = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    rest = n - lead
+    period = cfg.pattern_period
+    n_periods = rest // period
+    tail_kinds = tuple(cfg.block_pattern[i % period] for i in range(n_periods * period, rest))
+    return lead, n_periods, tail_kinds
+
+
+def scan_periods(x, stacked_params, cfg: ModelConfig, positions, *, causal=True):
+    """Run n_periods x pattern via lax.scan. stacked_params: tuple per slot."""
+    from repro.runtime.sharding import constrain_activations
+
+    pattern = cfg.block_pattern
+
+    def period_fn(carry, slot_params):
+        h, aux = carry
+        h = constrain_activations(h)  # SP: carry saved seq-sharded for bwd
+        # barrier: stops XLA hoisting the rmsnorm f32 upcast across the
+        # remat boundary (it would store the carry stack at 2x bytes)
+        h = jax.lax.optimization_barrier(h)
+        for s, kind in enumerate(pattern):
+            h, a, _ = apply_block(h, slot_params[s], kind, cfg, positions, causal=causal)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat:
+        # "nothing": save NOTHING inside a period — the scan stores exactly
+        # the bf16 carry per layer-period (min memory, full recompute).
+        # "dots": save matmul/einsum outputs — bwd recomputes only the
+        # elementwise ops (±0 extra MXU flops, more activation memory).
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "nothing"
+                  else jax.checkpoint_policies.checkpoint_dots)
+        period_fn = jax.checkpoint(period_fn, policy=policy, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(period_fn, (x, jnp.zeros((), jnp.float32)), stacked_params,
+                               unroll=cfg.scan_unroll)
+    return x, aux
+
+
+def scan_periods_decode(x_t, stacked_params, stacked_cache, cfg: ModelConfig, pos):
+    pattern = cfg.block_pattern
+
+    def period_fn(carry, xs):
+        h = carry
+        slot_params, slot_cache = xs
+        new_cache = []
+        for s, kind in enumerate(pattern):
+            h, c = apply_block_decode(h, slot_params[s], kind, cfg, slot_cache[s], pos)
+            new_cache.append(c)
+        return h, tuple(new_cache)
+
+    x_t, new_cache = jax.lax.scan(period_fn, x_t, (stacked_params, stacked_cache),
+                                  unroll=cfg.scan_unroll)
+    return x_t, new_cache
+
+
+def scan_periods_prefill(x, stacked_params, stacked_cache_tpl, cfg: ModelConfig, positions):
+    pattern = cfg.block_pattern
+
+    def period_fn(carry, xs):
+        h, aux = carry
+        slot_params, slot_tpl = xs
+        new_cache = []
+        for s, kind in enumerate(pattern):
+            h, a, c = apply_block_prefill(h, slot_params[s], kind, cfg, positions, slot_tpl[s])
+            aux = aux + a
+            new_cache.append(c)
+        return (h, aux), tuple(new_cache)
+
+    (x, aux), new_cache = jax.lax.scan(
+        period_fn, (x, jnp.zeros((), jnp.float32)), (stacked_params, stacked_cache_tpl),
+        unroll=cfg.scan_unroll,
+    )
+    return x, aux, new_cache

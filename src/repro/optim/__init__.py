@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    adamw_init,
+    adamw_update,
+    sgd_init,
+    sgd_update,
+    make_schedule,
+    global_norm,
+    clip_by_global_norm,
+)
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "sgd_init",
+    "sgd_update",
+    "make_schedule",
+    "global_norm",
+    "clip_by_global_norm",
+]

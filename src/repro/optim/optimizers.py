@@ -1,0 +1,136 @@
+"""Optimizers from scratch (no optax): AdamW, SGD, schedules, clipping.
+
+State layout is a plain dict pytree so checkpointing and ZeRO-1 sharding
+specs (runtime/sharding.py:zero1_specs) apply uniformly.  Adam moments are
+fp32 regardless of param dtype (the paper's >=16-bit accumulation rule,
+applied to the optimizer).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def make_schedule(cfg: TrainConfig):
+    """step -> learning rate (fp32 scalar)."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "linear":
+            frac = jnp.clip(
+                (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+            )
+            decay = 1.0 - frac
+        else:  # cosine
+            frac = jnp.clip(
+                (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+            )
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.learning_rate * warm * decay
+
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    """Moments + fp32 MASTER weights (params themselves are stored bf16)."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        # copy=True: for fp32 params astype is a no-op returning the SAME
+        # buffer — the master leaf would alias the param leaf and the jit'd
+        # train step (which donates both trees) would donate one buffer twice.
+        "master": jax.tree_util.tree_map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+    }
+
+
+def adamw_update(params, grads, state, cfg: TrainConfig, lr=None):
+    """Returns (new_params, new_state, metrics).
+
+    The update runs entirely on the fp32 master copy; the bf16 params
+    emitted for the next forward are a cast of the new master.
+    """
+    step = state["step"] + 1
+    if lr is None:
+        lr = make_schedule(cfg)(step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        gf = g.astype(jnp.float32)
+        m1 = b1 * m + (1 - b1) * gf
+        v1 = b2 * v + (1 - b2) * gf * gf
+        mhat = m1 / bc1
+        vhat = v1 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay * master
+        master1 = master - lr * delta
+        return master1.astype(p.dtype), m1, v1, master1
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    flat_w = jax.tree_util.tree_leaves(state["master"])
+    out = [upd(p, g, m, v, w) for p, g, m, v, w in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    new_w = jax.tree_util.tree_unflatten(tree, [o[3] for o in out])
+    return (
+        new_p,
+        {"step": step, "m": new_m, "v": new_v, "master": new_w},
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+# ---------------------------------------------------------------------------
+# SGD (momentum)
+# ---------------------------------------------------------------------------
+
+def sgd_init(params):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mom": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def sgd_update(params, grads, state, cfg: TrainConfig, momentum=0.9, lr=None):
+    step = state["step"] + 1
+    if lr is None:
+        lr = make_schedule(cfg)(step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    def upd(p, g, m):
+        m1 = momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m1).astype(p.dtype), m1
+
+    pairs = jax.tree_util.tree_map(upd, params, grads, state["mom"])
+    new_p = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"step": step, "mom": new_m}, {"grad_norm": gnorm, "lr": lr}

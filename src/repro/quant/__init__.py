@@ -1,0 +1,12 @@
+from repro.quant.qtensor import QTensor, quantize, dequantize
+from repro.quant.fake_quant import fake_quant
+from repro.quant.calibrate import absmax_calibrate, percentile_calibrate
+
+__all__ = [
+    "QTensor",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "absmax_calibrate",
+    "percentile_calibrate",
+]

@@ -1,0 +1,24 @@
+"""PTQ calibration: derive activation scales from sample batches."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.qtensor import INT8_MAX
+
+
+def absmax_calibrate(samples: list[jnp.ndarray], axis=None) -> jnp.ndarray:
+    """Max-abs over every calibration batch -> symmetric scale."""
+    if axis is None:
+        absmax = max(float(jnp.max(jnp.abs(s))) for s in samples)
+        return jnp.asarray(max(absmax, 1e-8) / INT8_MAX, jnp.float32)
+    per_batch = [jnp.max(jnp.abs(s.astype(jnp.float32)), axis=axis, keepdims=True) for s in samples]
+    absmax = jnp.max(jnp.stack(per_batch), axis=0)
+    return jnp.maximum(absmax, 1e-8) / INT8_MAX
+
+
+def percentile_calibrate(samples: list[jnp.ndarray], pct: float = 99.9) -> jnp.ndarray:
+    """Clip-at-percentile scale (robust to activation outliers)."""
+    flat = jnp.concatenate([jnp.abs(s.astype(jnp.float32)).reshape(-1) for s in samples])
+    absmax = jnp.percentile(flat, pct)
+    return jnp.maximum(absmax, 1e-8) / INT8_MAX

@@ -1,0 +1,22 @@
+"""QAT fake quantization with straight-through gradients.
+
+The paper motivates byte-size GEMM with *training* (>=8-bit operands,
+>=16-bit accumulation, [26][27]).  ``fake_quant`` simulates the SPOGA int8
+datapath in the forward pass while passing gradients straight through, so a
+model can be trained "on" the accelerator numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtensor import INT8_MAX, _absmax_scale
+
+
+def fake_quant(x: jnp.ndarray, axis=-1) -> jnp.ndarray:
+    """Round-trip x through symmetric int8; identity gradient (STE)."""
+    scale = jax.lax.stop_gradient(_absmax_scale(x, axis))
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX)
+    dq = q * scale
+    return x + jax.lax.stop_gradient(dq - x)

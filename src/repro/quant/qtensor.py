@@ -1,0 +1,66 @@
+"""Quantized tensor container + symmetric int8 quantization.
+
+Symmetric per-axis scaling: ``x ~= data * scale`` with ``data`` int8 and
+``scale = absmax / 127``.  Registered as a pytree so QTensors flow through
+jit/pjit/shard_map and checkpoints unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """int8 data + broadcastable fp32 scale (``x ~= data * scale``)."""
+
+    data: jnp.ndarray   # int8
+    scale: jnp.ndarray  # fp32, broadcastable against ``data``
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def dequantize(self, dtype=jnp.float32):
+        return (self.data.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.data, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _absmax_scale(x: jnp.ndarray, axis) -> jnp.ndarray:
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    return jnp.maximum(absmax, 1e-8) / INT8_MAX
+
+
+def quantize(x: jnp.ndarray, axis=None, scale: jnp.ndarray | None = None) -> QTensor:
+    """Symmetric int8 quantization.
+
+    ``axis``: reduction axis/axes for the absmax (e.g. ``0`` for
+    per-output-channel weights ``(K, N)``; ``-1`` for per-row activations).
+    ``None`` means per-tensor.  A precomputed calibration ``scale`` wins.
+    """
+    if scale is None:
+        if axis is None:
+            axis = tuple(range(x.ndim))
+        scale = _absmax_scale(x, axis)
+    data = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -INT8_MAX, INT8_MAX)
+    return QTensor(data.astype(jnp.int8), scale)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32) -> jnp.ndarray:
+    return q.dequantize(dtype)

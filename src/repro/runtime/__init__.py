@@ -1,0 +1,17 @@
+from repro.runtime.sharding import (
+    param_specs,
+    batch_pspec,
+    cache_specs,
+    opt_state_specs,
+    named,
+    data_axes,
+)
+
+__all__ = [
+    "param_specs",
+    "batch_pspec",
+    "cache_specs",
+    "opt_state_specs",
+    "named",
+    "data_axes",
+]

@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step + one prefill/decode step on CPU, asserting shapes and
+finiteness (no NaNs).  The FULL configs are exercised only by the dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import (
+    decode_step,
+    forward,
+    init_params,
+    lm_loss,
+    prefill,
+)
+
+SEQ = 64
+BATCH = 2
+
+
+def _batch_for(cfg, key, seq=SEQ, batch=BATCH):
+    kt, ke = jax.random.split(key)
+    if cfg.is_encoder_decoder:
+        return {
+            "src_embeds": jax.random.normal(ke, (batch, seq, cfg.d_model), jnp.float32) * 0.02,
+            "tgt_tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+        }
+    if cfg.frontend is not None:
+        return {
+            "embeds": jax.random.normal(ke, (batch, seq, cfg.d_model), jnp.float32) * 0.02,
+            "labels": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+        }
+    return {"tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_and_loss(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, rng)
+    batch = _batch_for(cfg, rng)
+    logits = forward(params, cfg, batch)
+    tgt = batch.get("tgt_tokens", batch.get("tokens", batch.get("labels")))
+    assert logits.shape == (BATCH, SEQ, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss = lm_loss(params, cfg, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step_grads(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, rng)
+    batch = _batch_for(cfg, rng, seq=32)
+    loss, grads = jax.value_and_grad(lambda p: lm_loss(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    finite = jax.tree_util.tree_all(
+        jax.tree_util.tree_map(lambda g: bool(jnp.all(jnp.isfinite(g))), grads)
+    )
+    assert finite, f"non-finite grads for {arch}"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_prefill_decode(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, rng)
+    batch = _batch_for(cfg, rng, seq=32)
+    logits, cache = prefill(params, cfg, batch, cache_len=64)
+    assert logits.shape == (BATCH, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits2, cache2 = decode_step(params, cfg, tok, cache)
+    assert logits2.shape == (BATCH, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+    assert int(cache2["pos"][0]) == int(cache["pos"][0]) + 1

@@ -1,0 +1,85 @@
+"""MoE dispatch correctness: local-capacity sort-based dispatch vs the
+dense every-expert reference, drop semantics, and the grouped int8 GEMM."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import moe as moe_mod
+
+
+def _cfg(capacity_factor=8.0, quant_mode="bf16", num_experts=8, top_k=2):
+    cfg = reduced(get_config("granite-moe-3b-a800m")).with_(quant_mode=quant_mode)
+    moe = dataclasses.replace(cfg.moe, capacity_factor=capacity_factor,
+                              num_experts=num_experts, top_k=top_k)
+    return cfg.with_(moe=moe)
+
+
+@pytest.fixture()
+def params_and_x():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(jax.random.fold_in(key, 1), cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    return cfg, p, x
+
+
+def test_matches_dense_reference_at_high_capacity(params_and_x):
+    """With capacity >= S*k no token drops: the sparse dispatch must equal
+    the dense every-expert reference exactly (same expert math)."""
+    cfg, p, x = params_and_x
+    sparse, _ = moe_mod.moe_ffn(x, p, cfg)
+    dense = moe_mod.moe_ffn_reference(x, p, cfg)
+    np.testing.assert_allclose(np.asarray(sparse, np.float32),
+                               np.asarray(dense, np.float32),
+                               rtol=5e-2, atol=5e-3)  # bf16 compute
+
+
+def test_low_capacity_drops_gracefully(params_and_x):
+    cfg, p, x = params_and_x
+    tight = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    out, aux = moe_mod.moe_ffn(x, p, tight)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    assert np.isfinite(float(aux))
+    # dropped tokens fall back to (shared expert + residual-zero), so the
+    # output magnitude shrinks but never explodes
+    full, _ = moe_mod.moe_ffn(x, p, cfg)
+    assert (np.abs(np.asarray(out, np.float32)).mean()
+            <= np.abs(np.asarray(full, np.float32)).mean() * 1.5 + 1e-3)
+
+
+def test_capacity_is_per_row(params_and_x):
+    """Routing is batch-local: permuting batch rows permutes outputs."""
+    cfg, p, x = params_and_x
+    out, _ = moe_mod.moe_ffn(x, p, cfg)
+    out_swapped, _ = moe_mod.moe_ffn(x[::-1], p, cfg)
+    np.testing.assert_allclose(np.asarray(out_swapped, np.float32),
+                               np.asarray(out, np.float32)[::-1],
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["int8_spoga", "int8_deas", "int8_direct"])
+def test_grouped_int8_modes_agree(params_and_x, mode):
+    """Expert GEMMs under the three int8 dataflows are identical."""
+    cfg, p, x = params_and_x
+    ref, _ = moe_mod.moe_ffn(x, p, cfg.with_(quant_mode="int8_spoga"))
+    got, _ = moe_mod.moe_ffn(x, p, cfg.with_(quant_mode=mode))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Perfectly uniform routing gives aux == 1 (Switch normalization)."""
+    cfg = _cfg()
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    t = 4096
+    probs = jnp.full((t, e), 1.0 / e)
+    topi = jnp.tile(jnp.arange(k)[None, :], (t, 1))
+    # replicate the formula on synthetic stats
+    dispatch_frac = jnp.mean(jax.nn.one_hot(topi, e).sum(1), axis=0)
+    aux = e * jnp.sum(dispatch_frac * jnp.mean(probs, axis=0)) / k
+    assert abs(float(aux) - 1.0) < 1e-5

@@ -1,0 +1,66 @@
+"""Property tests on the photonic models' physical invariants."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accelerator_sim import AccelConfig, simulate
+from repro.core.photonic_model import max_vector_length
+from repro.core.workloads import GemmShape
+
+
+class TestLinkBudgetMonotonicity:
+    @given(st.sampled_from(["MWA", "MAW", "AMW"]),
+           st.floats(0.0, 12.0), st.floats(0.0, 11.0))
+    @settings(max_examples=60, deadline=None)
+    def test_more_power_never_shrinks_n(self, org, p1, dp):
+        n1, _ = max_vector_length(org, p1, 5.0)
+        n2, _ = max_vector_length(org, p1 + dp, 5.0)
+        assert n2 >= n1
+
+    @given(st.sampled_from(["MWA", "MAW", "AMW"]),
+           st.floats(1.0, 9.0), st.floats(0.0, 5.0))
+    @settings(max_examples=60, deadline=None)
+    def test_faster_rate_never_grows_n(self, org, dr, ddr):
+        n1, _ = max_vector_length(org, 10.0, dr)
+        n2, _ = max_vector_length(org, 10.0, dr + ddr)
+        assert n2 <= n1
+
+    def test_square_orgs_return_square(self):
+        for org in ("MAW", "AMW"):
+            n, m = max_vector_length(org, 10.0, 1.0)
+            assert n == m
+
+    def test_mwa_m_fixed_16(self):
+        for p in (1.0, 5.0, 10.0):
+            _, m = max_vector_length("MWA", p, 1.0)
+            assert m == 16
+
+
+class TestSimulatorInvariants:
+    def test_energy_time_consistency(self):
+        cfg = AccelConfig("SPOGA_5", "MWA", 5.0)
+        r = simulate(cfg, "googlenet")
+        assert r.time_s > 0 and r.energy_j > 0
+        assert abs(r.power_w - r.energy_j / r.time_s) / r.power_w < 1e-9
+
+    def test_bigger_workload_never_faster(self):
+        cfg = AccelConfig("SPOGA_10", "MWA", 10.0)
+        small = simulate(cfg, "shufflenet_v2")   # 0.11 GMAC
+        big = simulate(cfg, "resnet50")          # 4.1 GMAC
+        assert big.time_s > small.time_s
+
+    def test_more_groups_not_slower(self):
+        a = simulate(AccelConfig("s", "MWA", 10.0, n_groups=4), "resnet50")
+        b = simulate(AccelConfig("s", "MWA", 10.0, n_groups=16), "resnet50")
+        assert b.time_s <= a.time_s
+        assert b.power_w >= a.power_w           # more hardware, more watts
+
+    def test_spoga_conversions_scale_with_dots_only(self):
+        """ADC count is exactly one per dot product, independent of K."""
+        cfg = AccelConfig("s", "MWA", 1.0)
+        from repro.core import accelerator_sim as sim
+
+        trace_small_k = [GemmShape("g", m=64, k=100, n=50)]
+        trace_large_k = [GemmShape("g", m=64, k=2000, n=50)]
+        _, ev1 = sim._run_trace(cfg, trace_small_k)
+        _, ev2 = sim._run_trace(cfg, trace_large_k)
+        assert ev1["adc"] == ev2["adc"] == 64 * 50

@@ -1,0 +1,86 @@
+"""Paper-claim validation: Table I (exact) and Fig. 5 headline ratios."""
+
+import math
+
+import pytest
+
+from repro.core.accelerator_sim import (
+    ACCELS, PAPER_RATIOS, fig5_comparison, headline_ratios, simulate,
+)
+from repro.core.photonic_model import PAPER_TABLE_I, scalability_table
+from repro.core.workloads import CNNS, cnn_gemm_trace, total_macs
+
+# Published ImageNet-224 MAC counts (within 10% — arch variants differ in
+# counting of downsample/aux paths).
+PUBLISHED_GMACS = {
+    "mobilenet_v2": 0.30,
+    "shufflenet_v2": 0.146,
+    "resnet50": 4.1,
+    "googlenet": 1.5,
+}
+
+
+class TestTableI:
+    def test_all_15_cells_exact(self):
+        table = scalability_table()
+        for row, cells in PAPER_TABLE_I.items():
+            for dr, expected in cells.items():
+                assert table[row][dr] == expected, (row, dr)
+
+
+class TestWorkloads:
+    @pytest.mark.parametrize("name", list(CNNS))
+    def test_mac_counts_near_published(self, name):
+        got = total_macs(name) / 1e9
+        pub = PUBLISHED_GMACS[name]
+        assert 0.6 * pub <= got <= 1.25 * pub, f"{name}: {got:.3f} vs {pub}"
+
+    @pytest.mark.parametrize("name", list(CNNS))
+    def test_trace_wellformed(self, name):
+        for g in cnn_gemm_trace(name):
+            assert g.m > 0 and g.k > 0 and g.n > 0 and g.groups >= 1
+
+
+class TestFig5:
+    @pytest.fixture(scope="class")
+    def comparison(self):
+        return fig5_comparison()
+
+    def test_headline_ratios_within_band(self, comparison):
+        """Every paper ratio reproduced within +-35% (simulator internals
+        of the paper are not public; see EXPERIMENTS.md for the exact
+        residuals, most are within 15%)."""
+        for key, vals in headline_ratios(comparison).items():
+            lo, hi = 0.65 * vals["paper"], 1.35 * vals["paper"]
+            assert lo <= vals["ours"] <= hi, f"{key}: {vals}"
+
+    def test_spoga_beats_baselines_everywhere(self, comparison):
+        """The paper's qualitative claim: SPOGA wins FPS and FPS/W at every
+        data rate."""
+        for dr in (1, 5, 10):
+            s = comparison[f"SPOGA_{dr}"]["gmean"]
+            for base in ("DEAPCNN", "HOLYLIGHT"):
+                b = comparison[f"{base}_{dr}"]["gmean"]
+                assert s["fps"] > b["fps"]
+                assert s["fps_per_w"] > b["fps_per_w"]
+
+    def test_conversion_count_structure(self):
+        """Sec. III-B: SPOGA needs 1 ADC conversion per dot product; the
+        bit-sliced baseline needs 4 per chunk plus SRAM round trips."""
+        s = simulate(ACCELS["SPOGA_10"], "resnet50")
+        d = simulate(ACCELS["DEAPCNN_10"], "resnet50")
+        dots = sum(g.dots * g.groups * g.repeat for g in cnn_gemm_trace("resnet50"))
+        assert s.adc_samples == dots
+        assert d.adc_samples >= 4 * dots          # >= 4x: chunked + sliced
+        assert d.sram_bytes > 8 * s.sram_bytes    # intermediate round trips
+        assert d.deas_ops > 0 and s.deas_ops == 0
+
+    def test_fps_monotone_in_datarate_for_spoga(self, comparison):
+        fps = [comparison[f"SPOGA_{dr}"]["gmean"]["fps"] for dr in (1, 5, 10)]
+        assert fps[0] < fps[1] < fps[2]
+
+
+def test_gmean_sanity():
+    assert math.isclose(
+        math.exp(sum(map(math.log, [2.0, 8.0])) / 2), 4.0
+    )

@@ -1,0 +1,71 @@
+"""Quantization substrate: QTensor, calibration, fake-quant STE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.calibrate import absmax_calibrate, percentile_calibrate
+from repro.quant.fake_quant import fake_quant
+from repro.quant.qtensor import QTensor, dequantize, quantize
+
+
+class TestQTensor:
+    def test_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 32), jnp.float32)
+        q = quantize(x, axis=-1)
+        err = np.abs(np.asarray(dequantize(q) - x))
+        step = np.asarray(q.scale)  # per-row scale == one quant step
+        assert (err <= step * 0.5 + 1e-7).all()
+
+    def test_pytree_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 8), jnp.float32)
+        q = quantize(x, axis=None)
+        leaves, treedef = jax.tree_util.tree_flatten(q)
+        q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_array_equal(np.asarray(q.data), np.asarray(q2.data))
+
+    def test_int8_range(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (128,), jnp.float32) * 100
+        q = quantize(x)
+        d = np.asarray(q.data)
+        assert d.dtype == np.int8
+        assert d.max() <= 127 and d.min() >= -127
+
+    @given(st.integers(1, 40), st.floats(0.01, 50.0))
+    @settings(max_examples=20, deadline=None)
+    def test_scale_invariance(self, n, scale):
+        """quantize(c*x) has codes equal to quantize(x) up to one rounding
+        step at exact half-code boundaries (symmetric absmax)."""
+        x = np.linspace(-1, 1, n, dtype=np.float32)
+        qa = np.asarray(quantize(jnp.asarray(x)).data, np.int32)
+        qb = np.asarray(quantize(jnp.asarray(x * scale)).data, np.int32)
+        assert np.abs(qa - qb).max() <= 1
+
+
+class TestCalibrate:
+    def test_absmax(self):
+        samples = [jnp.asarray([1.0, -3.0]), jnp.asarray([2.0, 0.5])]
+        np.testing.assert_allclose(float(absmax_calibrate(samples)), 3.0 / 127.0)
+
+    def test_percentile_clips_outliers(self):
+        x = jnp.concatenate([jnp.ones(999), jnp.asarray([1000.0])])
+        p = float(percentile_calibrate([x], pct=99.0))
+        np.testing.assert_allclose(p, 1.0 / 127.0, rtol=1e-3)
+
+
+class TestFakeQuantSTE:
+    def test_forward_quantizes(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (32,), jnp.float32)
+        y = fake_quant(x)
+        # values land on the int8 grid of the row scale
+        scale = float(jnp.max(jnp.abs(x))) / 127.0
+        codes = np.asarray(y) / scale
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+    def test_gradient_is_identity(self):
+        """Straight-through estimator: d(fake_quant)/dx == 1."""
+        x = jax.random.normal(jax.random.PRNGKey(4), (16,), jnp.float32)
+        g = jax.grad(lambda v: fake_quant(v).sum())(x)
+        np.testing.assert_allclose(np.asarray(g), 1.0, rtol=1e-6)

@@ -1,0 +1,94 @@
+"""Sharding-rule invariants (property-tested): every generated
+PartitionSpec (a) never repeats a mesh axis, (b) only shards divisible
+dims, (c) has rank <= leaf rank.  This family of bugs (ZeRO-1 stacking
+"data" onto an FSDP-sharded dim) broke 8 dry-run cells once — see git
+history of runtime/sharding.py."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as model_lib
+from repro.optim.optimizers import adamw_init
+from repro.runtime import sharding as shard_lib
+
+
+def _check_specs(specs_tree, shapes_tree, mesh):
+    flat_specs = jax.tree_util.tree_leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    flat_shapes = jax.tree_util.tree_leaves(shapes_tree)
+    assert len(flat_specs) == len(flat_shapes)
+    for spec, leaf in zip(flat_specs, flat_shapes):
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        seen = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                assert a not in seen, f"duplicate axis {a} in {spec}"
+                seen.append(a)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert dim % size == 0, f"{spec} does not divide {leaf.shape}"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_and_opt_specs_valid(arch):
+    cfg = get_config(arch)
+    mesh = make_host_mesh(1, 1)  # axis names matter, sizes=1 never divide-fail
+
+    # use a *virtual* mesh shape by checking against the production sizes:
+    # re-create specs against a fake mesh object with the production shape.
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    shapes = model_lib.param_shapes(cfg)
+    p_specs = shard_lib.param_specs(shapes, FakeMesh, cfg, fsdp=True)
+    _check_specs(p_specs, shapes, FakeMesh)
+
+    opt_shapes = jax.eval_shape(adamw_init, shapes)
+    o_specs = shard_lib.opt_state_specs(opt_shapes, p_specs, FakeMesh, zero1=True)
+    _check_specs(
+        o_specs["m"], opt_shapes["m"], FakeMesh)
+    _check_specs(
+        o_specs["master"], opt_shapes["master"], FakeMesh)
+
+
+def test_cache_specs_valid():
+    cfg = get_config("mistral-large-123b")
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    shapes = model_lib.cache_shapes(cfg, batch=128, cache_len=32768)
+    specs = shard_lib.cache_specs(shapes, FakeMesh)
+    _check_specs(specs, shapes, FakeMesh)
+
+
+def test_collective_stats_parser():
+    from repro.launch.dryrun import collective_stats
+
+    hlo = """
+  %ag = bf16[128,1024]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[256]{0} all-reduce(%y), to_apply=%sum
+  %rs = f32[64,32]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = u32[16]{0} collective-permute(%w)
+  %not_a_collective = f32[9999]{0} add(%a, %b)
+"""
+    s = collective_stats(hlo)
+    assert s["all-gather"] == {"count": 1, "bytes": 128 * 1024 * 2}
+    assert s["all-reduce"] == {"count": 1, "bytes": 256 * 4}
+    assert s["reduce-scatter"] == {"count": 1, "bytes": 64 * 32 * 4}
+    assert s["collective-permute"] == {"count": 1, "bytes": 16 * 4}
+    assert s["total_bytes"] == sum(
+        v["bytes"] for k, v in s.items() if k != "total_bytes")

@@ -1,0 +1,42 @@
+"""Property tests: nibble slicing is an exact identity over all of int8."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.slicing import reconstruct, slice_sm, slice_tc
+
+
+def test_tc_exhaustive():
+    """Every int8 value round-trips exactly through two's-complement slices."""
+    x = jnp.arange(-128, 128, dtype=jnp.int8)
+    msn, lsn = slice_tc(x)
+    np.testing.assert_array_equal(np.asarray(reconstruct(msn, lsn)), np.asarray(x))
+    assert int(msn.min()) >= -8 and int(msn.max()) <= 7
+    assert int(lsn.min()) >= 0 and int(lsn.max()) <= 15
+
+
+def test_sm_exhaustive():
+    """Every int8 value round-trips exactly through sign-magnitude slices."""
+    x = jnp.arange(-128, 128, dtype=jnp.int8)
+    msn, lsn = slice_sm(x)
+    np.testing.assert_array_equal(np.asarray(reconstruct(msn, lsn)), np.asarray(x))
+    assert int(msn.min()) >= -8 and int(msn.max()) <= 8
+    assert int(lsn.min()) >= -15 and int(lsn.max()) <= 15
+
+
+@given(st.lists(st.integers(-128, 127), min_size=1, max_size=256))
+@settings(max_examples=50, deadline=None)
+def test_slicing_roundtrip_property(vals):
+    x = jnp.asarray(vals, jnp.int8)
+    for fn in (slice_tc, slice_sm):
+        m, l = fn(x)
+        np.testing.assert_array_equal(np.asarray(reconstruct(m, l)), np.asarray(x))
+
+
+@pytest.mark.parametrize("fn", [slice_tc, slice_sm])
+def test_slicing_rejects_wrong_dtype(fn):
+    with pytest.raises(TypeError):
+        fn(jnp.zeros((4,), jnp.int32))
