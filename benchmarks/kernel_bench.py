@@ -1,33 +1,48 @@
-"""Benchmark: the three INT8 GEMM dataflows (Sec. III-B / Fig. 2).
+"""Benchmark: the INT8 GEMM dataflows across every registered backend.
 
-Two views:
+Three views (Sec. III-B / Fig. 2):
 
 1. **Analytic TPU HBM traffic** per dataflow, derived from the Pallas
    kernels' BlockSpecs — the architectural quantity SPOGA improves.
    ``deas`` pays an extra 4 int32 intermediate-matrix writes + 4 reads
    (the "ADC + memory + DEAS" pipeline of prior work); ``spoga`` keeps
    partials in VMEM and writes each output tile once.
-2. **Host XLA wall-clock** of the algebraically identical jnp paths
-   (CPU backend; indicative only — the structural claim is (1)).
+2. **Host XLA wall-clock** of every registry backend that compiles on this
+   platform (the Pallas interpreter is skipped on CPU above tiny shapes —
+   it runs the kernel body in Python and would swamp the table).
+3. A machine-readable ``BENCH_kernels.json`` next to this file (override
+   with ``--out``): per-backend, per-shape timings + analytic bytes, so the
+   perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--out PATH] [--quick]
 """
 
+import argparse
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spoga import deas_matmul, direct_matmul, spoga_matmul
+from repro.backends import list_backends, resolve_backend
 from repro.kernels.spoga_gemm import DEFAULT_BLOCK_K, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N
 
 SHAPES = ((256, 512, 256), (512, 2048, 512), (1024, 4096, 1024))
+QUICK_SHAPES = ((256, 512, 256),)
+
+# Pallas-interpreter backends execute the kernel body in Python; on
+# non-TPU hosts only time them on the smallest shape.
+_INTERPRETED_OFF_TPU = ("pallas_spoga", "pallas_spoga_dequant", "pallas_deas",
+                        "pallas_interpret")
 
 
 def _ceil(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def analytic_hbm_bytes(m: int, k: int, n: int, mode: str) -> int:
+def analytic_hbm_bytes(m: int, k: int, n: int, family: str) -> int:
     """HBM bytes moved by the Pallas dataflow (BlockSpec-level model)."""
     bm = min(DEFAULT_BLOCK_M, m)
     bn = min(DEFAULT_BLOCK_N, n)
@@ -36,18 +51,16 @@ def analytic_hbm_bytes(m: int, k: int, n: int, mode: str) -> int:
     # per K-sweep of one (i, j) tile: x tile + w tile per k step (int8)
     gemm_reads = gm * gn * gk * (bm * bk + bk * bn)
     out_write = gm * gn * (bm * bn) * 4                      # int32
-    if mode == "spoga":
+    if family in ("spoga", "direct"):
         # slicing happens in VMEM; 1 fused sweep, 1 output write
         return gemm_reads + out_write
-    if mode == "direct":
-        return gemm_reads + out_write
-    if mode == "deas":
+    if family == "deas":
         # 4 slice GEMMs (each sweeps + writes an int32 intermediate) +
         # DEAS combine re-reading all four and writing the final matrix.
         slice_cost = 4 * (gemm_reads + out_write)
         combine = 4 * (m * n * 4) + m * n * 4
         return slice_cost + combine
-    raise ValueError(mode)
+    raise ValueError(family)
 
 
 def _time(fn, *args, iters: int = 10) -> float:
@@ -59,29 +72,65 @@ def _time(fn, *args, iters: int = 10) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> list[str]:
-    lines = ["", "=== kernel bench: INT8 GEMM dataflows ==="]
-    lines.append(f"{'shape':>18s} {'mode':>8s} {'us/call(host)':>14s} "
+def run(shapes=SHAPES) -> tuple[list[str], list[dict]]:
+    on_tpu = jax.default_backend() == "tpu"
+    lines = ["", "=== kernel bench: INT8 GEMM dataflows x backend registry ==="]
+    lines.append(f"{'shape':>18s} {'backend':>22s} {'us/call':>12s} "
                  f"{'TPU HBM bytes':>14s} {'vs spoga':>9s}")
     rng = np.random.default_rng(0)
-    fns = {
-        "deas": jax.jit(deas_matmul),
-        "spoga": jax.jit(spoga_matmul),
-        "direct": jax.jit(direct_matmul),
-    }
-    for m, k, n in SHAPES:
+    records = []
+    for m, k, n in shapes:
         x = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
         w = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
         base = analytic_hbm_bytes(m, k, n, "spoga")
-        for name, fn in fns.items():
-            us = _time(fn, x, w)
-            nbytes = analytic_hbm_bytes(m, k, n, name)
-            lines.append(f"{f'{m}x{k}x{n}':>18s} {name:>8s} {us:14.1f} "
+        for name in list_backends():
+            backend, spec = resolve_backend("int8_spoga", name)
+            nbytes = analytic_hbm_bytes(m, k, n, backend.family)
+            rec = {
+                "bench": "int8_gemm",
+                "backend": name,
+                "family": backend.family,
+                "shape": [m, k, n],
+                "analytic_hbm_bytes": nbytes,
+                "hbm_vs_spoga": round(nbytes / base, 3),
+                "platform": jax.default_backend(),
+                "us_per_call": None,
+            }
+            timed = on_tpu or name not in _INTERPRETED_OFF_TPU \
+                or (m, k, n) == min(shapes)
+            if timed:
+                fn = jax.jit(lambda a, b, _b=backend, _s=spec: _b.gemm(a, b, _s))
+                rec["us_per_call"] = round(_time(fn, x, w), 1)
+            us = f"{rec['us_per_call']:12.1f}" if rec["us_per_call"] is not None \
+                else f"{'(skipped)':>12s}"
+            lines.append(f"{f'{m}x{k}x{n}':>18s} {name:>22s} {us} "
                          f"{nbytes:14.3e} {nbytes / base:9.2f}x")
+            records.append(rec)
     lines.append("(deas/spoga HBM ratio == the intermediate-matrix round trips "
-                 "the paper eliminates; Fig. 2a vs 2b)")
-    return lines
+                 "the paper eliminates; Fig. 2a vs 2b. Interpreted Pallas "
+                 "backends are timed only on the smallest shape off-TPU.)")
+    return lines, records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_out = pathlib.Path(__file__).parent / "BENCH_kernels.json"
+    ap.add_argument("--out", default=str(default_out),
+                    help="machine-readable results path (JSON)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest shape only (CI-friendly)")
+    args = ap.parse_args()
+    lines, records = run(QUICK_SHAPES if args.quick else SHAPES)
+    print("\n".join(lines))
+    payload = {
+        "benchmark": "kernel_bench",
+        "platform": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "records": records,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {args.out} ({len(records)} records)")
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

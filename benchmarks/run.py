@@ -28,7 +28,8 @@ def main() -> None:
     if not args.skip_kernels:
         from benchmarks import kernel_bench
 
-        out += kernel_bench.run()
+        lines, _records = kernel_bench.run()
+        out += lines
 
     from benchmarks import roofline
 

@@ -7,15 +7,19 @@
    native direct) and verify they agree EXACTLY in int32.
 3. Run the Pallas TPU kernel in interpret mode against the oracle.
 4. Run one quantized W8A8 linear layer end to end.
+5. Pick GEMM backends from the registry and run the parametric quant
+   modes (w4a8: 4-bit weights in ONE slice plane — half the partials).
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.slicing import reconstruct, slice_tc
+from repro.backends import list_backends, quant_mode_summary, quantized_linear
+from repro.core.slicing import reconstruct, slice_planes, slice_tc
 from repro.core.spoga import deas_matmul, direct_matmul, quantized_matmul, spoga_matmul
 from repro.kernels.spoga_gemm import spoga_gemm
+from repro.models.layers import linear
 from repro.quant.qtensor import quantize
 
 rng = np.random.default_rng(0)
@@ -46,4 +50,29 @@ y = quantized_matmul(hq.data, wq.data, hq.scale, wq.scale.reshape(1, -1),
                      mode="int8_spoga")
 err = float(jnp.max(jnp.abs(y - h @ w)) / jnp.max(jnp.abs(h @ w)))
 print(f"4. W8A8 linear: relative error vs fp32 = {err:.4f} (quantization only)")
+
+# 5 — the backend registry + parametric quant modes end to end
+print(f"5. GEMM backend registry: {', '.join(list_backends())}")
+hx = jnp.asarray(rng.normal(size=(2, 16, 96)).astype(np.float32))  # batched
+wx = jnp.asarray(rng.normal(size=(96, 40)).astype(np.float32) * 0.1)
+exact = jnp.einsum("...k,kn->...n", hx, wx)
+for mode in ("int8_spoga", "w4a8", "w4a4"):
+    # default backend (auto-selected) and the fused Pallas kernel body
+    # (interpret mode on CPU) must agree on the same quantized integers
+    y_auto = quantized_linear(hx, wx, mode, out_dtype=jnp.float32)
+    y_pallas = quantized_linear(hx, wx, mode, backend="pallas_interpret",
+                                out_dtype=jnp.float32)
+    assert np.array_equal(np.asarray(y_auto), np.asarray(y_pallas)), mode
+    rel = float(jnp.linalg.norm(y_auto - exact) / jnp.linalg.norm(exact))
+    print(f"   {quant_mode_summary(mode):52s} rel err {rel:.4f}")
+
+# w4a8 weights really do ride a single 4-bit plane:
+w4 = quantize(wx, axis=0, bits=4)
+(plane,) = slice_planes(w4.data, 1, 4)
+assert (plane == w4.data).all()
+# ... and the model-layer entry point takes the same modes:
+y_layer = linear(hx.astype(jnp.bfloat16), wx.astype(jnp.bfloat16), "w4a8")
+assert y_layer.shape == exact.shape
+print("   w4a8 through models.layers.linear (STE backward-ready):",
+      y_layer.shape, y_layer.dtype)
 print("quickstart OK")

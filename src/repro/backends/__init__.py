@@ -1,0 +1,60 @@
+"""Unified GEMM backend registry (the SPOGA execution layer).
+
+``register_backend`` / ``get_backend`` manage named :class:`GemmBackend`
+strategies; :func:`quantized_linear` is the one quantize -> GEMM -> dequant
+pipeline every quantized model layer routes through.  Auto-selection runs
+the fused Pallas kernels on TPU and their algebraic jnp twins elsewhere;
+``ModelConfig.gemm_backend`` (or ``set_default_backend``) overrides.
+
+Only :mod:`repro.backends.spec` (pure dataclasses, no jax) loads eagerly —
+``configs`` imports mode metadata from here without paying for the kernel
+stack.  Registry/pipeline names resolve lazily (PEP 562) and pull in the
+built-in backend implementations on first use.
+"""
+
+import importlib
+
+from repro.backends.spec import (  # noqa: F401  (light: no jax import)
+    FAMILIES,
+    QUANT_MODES,
+    DEFAULT_SPEC,
+    QuantSpec,
+    parse_quant_mode,
+)
+
+# name -> defining module; resolved on first attribute access, after loading
+# repro.backends.impls so the built-in backends are always registered first.
+_LAZY = {
+    "GemmBackend": "repro.backends.registry",
+    "register_backend": "repro.backends.registry",
+    "get_backend": "repro.backends.registry",
+    "list_backends": "repro.backends.registry",
+    "resolve_backend": "repro.backends.registry",
+    "set_default_backend": "repro.backends.registry",
+    "get_default_backend": "repro.backends.registry",
+    "dynamic_quant": "repro.backends.pipeline",
+    "effective_bits": "repro.backends.pipeline",
+    "gemm_int": "repro.backends.pipeline",
+    "quantized_linear": "repro.backends.pipeline",
+    "quant_mode_summary": "repro.backends.pipeline",
+}
+
+__all__ = [
+    "FAMILIES",
+    "QUANT_MODES",
+    "DEFAULT_SPEC",
+    "QuantSpec",
+    "parse_quant_mode",
+    *sorted(_LAZY),
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        importlib.import_module("repro.backends.impls")  # registers built-ins
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.backends' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,131 @@
+"""The built-in GEMM backends.
+
+Six strategies over the same integer arithmetic (all bit-exact vs
+``direct_matmul`` — property-tested in tests/test_backends.py):
+
+=====================  =====================================================
+``jnp_spoga``          fused radix accumulation, pure jnp (CPU/GPU default)
+``jnp_deas``           prior-work baseline: materialized slice partials
+``direct``             native int dot_general (the MXU byte path endpoint)
+``pallas_spoga``       fused Pallas kernel, int32 out (TPU; interpreted off-TPU)
+``pallas_spoga_dequant``  fused Pallas kernel + dequant epilogue (TPU default)
+``pallas_deas``        materialized-slice Pallas baseline (W8A8 2x4b only)
+``pallas_interpret``   the fused dequant kernel forced through the Pallas
+                       interpreter — CI's way to exercise the TPU kernel
+                       body on CPU
+=====================  =====================================================
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.registry import GemmBackend, register_backend
+from repro.backends.spec import DEFAULT_SPEC, QuantSpec
+from repro.core import spoga as _spoga
+from repro.kernels.deas_gemm import deas_gemm
+from repro.kernels.spoga_gemm import spoga_gemm
+from repro.kernels.spoga_gemm_dequant import spoga_gemm_dequant
+
+
+def _not_on_tpu() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _epilogue(acc, x_scale, w_scale):
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+# -- pure-jnp dataflows -----------------------------------------------------
+
+def _jnp_sliced(materialize):
+    def gemm(x_q, w_q, spec: QuantSpec):
+        return _spoga.sliced_matmul(
+            x_q, w_q,
+            n_x_slices=spec.n_a_slices, n_w_slices=spec.n_w_slices,
+            slice_bits=spec.slice_bits, materialize=materialize,
+        )
+    return gemm
+
+
+def _direct_gemm(x_q, w_q, spec: QuantSpec):
+    return _spoga.direct_matmul(x_q, w_q)
+
+
+# -- Pallas kernels ---------------------------------------------------------
+
+def _pallas_gemm(interpret=None):
+    def gemm(x_q, w_q, spec: QuantSpec):
+        return spoga_gemm(
+            x_q, w_q,
+            n_x_slices=spec.n_a_slices, n_w_slices=spec.n_w_slices,
+            slice_bits=spec.slice_bits,
+            interpret=_not_on_tpu() if interpret is None else interpret,
+        )
+    return gemm
+
+
+def _pallas_gemm_dequant(interpret=None):
+    def gemm_dequant(x_q, w_q, x_scale, w_scale, spec: QuantSpec):
+        return spoga_gemm_dequant(
+            x_q, w_q, x_scale, w_scale,
+            n_x_slices=spec.n_a_slices, n_w_slices=spec.n_w_slices,
+            slice_bits=spec.slice_bits,
+            interpret=_not_on_tpu() if interpret is None else interpret,
+        )
+    return gemm_dequant
+
+
+def _pallas_deas_gemm(interpret=None):
+    def gemm(x_q, w_q, spec: QuantSpec):
+        return deas_gemm(
+            x_q, w_q,
+            interpret=_not_on_tpu() if interpret is None else interpret,
+        )
+    return gemm
+
+
+def _supports_nibble_planes(spec: QuantSpec) -> bool:
+    # The Pallas kernels cast planes to int8 for the MXU byte path.
+    return spec.slice_bits <= 7
+
+
+register_backend(GemmBackend(
+    name="jnp_spoga", family="spoga", gemm=_jnp_sliced(materialize=False),
+    description="fused radix accumulation, algebraic jnp twin of the kernel",
+))
+register_backend(GemmBackend(
+    name="jnp_deas", family="deas", gemm=_jnp_sliced(materialize=True),
+    description="prior-work DEAS: materialized per-slice partial matrices",
+))
+register_backend(GemmBackend(
+    name="direct", family="direct", gemm=_direct_gemm,
+    description="native integer dot_general (no slicing; beyond-paper endpoint)",
+))
+register_backend(GemmBackend(
+    name="pallas_spoga", family="spoga", gemm=_pallas_gemm(),
+    supports=_supports_nibble_planes,
+    description="fused SPOGA Pallas kernel, int32 out (interpreted off-TPU)",
+))
+register_backend(GemmBackend(
+    name="pallas_spoga_dequant", family="spoga", gemm=_pallas_gemm(),
+    gemm_dequant=_pallas_gemm_dequant(), supports=_supports_nibble_planes,
+    description="fused SPOGA Pallas kernel with in-kernel dequant epilogue",
+))
+register_backend(GemmBackend(
+    name="pallas_deas", family="deas", gemm=_pallas_deas_gemm(),
+    supports=lambda spec: spec == DEFAULT_SPEC,
+    description="materialized-slice Pallas baseline (paper Fig. 2a; W8A8 only)",
+))
+register_backend(GemmBackend(
+    name="pallas_deas_interpret", family="deas", gemm=_pallas_deas_gemm(interpret=True),
+    supports=lambda spec: spec == DEFAULT_SPEC,
+    description="the DEAS baseline kernels forced through the Pallas interpreter",
+))
+register_backend(GemmBackend(
+    name="pallas_interpret", family="spoga", gemm=_pallas_gemm(interpret=True),
+    gemm_dequant=_pallas_gemm_dequant(interpret=True),
+    supports=_supports_nibble_planes,
+    description="fused dequant kernel forced through the Pallas interpreter",
+))

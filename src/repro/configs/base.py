@@ -12,8 +12,9 @@ import dataclasses
 from typing import Optional
 
 # ---------------------------------------------------------------------------
-# Quantization execution modes (DESIGN.md §3)
-QUANT_MODES = ("bf16", "int8_deas", "int8_spoga", "int8_direct")
+# Quantization execution modes (DESIGN.md §3) — canonical list lives next to
+# the QuantSpec parser so configs and backends cannot drift apart.
+from repro.backends.spec import QUANT_MODES, parse_quant_mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +68,9 @@ class ModelConfig:
     frontend: Optional[str] = None
     # numerics
     quant_mode: str = "bf16"
+    # GEMM backend registry name ("jnp_spoga", "pallas_spoga_dequant",
+    # "pallas_interpret", ...); None = auto-select by platform/family.
+    gemm_backend: Optional[str] = None
     norm_eps: float = 1e-6
     act: str = "silu"
     tie_embeddings: bool = False
@@ -88,7 +92,21 @@ class ModelConfig:
 
     def __post_init__(self):
         if self.quant_mode not in QUANT_MODES:
-            raise ValueError(f"quant_mode must be in {QUANT_MODES}")
+            # Parametric modes ("w4a8", "w8a8_s2", ...) validate via the
+            # spec parser; anything it rejects is a genuine config error.
+            try:
+                parse_quant_mode(self.quant_mode)
+            except ValueError:
+                raise ValueError(
+                    f"quant_mode must be in {QUANT_MODES} or a parametric "
+                    f"'w<bits>a<bits>[_s<slice>]' string, got {self.quant_mode!r}"
+                ) from None
+        if self.gemm_backend is not None:
+            # Touching the registry loads the kernel stack (jax + Pallas);
+            # only pay that when a backend override is actually configured.
+            from repro.backends import get_backend
+
+            get_backend(self.gemm_backend)  # raises KeyError on unknown names
         if self.family == "moe" and self.moe is None:
             raise ValueError("moe family requires moe config")
 

@@ -7,11 +7,20 @@ photonic scalability / transaction-level performance models that regenerate
 the paper's Table I and Fig. 5.
 """
 
-from repro.core.slicing import slice_tc, slice_sm, slice_nibbles, reconstruct
+from repro.core.slicing import (
+    slice_tc,
+    slice_sm,
+    slice_nibbles,
+    slice_planes,
+    reconstruct,
+    reconstruct_planes,
+)
 from repro.core.spoga import (
     direct_matmul,
     spoga_matmul,
     deas_matmul,
+    sliced_matmul,
+    sliced_dot_planes,
     quantized_matmul,
 )
 
@@ -19,9 +28,13 @@ __all__ = [
     "slice_tc",
     "slice_sm",
     "slice_nibbles",
+    "slice_planes",
     "reconstruct",
+    "reconstruct_planes",
     "direct_matmul",
     "spoga_matmul",
     "deas_matmul",
+    "sliced_matmul",
+    "sliced_dot_planes",
     "quantized_matmul",
 ]

@@ -18,6 +18,16 @@ implemented:
 
 Both reconstruct **exactly** for the full int8 range including -128
 (property-tested in tests/test_slicing.py).
+
+Beyond the paper's fixed MSN/LSN pair, :func:`slice_planes` generalizes the
+two's-complement decomposition to ``n_slices`` planes of ``slice_bits`` each
+(SCONNA / SiN-accelerator style slice-count vs. parallelism trade-offs):
+int8 -> 2x4b (the paper), int8 -> 4x2b, int4-in-int8 -> 1x4b, int16 -> 4x4b.
+Planes are emitted least-significant first; the top plane is the
+arithmetically-shifted *signed* remainder, so reconstruction
+``x == sum_j planes[j] << (j * slice_bits)`` is exact for ANY input value,
+while the per-plane range claim (top plane in ``[-2^(b-1), 2^(b-1)-1]``)
+additionally requires ``x`` to fit in ``n_slices * slice_bits`` bits.
 """
 
 from __future__ import annotations
@@ -34,6 +44,8 @@ __all__ = [
     "slice_sm",
     "reconstruct",
     "slice_nibbles",
+    "slice_planes",
+    "reconstruct_planes",
 ]
 
 
@@ -79,3 +91,57 @@ def slice_nibbles(x: jnp.ndarray, encoding: str = "tc"):
 def reconstruct(msn: jnp.ndarray, lsn: jnp.ndarray) -> jnp.ndarray:
     """Exact inverse of either slicing (computed in int32, cast to int8)."""
     return (msn.astype(jnp.int32) * RADIX + lsn.astype(jnp.int32)).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Generalized bit-plane slicing (arbitrary slice count / width)
+# ---------------------------------------------------------------------------
+
+_SIGNED_INTS = (jnp.int8, jnp.int16, jnp.int32)
+
+
+def _plane_dtype(slice_bits: int):
+    # An unsigned plane spans [0, 2^b - 1]; int8 holds it up to b == 7.
+    return jnp.int8 if slice_bits <= 7 else jnp.int16
+
+
+def slice_planes(
+    x: jnp.ndarray, n_slices: int, slice_bits: int
+) -> tuple[jnp.ndarray, ...]:
+    """Two's-complement decomposition into ``n_slices`` planes, LSB first.
+
+    ``x == sum_j planes[j] << (j * slice_bits)`` exactly, for any signed
+    integer input: lower planes are the unsigned ``slice_bits``-wide digits,
+    the top plane is the arithmetically-shifted signed remainder (it absorbs
+    every bit above the lower planes, so reconstruction never loses range).
+
+    ``slice_planes(x, 2, 4)`` is the paper's (LSN, MSN) pair; ``(x, 1, 4)``
+    passes an int4-in-int8 operand straight through; ``(x, 4, 4)`` handles
+    int16 on nibble-wide hardware.
+    """
+    if x.dtype not in _SIGNED_INTS:
+        raise TypeError(f"slice_planes expects a signed integer array, got {x.dtype}")
+    if n_slices < 1 or slice_bits < 1:
+        raise ValueError(f"need n_slices >= 1 and slice_bits >= 1, got "
+                         f"{n_slices}, {slice_bits}")
+    out_dtype = _plane_dtype(slice_bits)
+    mask = (1 << slice_bits) - 1
+    planes = []
+    for j in range(n_slices - 1):
+        digit = jnp.bitwise_and(jnp.right_shift(x, j * slice_bits), mask)
+        planes.append(digit.astype(out_dtype))
+    # The top plane stays in the input dtype: it carries every remaining high
+    # bit, which keeps reconstruction exact even when |x| exceeds the nominal
+    # n_slices * slice_bits budget (the narrow cast would silently wrap).
+    planes.append(jnp.right_shift(x, (n_slices - 1) * slice_bits))
+    return tuple(planes)
+
+
+def reconstruct_planes(
+    planes: tuple[jnp.ndarray, ...] | list, slice_bits: int, dtype=jnp.int32
+) -> jnp.ndarray:
+    """Exact inverse of :func:`slice_planes` (accumulated in int32)."""
+    acc = planes[0].astype(jnp.int32)
+    for j, p in enumerate(planes[1:], start=1):
+        acc = acc + (p.astype(jnp.int32) << (j * slice_bits))
+    return acc.astype(dtype)

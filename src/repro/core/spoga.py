@@ -28,13 +28,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.slicing import RADIX_BITS, slice_nibbles
+from repro.core.slicing import RADIX_BITS, slice_nibbles, slice_planes
 
 __all__ = [
     "direct_matmul",
     "spoga_matmul",
     "deas_matmul",
     "spoga_dot_slices",
+    "sliced_dot_planes",
+    "sliced_matmul",
     "quantized_matmul",
 ]
 
@@ -79,6 +81,66 @@ def spoga_matmul(x: jnp.ndarray, w: jnp.ndarray, *, encoding: str = "tc") -> jnp
     return spoga_dot_slices(xm, xl, wm, wl)
 
 
+def sliced_dot_planes(
+    x_planes,
+    w_planes,
+    slice_bits: int,
+    *,
+    dot_fn=None,
+    materialize: bool = False,
+) -> jnp.ndarray:
+    """Generic radix-weighted accumulation over bit-plane partial products.
+
+    ``O = sum_{i,j} (Xp_i . Wp_j) << ((i + j) * slice_bits)`` with planes
+    indexed LSB-first — the PWAB generalized to ``len(x_planes) *
+    len(w_planes)`` partials grouped into ``i + j`` radix lanes (each lane is
+    one homodyne sum, shifted once).  ``dot_fn`` defaults to the plain int32
+    contraction; MoE passes its expert-batched dot here so the radix logic
+    lives in exactly one place.  ``materialize=True`` pins every partial as a
+    real buffer (the DEAS prior-work baseline).
+    """
+    dot = dot_fn or _dot_i32
+    lanes: dict[int, list] = {}
+    for i, xp in enumerate(x_planes):
+        for j, wp in enumerate(w_planes):
+            lanes.setdefault(i + j, []).append(dot(xp, wp))
+    if materialize:
+        flat = [p for lane in sorted(lanes) for p in lanes[lane]]
+        flat = list(jax.lax.optimization_barrier(tuple(flat)))
+        for lane in sorted(lanes):
+            lanes[lane] = [flat.pop(0) for _ in lanes[lane]]
+    acc = None
+    for lane in sorted(lanes):
+        group = lanes[lane][0]
+        for p in lanes[lane][1:]:
+            group = group + p
+        term = group << (lane * slice_bits) if lane else group
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def sliced_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    n_x_slices: int = 2,
+    n_w_slices: int = 2,
+    slice_bits: int = RADIX_BITS,
+    materialize: bool = False,
+) -> jnp.ndarray:
+    """Bit-sliced integer GEMM with arbitrary plane counts, int32 out.
+
+    ``(2, 2, 4)`` is the paper's SPOGA W8A8 dataflow; ``(2, 1, 4)`` runs
+    4-bit weights against int8 activations with half the partial products;
+    ``(4, 4, 4)`` carries int16 operands on the same nibble hardware.
+    Exact vs. :func:`direct_matmul` in int32 (mod-2^32 on overflow, which
+    wraps identically in both).
+    """
+    xp = slice_planes(x, n_x_slices, slice_bits)
+    wp = slice_planes(w, n_w_slices, slice_bits)
+    return sliced_dot_planes(xp, wp, slice_bits, materialize=materialize)
+
+
 def deas_matmul(x: jnp.ndarray, w: jnp.ndarray, *, encoding: str = "tc") -> jnp.ndarray:
     """Prior-work baseline: 4 separate INT4 GEMMs, materialized, then DEAS.
 
@@ -109,13 +171,12 @@ def quantized_matmul(
 
     ``x_q``: (..., K) int8, row-wise scale ``x_scale`` (..., 1)
     ``w_q``: (K, N) int8, per-output-channel scale ``w_scale`` (N,) or (1, N)
+
+    Dispatch goes through the :mod:`repro.backends` registry (imported
+    lazily — backends builds on this module), so the same mode strings that
+    configure model layers select the dataflow here.
     """
-    if mode == "int8_spoga":
-        acc = spoga_matmul(x_q, w_q)
-    elif mode == "int8_deas":
-        acc = deas_matmul(x_q, w_q)
-    elif mode == "int8_direct":
-        acc = direct_matmul(x_q, w_q)
-    else:
-        raise ValueError(f"unknown quantized matmul mode {mode!r}")
+    from repro.backends import gemm_int  # lazy: avoids the import cycle
+
+    acc = gemm_int(x_q, w_q, quant_mode=mode)
     return (acc.astype(jnp.float32) * x_scale * jnp.reshape(w_scale, (1,) * (acc.ndim - 1) + (-1,))).astype(out_dtype)

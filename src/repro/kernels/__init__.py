@@ -6,8 +6,15 @@
 ``ref``         — pure-jnp exact oracles.
 """
 
-from repro.kernels.ops import int8_gemm
+from repro.kernels.ops import int8_gemm, int8_gemm_dequant
 from repro.kernels.spoga_gemm import spoga_gemm
+from repro.kernels.spoga_gemm_dequant import spoga_gemm_dequant
 from repro.kernels.deas_gemm import deas_gemm
 
-__all__ = ["int8_gemm", "spoga_gemm", "deas_gemm"]
+__all__ = [
+    "int8_gemm",
+    "int8_gemm_dequant",
+    "spoga_gemm",
+    "spoga_gemm_dequant",
+    "deas_gemm",
+]

@@ -29,6 +29,7 @@ from repro.kernels.spoga_gemm import (
     DEFAULT_BLOCK_M,
     DEFAULT_BLOCK_N,
     RADIX_BITS,
+    CompilerParams,
     _dot_i32,
     _slice_tc,
 )
@@ -60,7 +61,7 @@ def _nibble_gemm(x, w, bm, bn, bk, interpret):
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

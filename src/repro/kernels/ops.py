@@ -1,10 +1,12 @@
-"""Jit'd dispatch wrappers: Pallas TPU kernels with a jnp fallback.
+"""Jit'd dispatch wrappers over the GEMM backend registry.
 
-``int8_gemm(x, w, mode=...)`` is the single entry point the model layers
-call.  On TPU backends the Pallas kernels run natively; elsewhere (CPU
-dry-run / tests) either ``interpret=True`` executes the kernel body in
-Python, or the algebraically identical jnp path is lowered so that pjit
-sharding and cost analysis still see the same dataflow structure.
+``int8_gemm(x, w, mode=...)`` / ``int8_gemm_dequant(...)`` keep their seed
+signatures but no longer carry their own mode->function tables: they map
+the call onto a registered :class:`repro.backends.GemmBackend` and let the
+registry own strategy selection.  On TPU the Pallas kernels run natively;
+elsewhere either ``interpret=True`` executes the kernel body in Python, or
+the algebraically identical jnp path is lowered so that pjit sharding and
+cost analysis still see the same dataflow structure.
 """
 
 from __future__ import annotations
@@ -14,15 +16,23 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import spoga as _spoga
-from repro.kernels.deas_gemm import deas_gemm
-from repro.kernels.spoga_gemm import spoga_gemm
-
 MODES = ("int8_spoga", "int8_deas", "int8_direct")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _backend_name(mode: str, use_pallas: bool, interpret: bool) -> str:
+    """Registry name for a legacy (mode, use_pallas, interpret) triple."""
+    family = mode.rsplit("_", 1)[-1]
+    if family == "direct":
+        return "direct"
+    if interpret:  # kernel bodies forced through the interpreter
+        return {"spoga": "pallas_interpret", "deas": "pallas_deas_interpret"}[family]
+    if use_pallas:
+        return {"spoga": "pallas_spoga", "deas": "pallas_deas"}[family]
+    return {"spoga": "jnp_spoga", "deas": "jnp_deas"}[family]
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "use_pallas", "interpret"))
@@ -35,17 +45,17 @@ def int8_gemm(
     interpret: bool = False,
 ) -> jnp.ndarray:
     """INT8 (M,K) @ (K,N) -> int32 (M,N) under the selected dataflow."""
+    # Lazy import: repro.backends imports repro.kernels for its Pallas impls.
+    from repro.backends import gemm_int
+
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if mode == "int8_direct":
-        return _spoga.direct_matmul(x, w)
-    if use_pallas or interpret:
-        fn = spoga_gemm if mode == "int8_spoga" else deas_gemm
-        return fn(x, w, interpret=interpret or not _on_tpu())
-    fn = _spoga.spoga_matmul if mode == "int8_spoga" else _spoga.deas_matmul
-    return fn(x, w)
+    return gemm_int(
+        x, w, quant_mode=mode,
+        backend=_backend_name(mode, use_pallas, interpret),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -63,12 +73,18 @@ def int8_gemm_dequant(
     TPU: the ``spoga_gemm_dequant`` Pallas kernel (saves the (M, N) int32
     HBM round trip between GEMM and epilogue); elsewhere the jnp twin.
     """
+    from repro.backends import resolve_backend
+
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if use_pallas or interpret:
-        from repro.kernels.spoga_gemm_dequant import spoga_gemm_dequant
-
-        return spoga_gemm_dequant(x, w, x_scale, w_scale,
-                                  interpret=interpret or not _on_tpu())
-    acc = _spoga.spoga_matmul(x, w)
+    if interpret:
+        name = "pallas_interpret"
+    elif use_pallas:
+        name = "pallas_spoga_dequant"
+    else:
+        name = "jnp_spoga"
+    backend, spec = resolve_backend("int8_spoga", name)
+    if backend.gemm_dequant is not None:
+        return backend.gemm_dequant(x, w, x_scale, w_scale, spec)
+    acc = backend.gemm(x, w, spec)
     return acc.astype(jnp.float32) * x_scale * w_scale

@@ -30,6 +30,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 RADIX_BITS = 4
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this installation provides.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK_M = 256
 DEFAULT_BLOCK_N = 256
 DEFAULT_BLOCK_K = 512
@@ -42,31 +46,60 @@ def _slice_tc(t):
     return msn, lsn
 
 
+def _slice_planes_tile(t, n_slices: int, slice_bits: int):
+    """In-VMEM generalization of ``_slice_tc``: n planes, LSB first.
+
+    Planes are cast to int8 (they fit for slice_bits <= 7 when the operand
+    honors its n_slices * slice_bits budget) so every partial product runs
+    on the MXU's byte path regardless of the source operand width.
+    """
+    mask = (1 << slice_bits) - 1
+    planes = [
+        jnp.bitwise_and(jnp.right_shift(t, j * slice_bits), mask).astype(jnp.int8)
+        for j in range(n_slices - 1)
+    ]
+    planes.append(jnp.right_shift(t, (n_slices - 1) * slice_bits).astype(jnp.int8))
+    return planes
+
+
 def _dot_i32(a, b):
     return jax.lax.dot_general(
         a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
     )
 
 
-def spoga_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k_tiles: int):
-    """One grid step: slice tiles, 4 MXU partials, fused radix accumulate."""
+def _radix_accumulate(x_planes, w_planes, slice_bits: int):
+    """All plane-pair MXU partials, grouped into i+j radix lanes (PWAB)."""
+    lanes: dict[int, jnp.ndarray] = {}
+    for i, xp in enumerate(x_planes):
+        for j, wp in enumerate(w_planes):
+            d = _dot_i32(xp, wp)
+            lanes[i + j] = lanes[i + j] + d if (i + j) in lanes else d
+    acc = None
+    for lane, group in sorted(lanes.items()):
+        term = group << (lane * slice_bits) if lane else group
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def spoga_gemm_kernel(
+    x_ref, w_ref, o_ref, acc_ref, *,
+    n_k_tiles: int, n_x_slices: int = 2, n_w_slices: int = 2,
+    slice_bits: int = RADIX_BITS,
+):
+    """One grid step: slice tiles, plane-pair MXU partials, fused radix
+    accumulate.  The default (2, 2, 4) configuration is the paper's four
+    "wavelengths" with the 16^1 cross terms sharing one radix lane."""
 
     @pl.when(pl.program_id(2) == 0)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]  # (bm, bk) int8
-    w = w_ref[...]  # (bk, bn) int8
-    xm, xl = _slice_tc(x)
-    wm, wl = _slice_tc(w)
-
-    # Four "wavelengths". The 16^1 cross terms share one radix lane.
-    mm = _dot_i32(xm, wm)
-    cross = _dot_i32(xm, wl) + _dot_i32(xl, wm)
-    ll = _dot_i32(xl, wl)
+    xp = _slice_planes_tile(x_ref[...], n_x_slices, slice_bits)
+    wp = _slice_planes_tile(w_ref[...], n_w_slices, slice_bits)
 
     # PWAB: positional weighting fused into the charge accumulation.
-    acc_ref[...] += (mm << (2 * RADIX_BITS)) + (cross << RADIX_BITS) + ll
+    acc_ref[...] += _radix_accumulate(xp, wp, slice_bits)
 
     @pl.when(pl.program_id(2) == n_k_tiles - 1)
     def _emit():
@@ -75,7 +108,10 @@ def spoga_gemm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k_tiles: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+    static_argnames=(
+        "block_m", "block_n", "block_k", "interpret",
+        "n_x_slices", "n_w_slices", "slice_bits",
+    ),
 )
 def spoga_gemm(
     x: jnp.ndarray,
@@ -84,11 +120,19 @@ def spoga_gemm(
     block_m: int = DEFAULT_BLOCK_M,
     block_n: int = DEFAULT_BLOCK_N,
     block_k: int = DEFAULT_BLOCK_K,
+    n_x_slices: int = 2,
+    n_w_slices: int = 2,
+    slice_bits: int = RADIX_BITS,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """(M, K) int8 @ (K, N) int8 -> (M, N) int32, SPOGA fused dataflow."""
-    if x.dtype != jnp.int8 or w.dtype != jnp.int8:
-        raise TypeError(f"spoga_gemm expects int8 operands, got {x.dtype}, {w.dtype}")
+    """(M, K) @ (K, N) signed-int -> (M, N) int32, SPOGA fused dataflow.
+
+    Slice counts are per operand: ``(2, 2, 4)`` is the paper's W8A8 kernel,
+    ``(2, 1, 4)`` runs int4 weights in one plane (half the MXU partials),
+    ``(4, 4, 4)`` carries int16 operands on the same 4-bit hardware model.
+    """
+    if x.dtype not in (jnp.int8, jnp.int16) or w.dtype not in (jnp.int8, jnp.int16):
+        raise TypeError(f"spoga_gemm expects int8/int16 operands, got {x.dtype}, {w.dtype}")
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, f"contraction mismatch {k} vs {k2}"
@@ -101,7 +145,10 @@ def spoga_gemm(
     gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
 
     out = pl.pallas_call(
-        functools.partial(spoga_gemm_kernel, n_k_tiles=gk),
+        functools.partial(
+            spoga_gemm_kernel, n_k_tiles=gk, n_x_slices=n_x_slices,
+            n_w_slices=n_w_slices, slice_bits=slice_bits,
+        ),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -110,7 +157,7 @@ def spoga_gemm(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -26,22 +26,23 @@ from repro.kernels.spoga_gemm import (
     DEFAULT_BLOCK_M,
     DEFAULT_BLOCK_N,
     RADIX_BITS,
-    _dot_i32,
-    _slice_tc,
+    CompilerParams,
+    _radix_accumulate,
+    _slice_planes_tile,
 )
 
 
-def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k_tiles: int):
+def _kernel(
+    x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
+    n_k_tiles: int, n_x_slices: int, n_w_slices: int, slice_bits: int,
+):
     @pl.when(pl.program_id(2) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xm, xl = _slice_tc(x_ref[...])
-    wm, wl = _slice_tc(w_ref[...])
-    mm = _dot_i32(xm, wm)
-    cross = _dot_i32(xm, wl) + _dot_i32(xl, wm)
-    ll = _dot_i32(xl, wl)
-    acc_ref[...] += (mm << (2 * RADIX_BITS)) + (cross << RADIX_BITS) + ll
+    xp = _slice_planes_tile(x_ref[...], n_x_slices, slice_bits)
+    wp = _slice_planes_tile(w_ref[...], n_w_slices, slice_bits)
+    acc_ref[...] += _radix_accumulate(xp, wp, slice_bits)
 
     @pl.when(pl.program_id(2) == n_k_tiles - 1)
     def _emit():
@@ -52,7 +53,11 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k_tiles: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+    jax.jit,
+    static_argnames=(
+        "block_m", "block_n", "block_k", "interpret",
+        "n_x_slices", "n_w_slices", "slice_bits",
+    ),
 )
 def spoga_gemm_dequant(
     x: jnp.ndarray,
@@ -63,11 +68,18 @@ def spoga_gemm_dequant(
     block_m: int = DEFAULT_BLOCK_M,
     block_n: int = DEFAULT_BLOCK_N,
     block_k: int = DEFAULT_BLOCK_K,
+    n_x_slices: int = 2,
+    n_w_slices: int = 2,
+    slice_bits: int = RADIX_BITS,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """(M,K)i8 @ (K,N)i8 * (M,1)f32 * (1,N)f32 -> (M,N)f32, one fused pass."""
-    if x.dtype != jnp.int8 or w.dtype != jnp.int8:
-        raise TypeError("spoga_gemm_dequant expects int8 operands")
+    """(M,K) @ (K,N) int * (M,1)f32 * (1,N)f32 -> (M,N)f32, one fused pass.
+
+    Slice counts per operand as in :func:`spoga_gemm`; (2, 2, 4) is W8A8,
+    (2, 1, 4) serves ``w4a8`` layers with half the partial products.
+    """
+    if x.dtype not in (jnp.int8, jnp.int16) or w.dtype not in (jnp.int8, jnp.int16):
+        raise TypeError("spoga_gemm_dequant expects int8/int16 operands")
     m, k = x.shape
     k2, n = w.shape
     assert k == k2 and x_scale.shape == (m, 1) and w_scale.shape == (1, n)
@@ -81,7 +93,10 @@ def spoga_gemm_dequant(
     gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
 
     out = pl.pallas_call(
-        functools.partial(_kernel, n_k_tiles=gk),
+        functools.partial(
+            _kernel, n_k_tiles=gk, n_x_slices=n_x_slices,
+            n_w_slices=n_w_slices, slice_bits=slice_bits,
+        ),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -92,7 +107,7 @@ def spoga_gemm_dequant(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -137,10 +137,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, quant_mode: str,
              zero1: bool = True, fsdp: bool = True, microbatches: int = 1,
              calibrate: bool = True, remat_policy: str = "nothing",
              kv_cache_dtype: str = "bf16", grad_reduce_dtype: str = "f32",
+             gemm_backend: str | None = None,
              extra_tags: dict | None = None) -> dict:
     cfg = get_config(arch).with_(quant_mode=quant_mode,
                                  remat_policy=remat_policy,
-                                 kv_cache_dtype=kv_cache_dtype)
+                                 kv_cache_dtype=kv_cache_dtype,
+                                 gemm_backend=gemm_backend)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     tcfg = TrainConfig(zero1=zero1, fsdp=fsdp, microbatches=microbatches,
@@ -152,6 +154,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, quant_mode: str,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "devices": 512 if multi_pod else 256,
         "quant_mode": quant_mode,
+        "gemm_backend": gemm_backend,
         "zero1": zero1,
         "fsdp": fsdp,
         "microbatches": microbatches,
@@ -207,6 +210,8 @@ def main():
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--gemm-backend", default=None,
+                    help="GEMM backend registry name; default auto-selection")
     ap.add_argument("--no-zero1", action="store_true")
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
@@ -252,7 +257,8 @@ def main():
                 rec = run_cell(arch, shape_name, mp, args.quant_mode,
                                zero1=not args.no_zero1, fsdp=not args.no_fsdp,
                                microbatches=mb,
-                               calibrate=not args.no_calibrate)
+                               calibrate=not args.no_calibrate,
+                               gemm_backend=args.gemm_backend)
                 print(f"  ok: hbm/dev={rec.get('hbm_per_device_gib')}GiB "
                       f"flops/dev={rec['cost']['flops_per_device']:.3e} "
                       f"coll={rec['collectives']['total_bytes']:.3e}B "

@@ -46,6 +46,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--gemm-backend", default=None,
+                    help="GEMM backend registry name; default auto-selection")
     ap.add_argument("--kv-cache-dtype", default="bf16", choices=["bf16", "int8"],
                     help="int8: SPOGA-style byte-size KV cache (+scales)")
     args = ap.parse_args()
@@ -53,7 +55,8 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
-    cfg = cfg.with_(quant_mode=args.quant_mode, kv_cache_dtype=args.kv_cache_dtype)
+    cfg = cfg.with_(quant_mode=args.quant_mode, kv_cache_dtype=args.kv_cache_dtype,
+                    gemm_backend=args.gemm_backend)
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
     kt, ke = jax.random.split(key)

@@ -77,6 +77,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--gemm-backend", default=None,
+                    help="GEMM backend registry name (e.g. jnp_spoga, "
+                         "pallas_spoga_dequant, pallas_interpret); "
+                         "default: platform auto-selection")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -84,7 +88,7 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
-    cfg = cfg.with_(quant_mode=args.quant_mode)
+    cfg = cfg.with_(quant_mode=args.quant_mode, gemm_backend=args.gemm_backend)
     tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=5, total_steps=args.steps)
     _, losses = train_loop(cfg, tcfg, steps=args.steps, batch=args.batch,
                            seq=args.seq, ckpt_dir=args.ckpt_dir)

@@ -143,15 +143,15 @@ def attention_block(x, p, cfg: ModelConfig, positions, *, causal=True, window=No
     """Full self-attention over x: projections + RoPE + attend + output."""
     b, s, _ = x.shape
     hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
-    qm = cfg.quant_mode
-    q = linear(x, p["wq"], qm).reshape(b, s, hq, hd)
-    k = linear(x, p["wk"], qm).reshape(b, s, hkv, hd)
-    v = linear(x, p["wv"], qm).reshape(b, s, hkv, hd)
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    q = linear(x, p["wq"], qm, be).reshape(b, s, hq, hd)
+    k = linear(x, p["wk"], qm, be).reshape(b, s, hkv, hd)
+    v = linear(x, p["wv"], qm, be).reshape(b, s, hkv, hd)
     q = _constrain_heads(apply_rope(q, positions, cfg.rope_theta))
     k = _constrain_heads(apply_rope(k, positions, cfg.rope_theta))
     v = _constrain_heads(v)
     out = multihead_attention(q, k, v, causal=causal, window=window)
-    return linear(out.reshape(b, s, hq * hd), p["wo"], qm), (k, v)
+    return linear(out.reshape(b, s, hq * hd), p["wo"], qm, be), (k, v)
 
 
 def quantize_kv(t):
@@ -169,11 +169,11 @@ def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
     payloads (B, Smax, Hkv, D); pos (B,). Returns (out, new cache dict)."""
     b = x_t.shape[0]
     hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
-    qm = cfg.quant_mode
+    qm, be = cfg.quant_mode, cfg.gemm_backend
     int8_cache = cfg.kv_cache_dtype == "int8"
-    q = linear(x_t, p["wq"], qm).reshape(b, 1, hq, hd)
-    k = linear(x_t, p["wk"], qm).reshape(b, 1, hkv, hd)
-    v = linear(x_t, p["wv"], qm).reshape(b, 1, hkv, hd)
+    q = linear(x_t, p["wq"], qm, be).reshape(b, 1, hq, hd)
+    k = linear(x_t, p["wk"], qm, be).reshape(b, 1, hkv, hd)
+    v = linear(x_t, p["wv"], qm, be).reshape(b, 1, hkv, hd)
     posb = pos[:, None]
     q = apply_rope(q, posb, cfg.rope_theta)
     k = apply_rope(k, posb, cfg.rope_theta)
@@ -228,7 +228,7 @@ def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
     out = jnp.einsum("bcghs,bshd->bcghd", probs.astype(v_op.dtype), v_op,
                      preferred_element_type=jnp.float32)
     out = out.astype(x_t.dtype).reshape(b, 1, hq * hd)
-    return linear(out, p["wo"], qm), new_cache
+    return linear(out, p["wo"], qm, be), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -243,19 +243,19 @@ def cross_attention_block(x, enc_kv, p, cfg: ModelConfig):
     """x: (B, St, d) decoder states; enc_kv: precomputed (k, v) from encoder."""
     b, s, _ = x.shape
     hd, hq = cfg.resolved_head_dim, cfg.n_heads
-    qm = cfg.quant_mode
-    q = linear(x, p["wq"], qm).reshape(b, s, hq, hd)
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    q = linear(x, p["wq"], qm, be).reshape(b, s, hq, hd)
     k, v = enc_kv
     out = multihead_attention(q, k, v, causal=False, window=None)
-    return linear(out.reshape(b, s, hq * hd), p["wo"], qm)
+    return linear(out.reshape(b, s, hq * hd), p["wo"], qm, be)
 
 
 def encode_cross_kv(enc_out, p, cfg: ModelConfig):
     b, s, _ = enc_out.shape
     hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
-    qm = cfg.quant_mode
-    k = linear(enc_out, p["wk"], qm).reshape(b, s, hkv, hd)
-    v = linear(enc_out, p["wv"], qm).reshape(b, s, hkv, hd)
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    k = linear(enc_out, p["wk"], qm, be).reshape(b, s, hkv, hd)
+    v = linear(enc_out, p["wv"], qm, be).reshape(b, s, hkv, hd)
     return k, v
 
 
@@ -284,13 +284,13 @@ def init_mla(key, cfg: ModelConfig):
 def _mla_qkv(x, p, cfg, positions):
     m, h = cfg.mla, cfg.n_heads
     b, s, _ = x.shape
-    qm = cfg.quant_mode
-    cq = rmsnorm(linear(x, p["w_dq"], qm), p["q_norm"], cfg.norm_eps)
-    q = linear(cq, p["w_uq"], qm).reshape(b, s, h, -1)
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    cq = rmsnorm(linear(x, p["w_dq"], qm, be), p["q_norm"], cfg.norm_eps)
+    q = linear(cq, p["w_uq"], qm, be).reshape(b, s, h, -1)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
-    c_kv = rmsnorm(linear(x, p["w_dkv"], qm), p["kv_norm"], cfg.norm_eps)
-    k_rope = linear(x, p["w_kr"], qm).reshape(b, s, 1, m.qk_rope_head_dim)
+    c_kv = rmsnorm(linear(x, p["w_dkv"], qm, be), p["kv_norm"], cfg.norm_eps)
+    k_rope = linear(x, p["w_kr"], qm, be).reshape(b, s, 1, m.qk_rope_head_dim)
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
     return q_nope, q_rope, c_kv, k_rope
 
@@ -299,14 +299,14 @@ def mla_block(x, p, cfg: ModelConfig, positions):
     """Training / prefill MLA (non-absorbed: reconstruct K, V per token)."""
     m, h = cfg.mla, cfg.n_heads
     b, s, _ = x.shape
-    qm = cfg.quant_mode
+    qm, be = cfg.quant_mode, cfg.gemm_backend
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(x, p, cfg, positions)
-    k_nope = linear(c_kv, p["w_uk"], qm).reshape(b, s, h, m.qk_nope_head_dim)
-    v = linear(c_kv, p["w_uv"], qm).reshape(b, s, h, m.v_head_dim)
+    k_nope = linear(c_kv, p["w_uk"], qm, be).reshape(b, s, h, m.qk_nope_head_dim)
+    v = linear(c_kv, p["w_uv"], qm, be).reshape(b, s, h, m.v_head_dim)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))], axis=-1)
     out = multihead_attention(q, k, v, causal=True)
-    out = linear(out.reshape(b, s, h * m.v_head_dim), p["wo"], qm)
+    out = linear(out.reshape(b, s, h * m.v_head_dim), p["wo"], qm, be)
     return out, (c_kv, k_rope.reshape(b, s, m.qk_rope_head_dim))
 
 
@@ -315,7 +315,7 @@ def mla_decode(x_t, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
     cache holds only (c_kv, k_rope) — the MLA memory saving."""
     m, h = cfg.mla, cfg.n_heads
     b = x_t.shape[0]
-    qm = cfg.quant_mode
+    qm, be = cfg.quant_mode, cfg.gemm_backend
     q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(x_t, p, cfg, pos[:, None])
 
     ckv_cache = jax.vmap(
@@ -343,4 +343,4 @@ def mla_decode(x_t, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
     w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
     out = jnp.einsum("bchl,lhv->bchv", out_lat, w_uv.astype(jnp.float32))
     out = out.astype(x_t.dtype).reshape(b, 1, h * m.v_head_dim)
-    return linear(out, p["wo"], qm), (ckv_cache, krope_cache)
+    return linear(out, p["wo"], qm, be), (ckv_cache, krope_cache)

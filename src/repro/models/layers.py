@@ -2,9 +2,11 @@
 
 Functional style: ``init_*`` build param dicts, ``apply``-style functions
 are pure and traceable (the dry-run lowers them with ShapeDtypeStructs).
-Compute dtype is bf16 (params stored fp32, cast on use); integer modes run
-the SPOGA dataflows from :mod:`repro.core.spoga` with int32 accumulation
-(the paper's >=16-bit accumulation requirement) and dequantizing epilogue.
+Compute dtype is bf16 (params stored fp32, cast on use); integer modes
+route through the :mod:`repro.backends` registry — quantize -> fused GEMM
+-> dequant as one pipeline, with int32 accumulation (the paper's >=16-bit
+accumulation requirement) and the dequantizing epilogue fused into the
+kernel's single output write on the Pallas backends.
 """
 
 from __future__ import annotations
@@ -14,8 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import spoga as spoga_ops
-from repro.quant.qtensor import INT8_MAX
+from repro.backends import quantized_linear
 
 COMPUTE_DTYPE = jnp.bfloat16
 # Weights are STORED bf16 (fp32 master copies live in the optimizer state):
@@ -29,43 +30,25 @@ def truncated_normal_init(key, shape, scale=0.02, dtype=PARAM_DTYPE):
 
 
 # ---------------------------------------------------------------------------
-# Quantized linear: W8A8 dynamic quantization, SPOGA dataflow forward,
-# straight-through backward (QAT-compatible).
+# Quantized linear: dynamic quantization + registry-selected GEMM backend
+# forward, straight-through backward (QAT-compatible).
 # ---------------------------------------------------------------------------
 
-def _dynamic_quant(x, axis):
-    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
-    q = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-    return q, scale
+def _quantized_forward(x, w, mode, backend):
+    """x (..., K) fp, w (K, N) fp -> (..., N) fp via the backend pipeline."""
+    return quantized_linear(x, w, mode, backend=backend, out_dtype=x.dtype)
 
 
-def _int8_forward(x, w, mode):
-    """x (..., K) fp, w (K, N) fp -> (..., N) fp via the int8 dataflow."""
-    xf = x.astype(jnp.float32)
-    wf = w.astype(jnp.float32)
-    xq, xs = _dynamic_quant(xf, axis=-1)
-    wq, ws = _dynamic_quant(wf, axis=0)
-    lead = xq.shape[:-1]
-    acc = {
-        "int8_spoga": spoga_ops.spoga_matmul,
-        "int8_deas": spoga_ops.deas_matmul,
-        "int8_direct": spoga_ops.direct_matmul,
-    }[mode](xq.reshape(-1, xq.shape[-1]), wq)
-    acc = acc.reshape(*lead, -1)
-    return (acc.astype(jnp.float32) * xs * ws).astype(x.dtype)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _qmatmul_ste(x, w, mode: str, backend):
+    return _quantized_forward(x, w, mode, backend)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _qmatmul_ste(x, w, mode: str):
-    return _int8_forward(x, w, mode)
+def _qmatmul_fwd(x, w, mode, backend):
+    return _quantized_forward(x, w, mode, backend), (x, w)
 
 
-def _qmatmul_fwd(x, w, mode):
-    return _int8_forward(x, w, mode), (x, w)
-
-
-def _qmatmul_bwd(mode, res, g):
+def _qmatmul_bwd(mode, backend, res, g):
     # Straight-through: gradients as if the matmul were full-precision.
     x, w = res
     gf = g.astype(jnp.float32)
@@ -79,13 +62,18 @@ def _qmatmul_bwd(mode, res, g):
 _qmatmul_ste.defvjp(_qmatmul_fwd, _qmatmul_bwd, symbolic_zeros=False)
 
 
-def linear(x, w, quant_mode: str = "bf16"):
-    """The single matmul entry point for every model layer."""
+def linear(x, w, quant_mode: str = "bf16", backend: str | None = None):
+    """The single matmul entry point for every model layer.
+
+    ``backend`` is an optional GEMM-backend registry name (from
+    ``ModelConfig.gemm_backend`` / ``--gemm-backend``); ``None`` defers to
+    the registry's platform auto-selection.
+    """
     if quant_mode == "bf16":
         return jnp.einsum(
             "...k,kn->...n", x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE)
         )
-    return _qmatmul_ste(x.astype(COMPUTE_DTYPE), w, quant_mode)
+    return _qmatmul_ste(x.astype(COMPUTE_DTYPE), w, quant_mode, backend)
 
 
 def init_linear(key, d_in, d_out, scale=0.02):
@@ -134,10 +122,10 @@ def init_glu_mlp(key, d_model, d_ff):
     }
 
 
-def glu_mlp(x, p, act="silu", quant_mode="bf16"):
-    g = _act(act)(linear(x, p["w_gate"], quant_mode))
-    u = linear(x, p["w_up"], quant_mode)
-    return linear(g * u, p["w_down"], quant_mode)
+def glu_mlp(x, p, act="silu", quant_mode="bf16", backend=None):
+    g = _act(act)(linear(x, p["w_gate"], quant_mode, backend))
+    u = linear(x, p["w_up"], quant_mode, backend)
+    return linear(g * u, p["w_down"], quant_mode, backend)
 
 
 def init_mlp(key, d_model, d_ff):
@@ -145,8 +133,11 @@ def init_mlp(key, d_model, d_ff):
     return {"w_in": init_linear(k1, d_model, d_ff), "w_out": init_linear(k2, d_ff, d_model)}
 
 
-def mlp(x, p, act="gelu", quant_mode="bf16"):
-    return linear(_act(act)(linear(x, p["w_in"], quant_mode)), p["w_out"], quant_mode)
+def mlp(x, p, act="gelu", quant_mode="bf16", backend=None):
+    return linear(
+        _act(act)(linear(x, p["w_in"], quant_mode, backend)),
+        p["w_out"], quant_mode, backend,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -16,17 +16,18 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.backends import dynamic_quant, parse_quant_mode
+from repro.backends.pipeline import effective_bits
 from repro.configs.base import ModelConfig
 from repro.core import spoga as spoga_ops
+from repro.core.slicing import slice_planes
 from repro.models.layers import (
     COMPUTE_DTYPE,
     _act,
-    _dynamic_quant,
     glu_mlp,
     init_glu_mlp,
     truncated_normal_init,
 )
-from repro.quant.qtensor import INT8_MAX
 
 
 def init_moe(key, cfg: ModelConfig):
@@ -47,19 +48,29 @@ def init_moe(key, cfg: ModelConfig):
     return p
 
 
-def _grouped_matmul(x, w, quant_mode):
+def _grouped_matmul(x, w, quant_mode, backend=None):
     """x: (..., E, C, K), w: (E, K, N) -> (..., E, C, N).
 
     The expert dim stays aligned with the weights' leading dim (sharded
     over "model" = expert parallelism); any leading dims (the batch rows
     of the local-capacity dispatch) stay sharded over "data".
-    Int8 paths nibble-slice like SPOGA.
+    Integer paths bit-slice per the mode's QuantSpec and reuse the generic
+    radix accumulation from :mod:`repro.core.spoga` with this expert-batched
+    contraction — the Pallas kernels are strictly 2-D, so the grouped GEMM
+    keeps the jnp dataflow (sharded by pjit) for every mode family; an
+    explicit ``backend`` override still picks the dataflow family.
     """
     if quant_mode == "bf16":
         return jnp.einsum("...eck,ekn->...ecn",
                           x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE))
-    xq, xs = _dynamic_quant(x.astype(jnp.float32), axis=-1)
-    wq, ws = _dynamic_quant(w.astype(jnp.float32), axis=1)
+    spec, family = parse_quant_mode(quant_mode)
+    if backend is not None:
+        from repro.backends import get_backend
+
+        family = get_backend(backend).family
+    a_bits, w_bits = effective_bits(spec, x.shape[-1])
+    xq, xs = dynamic_quant(x.astype(jnp.float32), axis=-1, bits=a_bits)
+    wq, ws = dynamic_quant(w.astype(jnp.float32), axis=1, bits=w_bits)
 
     e_axis = x.ndim - 3
 
@@ -72,26 +83,24 @@ def _grouped_matmul(x, w, quant_mode):
         )  # -> (E, ..., C, N)
         return jnp.moveaxis(out, 0, e_axis)
 
-    if quant_mode == "int8_direct":
+    if family == "direct":
         acc = dot(xq, wq)
     else:
-        xm, xl = spoga_ops.slice_nibbles(xq, "tc")
-        wm, wl = spoga_ops.slice_nibbles(wq, "tc")
-        if quant_mode == "int8_spoga":
-            acc = (dot(xm, wm) << 8) + ((dot(xm, wl) + dot(xl, wm)) << 4) + dot(xl, wl)
-        else:  # int8_deas: materialized partials
-            parts = jax.lax.optimization_barrier(
-                (dot(xm, wm), dot(xm, wl), dot(xl, wm), dot(xl, wl))
-            )
-            acc = (parts[0] << 8) + ((parts[1] + parts[2]) << 4) + parts[3]
+        acc = spoga_ops.sliced_dot_planes(
+            slice_planes(xq, spec.n_a_slices, spec.slice_bits),
+            slice_planes(wq, spec.n_w_slices, spec.slice_bits),
+            spec.slice_bits,
+            dot_fn=dot,
+            materialize=(family == "deas"),
+        )
     out = acc.astype(jnp.float32) * xs * ws
     return out.astype(COMPUTE_DTYPE)
 
 
-def _grouped_glu(x, p, act, quant_mode):
-    g = _act(act)(_grouped_matmul(x, p["experts_gate"], quant_mode))
-    u = _grouped_matmul(x, p["experts_up"], quant_mode)
-    return _grouped_matmul(g * u, p["experts_down"], quant_mode)
+def _grouped_glu(x, p, act, quant_mode, backend=None):
+    g = _act(act)(_grouped_matmul(x, p["experts_gate"], quant_mode, backend))
+    u = _grouped_matmul(x, p["experts_up"], quant_mode, backend)
+    return _grouped_matmul(g * u, p["experts_down"], quant_mode, backend)
 
 
 def moe_ffn(x, p, cfg: ModelConfig):
@@ -141,7 +150,7 @@ def moe_ffn(x, p, cfg: ModelConfig):
     bufs, dest, sort_idx = jax.vmap(route_row)(x, topi)     # (B, E, C, d), ...
     bufs = _constrain_ep(bufs)                              # B->data, E->model
 
-    y = _grouped_glu(bufs, p, cfg.act, cfg.quant_mode)      # (B, E, C, d)
+    y = _grouped_glu(bufs, p, cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)      # (B, E, C, d)
 
     def combine_row(y_row, dest_row, sort_idx_row, topw_row):
         y_flat = jnp.concatenate(
@@ -154,7 +163,7 @@ def moe_ffn(x, p, cfg: ModelConfig):
     out = jax.vmap(combine_row)(y, dest, sort_idx, topw).astype(x.dtype)
 
     if m.num_shared_experts:
-        out = out + glu_mlp(x, p["shared"], cfg.act, cfg.quant_mode)
+        out = out + glu_mlp(x, p["shared"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
 
     # Switch-style load-balance aux loss (global over B*S tokens).
     dispatch_frac = jnp.mean(
@@ -206,9 +215,10 @@ def moe_ffn_reference(x, p, cfg: ModelConfig):
     topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
     gate = jnp.zeros_like(probs).at[jnp.arange(xf.shape[0])[:, None], topi].set(topw)
     ys = _grouped_glu(
-        jnp.broadcast_to(xf, (m.num_experts,) + xf.shape), p, cfg.act, cfg.quant_mode
+        jnp.broadcast_to(xf, (m.num_experts,) + xf.shape), p, cfg.act,
+        cfg.quant_mode, backend=cfg.gemm_backend,
     )  # (E, T, d)
     out = jnp.einsum("etd,te->td", ys.astype(jnp.float32), gate).astype(x.dtype)
     if m.num_shared_experts:
-        out = out + glu_mlp(xf, p["shared"], cfg.act, cfg.quant_mode)
+        out = out + glu_mlp(xf, p["shared"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
     return out.reshape(b, s, d)

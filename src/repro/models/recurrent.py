@@ -51,9 +51,9 @@ def init_rglru(key, cfg: ModelConfig):
     }
 
 
-def _rglru_coeffs(xb, p, quant_mode):
-    r = jax.nn.sigmoid(linear(xb, p["w_rec_gate"], quant_mode).astype(jnp.float32))
-    i = jax.nn.sigmoid(linear(xb, p["w_in_gate"], quant_mode).astype(jnp.float32))
+def _rglru_coeffs(xb, p, quant_mode, backend=None):
+    r = jax.nn.sigmoid(linear(xb, p["w_rec_gate"], quant_mode, backend).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(xb, p["w_in_gate"], quant_mode, backend).astype(jnp.float32))
     log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r          # (B, S, lru), <= 0
     a = jnp.exp(log_a)
     gated_x = i * xb.astype(jnp.float32)
@@ -61,9 +61,9 @@ def _rglru_coeffs(xb, p, quant_mode):
     return a, b
 
 
-def rglru_scan(xb, p, quant_mode, h0=None):
+def rglru_scan(xb, p, quant_mode, h0=None, backend=None):
     """xb: (B, S, lru) conv'd branch -> (y (B,S,lru) fp32, h_last (B,lru))."""
-    a, b = _rglru_coeffs(xb, p, quant_mode)
+    a, b = _rglru_coeffs(xb, p, quant_mode, backend)
     if h0 is not None:
         # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
         b = b.at[:, 0, :].add(a[:, 0, :] * h0)
@@ -79,13 +79,13 @@ def rglru_scan(xb, p, quant_mode, h0=None):
 
 def rglru_block(x, p, cfg: ModelConfig, state=None):
     """Griffin recurrent block. state: None | {"h": (B,lru), "conv": (B,W-1,lru)}."""
-    qm = cfg.quant_mode
-    gate = jax.nn.gelu(linear(x, p["w_gate_branch"], qm).astype(jnp.float32))
-    xb_raw = linear(x, p["w_x_branch"], qm)
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    gate = jax.nn.gelu(linear(x, p["w_gate_branch"], qm, be).astype(jnp.float32))
+    xb_raw = linear(x, p["w_x_branch"], qm, be)
     xb = causal_conv1d(xb_raw, p["conv_w"])
-    h, h_last = rglru_scan(xb, p, qm, None)
+    h, h_last = rglru_scan(xb, p, qm, None, backend=be)
     y = (gate * h).astype(x.dtype)
-    out = linear(y, p["w_out"], qm)
+    out = linear(y, p["w_out"], qm, be)
     new_state = None
     if state is not None:
         # decode continues from here: conv state holds the last W-1 *raw*
@@ -98,14 +98,14 @@ def rglru_block(x, p, cfg: ModelConfig, state=None):
 
 def rglru_decode(x_t, p, cfg: ModelConfig, state):
     """One step. x_t: (B, 1, d); state {"h": (B,lru), "conv": (B,W-1,lru)}."""
-    qm = cfg.quant_mode
-    gate = jax.nn.gelu(linear(x_t, p["w_gate_branch"], qm).astype(jnp.float32))
-    xb = linear(x_t, p["w_x_branch"], qm)[:, 0, :]
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    gate = jax.nn.gelu(linear(x_t, p["w_gate_branch"], qm, be).astype(jnp.float32))
+    xb = linear(x_t, p["w_x_branch"], qm, be)[:, 0, :]
     xb_c, conv_state = conv1d_decode(xb, state["conv"], p["conv_w"])
-    a, b = _rglru_coeffs(xb_c[:, None, :], p, qm)
+    a, b = _rglru_coeffs(xb_c[:, None, :], p, qm, be)
     h = a[:, 0, :] * state["h"] + b[:, 0, :]
     y = (gate[:, 0, :] * h).astype(x_t.dtype)
-    out = linear(y[:, None, :], p["w_out"], qm)
+    out = linear(y[:, None, :], p["w_out"], qm, be)
     return out, {"h": h, "conv": conv_state}
 
 
@@ -161,7 +161,7 @@ def _mlstm_chunk_math(q, k, v, logf, logi, C0, n0):
 
 def mlstm_block(x, p, cfg: ModelConfig, state=None):
     """x: (B, S, d) -> (out, new_state). Chunkwise-parallel mLSTM."""
-    qm = cfg.quant_mode
+    qm, be = cfg.quant_mode, cfg.gemm_backend
     b, s, d = x.shape
     h_heads = cfg.n_heads
     dh = d // h_heads
@@ -169,14 +169,14 @@ def mlstm_block(x, p, cfg: ModelConfig, state=None):
     def heads(t):
         return t.reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
 
-    q = heads(linear(x, p["wq"], qm)) * (dh ** -0.5)
-    k = heads(linear(x, p["wk"], qm)) * (dh ** -0.5)
-    v = heads(linear(x, p["wv"], qm))
+    q = heads(linear(x, p["wq"], qm, be)) * (dh ** -0.5)
+    k = heads(linear(x, p["wk"], qm, be)) * (dh ** -0.5)
+    v = heads(linear(x, p["wv"], qm, be))
     logi = jax.nn.log_sigmoid(
-        linear(x, p["w_igate"], qm).astype(jnp.float32)
+        linear(x, p["w_igate"], qm, be).astype(jnp.float32)
     ).transpose(0, 2, 1)
     logf = jax.nn.log_sigmoid(
-        linear(x, p["w_fgate"], qm).astype(jnp.float32)
+        linear(x, p["w_fgate"], qm, be).astype(jnp.float32)
     ).transpose(0, 2, 1)
 
     L = min(_MLSTM_CHUNK, s)
@@ -202,15 +202,15 @@ def mlstm_block(x, p, cfg: ModelConfig, state=None):
     (C_f, n_f), hs = jax.lax.scan(body, (C0, n0), (qc, kc, vc, ffc, fic))
     h = hs.transpose(1, 2, 0, 3, 4).reshape(b, h_heads, s, dh)
     h = h.transpose(0, 2, 1, 3).reshape(b, s, d)
-    o = jax.nn.sigmoid(linear(x, p["w_ogate"], qm).astype(jnp.float32))
-    out = linear((o * h).astype(x.dtype), p["w_out"], qm)
+    o = jax.nn.sigmoid(linear(x, p["w_ogate"], qm, be).astype(jnp.float32))
+    out = linear((o * h).astype(x.dtype), p["w_out"], qm, be)
     new_state = None if state is None else {"C": C_f, "n": n_f}
     return out, new_state
 
 
 def mlstm_decode(x_t, p, cfg: ModelConfig, state):
     """One step recurrent mLSTM. state: {"C": (B,H,dh,dh), "n": (B,H,dh)}."""
-    qm = cfg.quant_mode
+    qm, be = cfg.quant_mode, cfg.gemm_backend
     b, _, d = x_t.shape
     h_heads = cfg.n_heads
     dh = d // h_heads
@@ -218,18 +218,18 @@ def mlstm_decode(x_t, p, cfg: ModelConfig, state):
     def heads(t):
         return t.reshape(b, h_heads, dh).astype(jnp.float32)
 
-    q = heads(linear(x_t, p["wq"], qm)[:, 0]) * (dh ** -0.5)
-    k = heads(linear(x_t, p["wk"], qm)[:, 0]) * (dh ** -0.5)
-    v = heads(linear(x_t, p["wv"], qm)[:, 0])
-    i = jax.nn.sigmoid(linear(x_t, p["w_igate"], qm).astype(jnp.float32))[:, 0][..., None]
-    f = jax.nn.sigmoid(linear(x_t, p["w_fgate"], qm).astype(jnp.float32))[:, 0][..., None]
+    q = heads(linear(x_t, p["wq"], qm, be)[:, 0]) * (dh ** -0.5)
+    k = heads(linear(x_t, p["wk"], qm, be)[:, 0]) * (dh ** -0.5)
+    v = heads(linear(x_t, p["wv"], qm, be)[:, 0])
+    i = jax.nn.sigmoid(linear(x_t, p["w_igate"], qm, be).astype(jnp.float32))[:, 0][..., None]
+    f = jax.nn.sigmoid(linear(x_t, p["w_fgate"], qm, be).astype(jnp.float32))[:, 0][..., None]
     C = f[..., None] * state["C"] + (i * k)[..., :, None] * v[..., None, :]
     n = f * state["n"] + i * k
     num = jnp.einsum("bhd,bhde->bhe", q, C)
     den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))[..., None], 1.0)
     h = (num / den).reshape(b, 1, d)
-    o = jax.nn.sigmoid(linear(x_t, p["w_ogate"], qm).astype(jnp.float32))
-    out = linear((o * h).astype(x_t.dtype), p["w_out"], qm)
+    o = jax.nn.sigmoid(linear(x_t, p["w_ogate"], qm, be).astype(jnp.float32))
+    out = linear((o * h).astype(x_t.dtype), p["w_out"], qm, be)
     return out, {"C": C, "n": n}
 
 
@@ -264,11 +264,11 @@ def _slstm_step(p, cfg, carry, zifo_t):
 
 
 def slstm_block(x, p, cfg: ModelConfig, state=None):
-    qm = cfg.quant_mode
+    qm, be = cfg.quant_mode, cfg.gemm_backend
     b, s, d = x.shape
     hh = cfg.n_heads
     dh = d // hh
-    zifo = linear(x, p["w_zifo"], qm).astype(jnp.float32).reshape(b, s, 4, hh, dh)
+    zifo = linear(x, p["w_zifo"], qm, be).astype(jnp.float32).reshape(b, s, 4, hh, dh)
     if state is None:
         zeros = jnp.zeros((b, hh, dh), jnp.float32)
         carry = (zeros, zeros, zeros)
@@ -280,18 +280,18 @@ def slstm_block(x, p, cfg: ModelConfig, state=None):
 
     (c, n, h_last), hs = jax.lax.scan(step, carry, zifo.transpose(1, 0, 2, 3, 4))
     h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
-    out = linear(h, p["w_out"], qm)
+    out = linear(h, p["w_out"], qm, be)
     new_state = None if state is None else {"c": c, "n": n, "h": h_last}
     return out, new_state
 
 
 def slstm_decode(x_t, p, cfg: ModelConfig, state):
-    qm = cfg.quant_mode
+    qm, be = cfg.quant_mode, cfg.gemm_backend
     b, _, d = x_t.shape
     hh = cfg.n_heads
     dh = d // hh
-    zifo = linear(x_t, p["w_zifo"], qm).astype(jnp.float32).reshape(b, 4, hh, dh)
+    zifo = linear(x_t, p["w_zifo"], qm, be).astype(jnp.float32).reshape(b, 4, hh, dh)
     carry = (state["c"], state["n"], state["h"])
     (c, n, h), h_out = _slstm_step(p, cfg, carry, zifo)
-    out = linear(h_out.reshape(b, 1, d).astype(x_t.dtype), p["w_out"], qm)
+    out = linear(h_out.reshape(b, 1, d).astype(x_t.dtype), p["w_out"], qm, be)
     return out, {"c": c, "n": n, "h": h}

@@ -91,20 +91,20 @@ def apply_block(x, p, kind: str, cfg: ModelConfig, positions, *, causal=True):
         if kind == "moe":
             f, aux = moe_mod.moe_ffn(h2, p["moe"], cfg)
         else:
-            f = sp_exit(glu_mlp(sp_enter(h2), p["mlp"], cfg.act, cfg.quant_mode))
+            f = sp_exit(glu_mlp(sp_enter(h2), p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend))
         x = x + f
     elif kind == "mla":
         a, ckv = attn.mla_block(sp_enter(h), p["attn"], cfg, positions)
         x = x + sp_exit(a)
         cache_out = ckv
         h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
-        x = x + sp_exit(glu_mlp(sp_enter(h2), p["mlp"], cfg.act, cfg.quant_mode))
+        x = x + sp_exit(glu_mlp(sp_enter(h2), p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend))
     elif kind == "rglru":
         a, state = rec.rglru_block(h, p["cell"], cfg, None)
         x = x + a
         cache_out = state
         h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
-        x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+        x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
     elif kind == "mlstm":
         a, state = rec.mlstm_block(h, p["cell"], cfg, None)
         x = x + a
@@ -134,7 +134,7 @@ def apply_block_prefill(x, p, kind: str, cfg: ModelConfig, positions, cache_temp
         x = x + a
         if kind_e == "rglru":
             h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
-            x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+            x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
         state = jax.tree_util.tree_map(
             lambda tpl, v: v.astype(tpl.dtype), cache_template, state
         )
@@ -185,20 +185,20 @@ def apply_block_decode(x_t, p, kind: str, cfg: ModelConfig, cache, pos):
         if kind == "moe":
             f, _ = moe_mod.moe_ffn(h2, p["moe"], cfg)
         else:
-            f = glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+            f = glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
         x_t = x_t + f
     elif kind == "mla":
         a, (ckv, kr) = attn.mla_decode(h, p["attn"], cfg, cache["ckv"], cache["kr"], pos)
         x_t = x_t + a
         cache = {**cache, "ckv": ckv, "kr": kr}
         h2 = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
-        x_t = x_t + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+        x_t = x_t + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
     elif kind == "rglru":
         a, state = rec.rglru_decode(h, p["cell"], cfg, cache)
         x_t = x_t + a
         cache = state
         h2 = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
-        x_t = x_t + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode)
+        x_t = x_t + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
     elif kind == "mlstm":
         a, state = rec.mlstm_decode(h, p["cell"], cfg, cache)
         x_t = x_t + a
@@ -227,6 +227,24 @@ def layer_layout(cfg: ModelConfig, n_layers=None):
     return lead, n_periods, tail_kinds
 
 
+@jax.custom_vjp
+def _opt_barrier(h):
+    return jax.lax.optimization_barrier(h)
+
+
+def _opt_barrier_fwd(h):
+    return _opt_barrier(h), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+# optimization_barrier has no differentiation rule on some jax versions
+# (0.4.x); a barrier is linear, so its VJP is a barrier on the cotangent.
+_opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 def scan_periods(x, stacked_params, cfg: ModelConfig, positions, *, causal=True):
     """Run n_periods x pattern via lax.scan. stacked_params: tuple per slot."""
     from repro.runtime.sharding import constrain_activations
@@ -238,7 +256,7 @@ def scan_periods(x, stacked_params, cfg: ModelConfig, positions, *, causal=True)
         h = constrain_activations(h)  # SP: carry saved seq-sharded for bwd
         # barrier: stops XLA hoisting the rmsnorm f32 upcast across the
         # remat boundary (it would store the carry stack at 2x bytes)
-        h = jax.lax.optimization_barrier(h)
+        h = _opt_barrier(h)
         for s, kind in enumerate(pattern):
             h, a, _ = apply_block(h, slot_params[s], kind, cfg, positions, causal=causal)
             aux = aux + a

@@ -1,8 +1,12 @@
-"""Quantized tensor container + symmetric int8 quantization.
+"""Quantized tensor container + symmetric integer quantization.
 
-Symmetric per-axis scaling: ``x ~= data * scale`` with ``data`` int8 and
-``scale = absmax / 127``.  Registered as a pytree so QTensors flow through
-jit/pjit/shard_map and checkpoints unchanged.
+Symmetric per-axis scaling: ``x ~= data * scale`` with ``data`` a signed
+integer array and ``scale = absmax / qmax`` where ``qmax = 2^(bits-1) - 1``
+(127 for the default int8).  Registered as a pytree so QTensors flow
+through jit/pjit/shard_map and checkpoints unchanged.  ``bits`` follows
+the backend registry's QuantSpec widths: 8 -> int8 storage (the paper's
+byte-size operands), 4 -> int4-in-int8 (one 4-bit slice plane), 16 ->
+int16 storage (four planes on nibble hardware).
 """
 
 from __future__ import annotations
@@ -15,12 +19,20 @@ import jax.numpy as jnp
 INT8_MAX = 127.0
 
 
+def qmax_for_bits(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def storage_dtype(bits: int):
+    return jnp.int8 if bits <= 8 else jnp.int16
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QTensor:
-    """int8 data + broadcastable fp32 scale (``x ~= data * scale``)."""
+    """signed-int data + broadcastable fp32 scale (``x ~= data * scale``)."""
 
-    data: jnp.ndarray   # int8
+    data: jnp.ndarray   # int8 (bits <= 8) or int16
     scale: jnp.ndarray  # fp32, broadcastable against ``data``
 
     @property
@@ -42,24 +54,28 @@ class QTensor:
         return cls(*children)
 
 
-def _absmax_scale(x: jnp.ndarray, axis) -> jnp.ndarray:
+def _absmax_scale(x: jnp.ndarray, axis, qmax: float = INT8_MAX) -> jnp.ndarray:
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
-    return jnp.maximum(absmax, 1e-8) / INT8_MAX
+    return jnp.maximum(absmax, 1e-8) / qmax
 
 
-def quantize(x: jnp.ndarray, axis=None, scale: jnp.ndarray | None = None) -> QTensor:
-    """Symmetric int8 quantization.
+def quantize(
+    x: jnp.ndarray, axis=None, scale: jnp.ndarray | None = None, bits: int = 8
+) -> QTensor:
+    """Symmetric integer quantization.
 
     ``axis``: reduction axis/axes for the absmax (e.g. ``0`` for
     per-output-channel weights ``(K, N)``; ``-1`` for per-row activations).
     ``None`` means per-tensor.  A precomputed calibration ``scale`` wins.
+    ``bits``: operand width; values clip to ±(2^(bits-1)-1).
     """
+    qmax = qmax_for_bits(bits)
     if scale is None:
         if axis is None:
             axis = tuple(range(x.ndim))
-        scale = _absmax_scale(x, axis)
-    data = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -INT8_MAX, INT8_MAX)
-    return QTensor(data.astype(jnp.int8), scale)
+        scale = _absmax_scale(x, axis, qmax)
+    data = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return QTensor(data.astype(storage_dtype(bits)), scale)
 
 
 def dequantize(q: QTensor, dtype=jnp.float32) -> jnp.ndarray:

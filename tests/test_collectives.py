@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.runtime.collectives import compressed_psum_mean, psum_mean
+from repro.runtime.collectives import compressed_psum_mean, psum_mean, shard_map
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 1, reason="needs at least one device")
@@ -16,7 +16,7 @@ pytestmark = pytest.mark.skipif(
 
 def _run_shardmap(fn, n_dev, *args):
     mesh = jax.make_mesh((n_dev,), ("data",))
-    sharded = jax.shard_map(
+    sharded = shard_map(
         fn, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
     return sharded(*args)
 

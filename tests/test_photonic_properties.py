@@ -1,5 +1,8 @@
 """Property tests on the photonic models' physical invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property suite is optional-dep gated
 from hypothesis import given, settings, strategies as st
 
 from repro.core.accelerator_sim import AccelConfig, simulate

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property suite is optional-dep gated
 from hypothesis import given, settings, strategies as st
 
 from repro.quant.calibrate import absmax_calibrate, percentile_calibrate

@@ -74,7 +74,7 @@ def test_grad_compression_trains():
 
     from repro.models import lm_loss
     from repro.optim.optimizers import adamw_init, adamw_update
-    from repro.runtime.collectives import compressed_psum_mean
+    from repro.runtime.collectives import compressed_psum_mean, shard_map
 
     cfg = reduced(get_config("llama3.2-1b")).with_(n_layers=2, remat=False)
     tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=3, total_steps=25)
@@ -92,7 +92,7 @@ def test_grad_compression_trains():
             params, opt, metrics = adamw_update(params, g, opt, tcfg)
             return params, opt, loss
 
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(), P("data")),
             out_specs=(P(), P(), P()),
