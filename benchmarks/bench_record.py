@@ -1,0 +1,71 @@
+"""Shared benchmark-record bookkeeping: stamp runs, append across PRs.
+
+Every benchmark writes a ``BENCH_*.json`` of the form
+
+    {"benchmark": "<name>", "runs": [<run>, <run>, ...]}
+
+where each run is stamped with git SHA + UTC date + platform, and new runs
+are *appended* so the file accumulates the perf trajectory across PRs
+instead of overwriting it.  Legacy single-run files (a dict with a
+top-level ``records`` list) are migrated into the first ``runs`` entry on
+the next append.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import pathlib
+import subprocess
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).parent, capture_output=True, text=True,
+            timeout=10, check=True,
+        )
+        return out.stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def run_stamp() -> dict:
+    import jax
+
+    return {
+        "git_sha": git_sha(),
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "platform": jax.default_backend(),
+        "jax_version": jax.__version__,
+    }
+
+
+def append_run(path, benchmark: str, run: dict) -> dict:
+    """Stamp ``run`` and append it to ``path``. Returns the stamped run."""
+    path = pathlib.Path(path)
+    run = {**run_stamp(), **run}
+    doc = {"benchmark": benchmark, "runs": []}
+    if path.exists():
+        try:
+            old = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            # never silently discard the accumulated trajectory: set the
+            # unparseable file aside and start a fresh one
+            backup = path.with_suffix(path.suffix + ".corrupt")
+            path.rename(backup)
+            print(f"[bench_record] WARNING: {path} was not valid JSON; "
+                  f"moved to {backup} and starting a new trajectory")
+            old = {}
+        if isinstance(old, dict) and isinstance(old.get("runs"), list):
+            doc["runs"] = old["runs"]
+        elif isinstance(old, dict) and "records" in old:
+            # legacy single-run layout -> first entry of the trajectory
+            legacy = {k: v for k, v in old.items() if k != "benchmark"}
+            legacy.setdefault("git_sha", "pre-trajectory")
+            doc["runs"] = [legacy]
+    doc["runs"].append(run)
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    return run

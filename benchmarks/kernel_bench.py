@@ -11,20 +11,24 @@ Three views (Sec. III-B / Fig. 2):
    platform (the Pallas interpreter is skipped on CPU above tiny shapes —
    it runs the kernel body in Python and would swamp the table).
 3. A machine-readable ``BENCH_kernels.json`` next to this file (override
-   with ``--out``): per-backend, per-shape timings + analytic bytes, so the
-   perf trajectory is tracked across PRs.
+   with ``--out``): per-backend, per-shape timings + analytic bytes. Each
+   invocation APPENDS a run stamped with git SHA + date (``bench_record``),
+   so the file accumulates the perf trajectory across PRs.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py [--out PATH] [--quick]
 """
 
 import argparse
-import json
 import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from bench_record import append_run  # noqa: E402
 
 from repro.backends import list_backends, resolve_backend
 from repro.kernels.spoga_gemm import DEFAULT_BLOCK_K, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N
@@ -122,14 +126,10 @@ def main():
     args = ap.parse_args()
     lines, records = run(QUICK_SHAPES if args.quick else SHAPES)
     print("\n".join(lines))
-    payload = {
-        "benchmark": "kernel_bench",
-        "platform": jax.default_backend(),
-        "jax_version": jax.__version__,
-        "records": records,
-    }
-    pathlib.Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"wrote {args.out} ({len(records)} records)")
+    stamped = append_run(args.out, "kernel_bench",
+                         {"quick": args.quick, "records": records})
+    print(f"appended {len(records)} records to {args.out} "
+          f"(sha {stamped['git_sha']}, {stamped['date']})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,221 @@
+"""Serving benchmark: continuous batching vs the static-batch baseline.
+
+A mixed-length workload (bimodal generation budgets — the realistic case
+that kills lockstep batching) is served two ways over identical requests:
+
+* **static** — FIFO groups of ``slots`` requests through
+  ``launch.serve.serve_batch``: prompts padded to a common length, every
+  lane decodes until the *longest* budget in its group finishes (finished
+  lanes burn compute), next group waits for the whole previous one.
+* **engine** — ``repro.serving.ServingEngine``: slot-based KV cache,
+  finished lanes evicted and refilled from the queue each step, prefill
+  interleaved with decode.
+
+Throughput counts *useful* tokens only (each request's own budget), so the
+static baseline is not charged for the padded garbage it produces — the
+gap measured is pure scheduling, the batch-level analogue of the dataflow
+utilization SPOGA argues for at the GEMM level.
+
+Appends a stamped run (git SHA + date) to ``BENCH_serve.json``:
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+from bench_record import append_run  # noqa: E402
+
+from repro.configs import default_cache_len, get_config, reduced
+from repro.launch.serve import serve_batch
+from repro.models import init_params
+from repro.serving import EngineConfig, ServingEngine
+
+
+def make_workload(cfg, n_requests: int, prompt_len: int, gen: int, seed: int = 0):
+    """(prompt, budget) pairs: prompts in [prompt_len/2, prompt_len], budgets
+    bimodal {gen/4, gen} — short interactive turns mixed with long ones."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        budget = int(gen if i % 2 == 0 else max(1, gen // 4))
+        reqs.append((rng.integers(0, cfg.vocab_size, plen).tolist(), budget))
+    return reqs
+
+
+def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: int):
+    """FIFO groups of ``slots``; one rectangular serve_batch per group."""
+    useful = 0
+    ttfts = []
+    t_start = time.perf_counter()
+    prefill_s = decode_s = 0.0
+    steps = 0
+    for g0 in range(0, len(workload), slots):
+        group = workload[g0:g0 + slots]
+        gen = max(b for _, b in group)
+        toks = np.zeros((len(group), prompt_len), np.int32)
+        for i, (p, _) in enumerate(group):
+            toks[i, :len(p)] = p  # static batching right-pads the prompt
+        _, stats = serve_batch(cfg, params, {"tokens": jnp.asarray(toks)},
+                               cache_len=cache_len, gen_tokens=gen)
+        prefill_s += stats["prefill_s"]
+        decode_s += stats["decode_s"]
+        steps += gen
+        useful += sum(b for _, b in group)
+        # every request in the group sees its first token when the group's
+        # prefill returns; earlier groups delay later ones head-of-line
+        ttfts += [time.perf_counter() - t_start - stats["decode_s"]] * len(group)
+    wall = time.perf_counter() - t_start
+    return {
+        "mode": "static",
+        "requests": len(workload),
+        "generated_tokens": useful,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(useful / wall, 2),
+        "decode_steps": steps,
+        "prefill_s": round(prefill_s, 4),
+        "decode_s": round(decode_s, 4),
+        "ttft_mean_s": round(float(np.mean(ttfts)), 4),
+        "ttft_max_s": round(float(np.max(ttfts)), 4),
+    }
+
+
+def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
+               stagger: int = 0):
+    ecfg = EngineConfig(n_slots=slots, cache_len=cache_len,
+                        prefill_buckets=buckets)
+    engine = ServingEngine(cfg, params, ecfg)
+    arrivals = [(i * stagger, p, b) for i, (p, b) in enumerate(workload)]
+    metrics = engine.run(arrivals)
+    rep = metrics.report()
+    rep["mode"] = "engine"
+    rep["stagger"] = stagger
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_out = pathlib.Path(__file__).parent / "BENCH_serve.json"
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="published config (default: reduced smoke size)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32,
+                    help="long budget; short requests get gen/4 (decode-"
+                         "dominated mix — where scheduling matters)")
+    ap.add_argument("--slots", default="2,4",
+                    help="comma-separated slot counts to sweep")
+    ap.add_argument("--staggers", default="0,2",
+                    help="comma-separated arrival staggers (engine only)")
+    ap.add_argument("--kv-cache-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--quant-mode", default="bf16")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N per cell (robust to background load)")
+    ap.add_argument("--quick", action="store_true",
+                    help="single cell, small workload (CI-friendly)")
+    ap.add_argument("--out", default=str(default_out))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    cfg = cfg.with_(remat=False, quant_mode=args.quant_mode,
+                    kv_cache_dtype=args.kv_cache_dtype)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache_len = default_cache_len(args.prompt_len, args.gen)
+    buckets = (args.prompt_len,)  # one prefill trace; static pads to the same
+
+    if args.quick:
+        slot_sweep, stagger_sweep = [2], [0]
+        args.requests = min(args.requests, 6)
+        args.repeats = min(args.repeats, 2)
+    else:
+        slot_sweep = [int(s) for s in args.slots.split(",")]
+        stagger_sweep = [int(s) for s in args.staggers.split(",")]
+
+    workload = make_workload(cfg, args.requests, args.prompt_len, args.gen)
+    records = []
+    print(f"=== serve bench: {cfg.name} | {args.requests} requests, "
+          f"prompts<={args.prompt_len}, budgets {{{max(1, args.gen//4)},{args.gen}}}, "
+          f"kv={args.kv_cache_dtype} ===")
+    print(f"{'mode':>8s} {'slots':>6s} {'stagger':>8s} {'tok/s':>8s} "
+          f"{'steps':>6s} {'TTFT-mean':>10s} {'TTFT-max':>9s}")
+    for slots in slot_sweep:
+        # warm both paths' jit caches at THIS slot count (prefill/decode
+        # shapes depend on it) so compile time never lands in the comparison;
+        # 2-token budgets keep the warmup to a couple of steps per shape.
+        # Static also compiles a (requests % slots)-wide prefill for its
+        # final partial group — warm that shape too.
+        warm = [(p, 2) for p, _ in (workload * slots)[:slots]]
+        run_static(cfg, params, warm, slots, args.prompt_len, cache_len)
+        if args.requests % slots:
+            run_static(cfg, params, warm[:args.requests % slots], slots,
+                       args.prompt_len, cache_len)
+        run_engine(cfg, params, warm, slots, cache_len, buckets)
+
+        # best-of-N: wall-clock on a shared host is noisy; the fastest
+        # repetition is the least-perturbed measurement of each schedule
+        rec = max((run_static(cfg, params, workload, slots, args.prompt_len,
+                              cache_len) for _ in range(args.repeats)),
+                  key=lambda r: r["tokens_per_s"])
+        rec["slots"], rec["repeats"] = slots, args.repeats
+        records.append(rec)
+        print(f"{'static':>8s} {slots:6d} {'-':>8s} {rec['tokens_per_s']:8.1f} "
+              f"{rec['decode_steps']:6d} {rec['ttft_mean_s']:10.3f} "
+              f"{rec['ttft_max_s']:9.3f}")
+        for stagger in stagger_sweep:
+            rec = max((run_engine(cfg, params, workload, slots, cache_len,
+                                  buckets, stagger)
+                       for _ in range(args.repeats)),
+                      key=lambda r: r["tokens_per_s"])
+            rec["slots"], rec["repeats"] = slots, args.repeats
+            records.append(rec)
+            print(f"{'engine':>8s} {slots:6d} {stagger:8d} "
+                  f"{rec['tokens_per_s']:8.1f} {rec['decode_steps']:6d} "
+                  f"{rec['ttft_mean_s']:10.3f} {rec['ttft_max_s']:9.3f}")
+
+    # headline: per-slot-count ratio of the engine's best arrival pattern vs
+    # static's best case (all requests available at t=0 — static cannot even
+    # express staggered arrivals without waiting to fill a batch). The
+    # conservative minimum across slot counts is the reported speedup.
+    ratios = {}
+    for slots in slot_sweep:
+        s = next(r["tokens_per_s"] for r in records
+                 if r["mode"] == "static" and r["slots"] == slots)
+        e = max(r["tokens_per_s"] for r in records
+                if r["mode"] == "engine" and r["slots"] == slots)
+        ratios[slots] = e / s
+    speedup = min(ratios.values())
+    print("continuous/static tokens-per-s: "
+          + ", ".join(f"{r:.2f}x @ {s} slots" for s, r in ratios.items())
+          + " (mixed budgets; finished lanes refill instead of idling)")
+
+    run = {
+        "arch": cfg.name,
+        "config": {
+            "requests": args.requests, "prompt_len": args.prompt_len,
+            "gen": args.gen, "kv_cache_dtype": args.kv_cache_dtype,
+            "quant_mode": args.quant_mode, "reduced": not args.full,
+        },
+        "speedup_vs_static": round(speedup, 3),
+        "speedup_by_slots": {str(s): round(r, 3) for s, r in ratios.items()},
+        "records": records,
+    }
+    stamped = append_run(args.out, "serve_bench", run)
+    print(f"appended run to {args.out} (sha {stamped['git_sha']}, "
+          f"{stamped['date']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,15 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SHAPES, ShapeConfig
+from repro.configs.base import (
+    KV_CACHE_HEADROOM,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeConfig,
+    default_cache_len,
+)
 
 from repro.configs import (
     mistral_large_123b,

@@ -17,6 +17,23 @@ from typing import Optional
 from repro.backends.spec import QUANT_MODES, parse_quant_mode
 
 
+# ---------------------------------------------------------------------------
+# KV-cache sizing policy (shared by the static server, the continuous-batching
+# engine and the benchmarks so they always agree on cache shapes).
+#
+# Headroom beyond prompt + generation covers (a) speculative/extra decode
+# steps past a request's nominal budget and (b) rounding prompt lengths up to
+# a prefill bucket — without it every off-by-one re-allocates (and re-jits)
+# the cache. 8 slots is < 1% overhead at serving lengths.
+KV_CACHE_HEADROOM = 8
+
+
+def default_cache_len(prompt_len: int, gen_tokens: int,
+                      headroom: int = KV_CACHE_HEADROOM) -> int:
+    """Cache length for serving ``prompt_len`` + ``gen_tokens`` decode steps."""
+    return prompt_len + gen_tokens + headroom
+
+
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
     num_experts: int = 0          # routed experts

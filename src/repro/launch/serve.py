@@ -1,28 +1,47 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with the
-KV/state caches — greedy sampling.
+"""Serving CLI — thin wrapper over the continuous-batching engine.
+
+Default path: ``repro.serving.ServingEngine`` (slot-based KV cache,
+interleaved prefill/decode, per-request sampling) fed a synthetic workload
+of mixed-length prompts with staggered arrivals:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --reduced --batch 4 --prompt-len 32 --gen 16
+        --reduced --requests 8 --slots 4 --prompt-len 32 --gen 16 --stagger 2
+
+``--static`` (and enc-dec / frontend archs, which the engine does not
+admit) falls back to the lockstep static-batch baseline ``serve_batch`` —
+kept both as the reference implementation the engine is tested against and
+as the baseline ``benchmarks/serve_bench.py`` beats.
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config, reduced as reduce_config
+from repro.configs import default_cache_len, get_config, reduced as reduce_config
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import init_params
 from repro.models.frontends import fake_audio_frames, fake_vision_embeds
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(cfg, cache_len: int):
+    """jit wrappers keyed by (cfg, cache_len) — ``make_*_step`` returns a new
+    closure per call, so without this every ``serve_batch`` call recompiles."""
+    return (jax.jit(make_prefill_step(cfg, cache_len)),
+            jax.jit(make_serve_step(cfg), donate_argnums=(2,)))
 
 
 def serve_batch(cfg, params, batch, *, cache_len: int, gen_tokens: int):
-    """Greedy-decode ``gen_tokens`` for every sequence. Returns (B, gen)."""
-    prefill_fn = jax.jit(make_prefill_step(cfg, cache_len))
-    step_fn = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+    """Static-batch lockstep baseline: every sequence prefills together and
+    decodes ``gen_tokens`` steps together (greedy). Returns (B, gen)."""
+    prefill_fn, step_fn = _jitted_steps(cfg, cache_len)
     t0 = time.time()
     logits, cache = prefill_fn(params, batch)
     prefill_s = time.time() - t0
@@ -38,13 +57,102 @@ def serve_batch(cfg, params, batch, *, cache_len: int, gen_tokens: int):
     return jnp.stack(out, axis=1), {"prefill_s": prefill_s, "decode_s": decode_s}
 
 
+def synthetic_workload(cfg, n_requests: int, prompt_len: int, gen: int,
+                       stagger: int, seed: int = 0):
+    """Mixed-length prompts/budgets around the nominal sizes, arriving every
+    ``stagger`` engine steps — a deterministic stand-in for live traffic."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    for i in range(n_requests):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        budget = int(rng.integers(max(1, gen // 2), gen + 1))
+        prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
+        arrivals.append((i * stagger, prompt, budget))
+    return arrivals
+
+
+def _static_main(cfg, params, args):
+    key = jax.random.PRNGKey(0)
+    kt, ke = jax.random.split(key)
+    if cfg.is_encoder_decoder:
+        batch = {
+            "src_embeds": fake_audio_frames(ke, cfg, args.batch, args.prompt_len),
+            "tgt_tokens": jax.random.randint(kt, (args.batch, 8), 0, cfg.vocab_size),
+        }
+    elif cfg.frontend is not None:
+        batch = {"embeds": fake_vision_embeds(ke, cfg, args.batch, args.prompt_len)}
+    else:
+        batch = {"tokens": jax.random.randint(kt, (args.batch, args.prompt_len), 0,
+                                              cfg.vocab_size)}
+    cache_len = default_cache_len(args.prompt_len, args.gen)
+    tokens, stats = serve_batch(cfg, params, batch, cache_len=cache_len,
+                                gen_tokens=args.gen)
+    tps = args.batch * args.gen / stats["decode_s"]
+    print(f"[serve] generated {tokens.shape} tokens; prefill {stats['prefill_s']:.2f}s, "
+          f"decode {stats['decode_s']:.2f}s ({tps:.1f} tok/s)")
+    print("[serve] sample:", tokens[0][:12].tolist())
+
+
+def _engine_main(cfg, params, args):
+    from repro.serving.engine import RECURRENT_KINDS
+
+    sampling = SamplingParams(
+        greedy=args.temperature == 0.0,
+        temperature=args.temperature or 1.0,
+        top_k=args.top_k,
+        seed=args.seed,
+    )
+    # recurrent stacks must prefill at exact lengths (padding pollutes state)
+    use_buckets = not args.no_buckets and not (RECURRENT_KINDS & set(cfg.block_pattern))
+    ecfg = EngineConfig.for_workload(
+        args.prompt_len, args.gen,
+        n_slots=args.slots,
+        max_prefills_per_step=args.max_prefills,
+        prefill_buckets=_auto_buckets(args.prompt_len) if use_buckets else None,
+    )
+    engine = ServingEngine(cfg, params, ecfg)
+    arrivals = [(s, p, g, sampling)
+                for s, p, g in synthetic_workload(cfg, args.requests,
+                                                  args.prompt_len, args.gen,
+                                                  args.stagger, args.seed)]
+    metrics = engine.run(arrivals)
+    print(metrics.format_report())
+    if metrics.finished:
+        first = min(metrics.finished, key=lambda r: r.req_id)
+        print(f"[engine] sample (req {first.req_id}):", first.output_tokens[:12])
+
+
+def _auto_buckets(prompt_len: int):
+    """Power-of-two buckets covering [1, prompt_len] — bounds prefill traces."""
+    buckets, b = [], 8
+    while b < prompt_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(prompt_len)
+    return tuple(buckets)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--static", action="store_true",
+                    help="lockstep static-batch baseline instead of the engine")
+    ap.add_argument("--batch", type=int, default=4, help="static path: batch size")
+    ap.add_argument("--requests", type=int, default=8, help="engine: request count")
+    ap.add_argument("--slots", type=int, default=4, help="engine: KV-cache lanes")
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="engine: steps between request arrivals")
+    ap.add_argument("--max-prefills", type=int, default=1,
+                    help="engine: admissions interleaved per step")
+    ap.add_argument("--no-buckets", action="store_true",
+                    help="engine: exact-length prefill (one trace per length)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = no truncation")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quant-mode", default="bf16")
     ap.add_argument("--gemm-backend", default=None,
                     help="GEMM backend registry name; default auto-selection")
@@ -57,26 +165,15 @@ def main():
         cfg = reduce_config(cfg)
     cfg = cfg.with_(quant_mode=args.quant_mode, kv_cache_dtype=args.kv_cache_dtype,
                     gemm_backend=args.gemm_backend)
-    key = jax.random.PRNGKey(0)
-    params = init_params(cfg, key)
-    kt, ke = jax.random.split(key)
-    if cfg.is_encoder_decoder:
-        batch = {
-            "src_embeds": fake_audio_frames(ke, cfg, args.batch, args.prompt_len),
-            "tgt_tokens": jax.random.randint(kt, (args.batch, 8), 0, cfg.vocab_size),
-        }
-    elif cfg.frontend is not None:
-        batch = {"embeds": fake_vision_embeds(ke, cfg, args.batch, args.prompt_len)}
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    engine_capable = not cfg.is_encoder_decoder and cfg.frontend is None
+    if args.static or not engine_capable:
+        if not engine_capable and not args.static:
+            print(f"[serve] {cfg.name}: enc-dec/frontend arch — static path")
+        _static_main(cfg, params, args)
     else:
-        batch = {"tokens": jax.random.randint(kt, (args.batch, args.prompt_len), 0,
-                                              cfg.vocab_size)}
-    cache_len = args.prompt_len + args.gen + 8
-    tokens, stats = serve_batch(cfg, params, batch, cache_len=cache_len,
-                                gen_tokens=args.gen)
-    tps = args.batch * args.gen / stats["decode_s"]
-    print(f"[serve] generated {tokens.shape} tokens; prefill {stats['prefill_s']:.2f}s, "
-          f"decode {stats['decode_s']:.2f}s ({tps:.1f} tok/s)")
-    print("[serve] sample:", tokens[0][:12].tolist())
+        _engine_main(cfg, params, args)
 
 
 if __name__ == "__main__":

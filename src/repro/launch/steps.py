@@ -99,9 +99,15 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, grad_specs=None):
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, cache_len: int):
-    def prefill_step(params, batch):
-        return model_lib.prefill(params, cfg, batch, cache_len)
+def make_prefill_step(cfg: ModelConfig, cache_len: int, with_lengths: bool = False):
+    """``with_lengths``: the serving engine's variant — takes a per-sequence
+    (B,) true-lengths array so right-padded prompt buckets prefill exactly."""
+    if with_lengths:
+        def prefill_step(params, batch, lengths):
+            return model_lib.prefill(params, cfg, batch, cache_len, lengths=lengths)
+    else:
+        def prefill_step(params, batch):
+            return model_lib.prefill(params, cfg, batch, cache_len)
 
     return prefill_step
 

@@ -287,8 +287,19 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, cross_len: int = 0)
 # Prefill
 # ---------------------------------------------------------------------------
 
-def prefill(params, cfg: ModelConfig, batch, cache_len: int):
-    """Process the prompt, return (last-position logits (B, V), cache)."""
+def prefill(params, cfg: ModelConfig, batch, cache_len: int, lengths=None):
+    """Process the prompt, return (last-position logits (B, V), cache).
+
+    ``lengths`` (optional, (B,) int32): true prompt lengths when the batch is
+    right-padded to a common width (the serving engine's prefill buckets).
+    Logits are gathered at position ``lengths - 1`` and the cache ``pos``
+    starts at ``lengths``, so padded tail positions are never attended: every
+    decode step writes its K/V at ``pos`` *before* attending ``kpos <= pos``,
+    overwriting the stale padded row exactly when it would first become
+    visible.  Exact for attention-family caches only — recurrent state
+    (rglru/mlstm/slstm) integrates padded tokens, so callers must pass
+    unpadded prompts (``lengths=None``) for those stacks.
+    """
     for key in ("tokens", "embeds", "src_embeds"):
         if key in batch:
             b = batch[key].shape[0]
@@ -329,8 +340,15 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int):
         x, a, c = tfm.apply_block_prefill(x, p, tail_kinds[i], cfg, positions,
                                           cache["tail_blocks"][i])
         cache["tail_blocks"][i] = c
-    cache["pos"] = jnp.full((x.shape[0],), s, jnp.int32)
-    h = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    if lengths is None:
+        cache["pos"] = jnp.full((x.shape[0],), s, jnp.int32)
+        x_last = x[:, -1:, :]
+    else:
+        lengths = lengths.astype(jnp.int32)
+        cache["pos"] = lengths
+        idx = jnp.clip(lengths - 1, 0, s - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    h = rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
     logits = unembed(h, _head_table(params, cfg))[:, 0, :]
     return logits, cache
 

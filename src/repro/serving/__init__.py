@@ -1,0 +1,22 @@
+"""Continuous-batching serving engine (slot-based KV cache, interleaved
+prefill/decode, per-lane sampling).  See ``engine.ServingEngine``."""
+
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.metrics import EngineMetrics
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import SamplingParams, request_key, sample_tokens
+from repro.serving.scheduler import FIFOScheduler
+from repro.serving.slots import SlotCache
+
+__all__ = [
+    "EngineConfig",
+    "EngineMetrics",
+    "FIFOScheduler",
+    "Request",
+    "RequestState",
+    "SamplingParams",
+    "ServingEngine",
+    "SlotCache",
+    "request_key",
+    "sample_tokens",
+]

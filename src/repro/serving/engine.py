@@ -1,0 +1,329 @@
+"""Continuous-batching serving engine.
+
+One ``ServingEngine`` owns a fixed pool of ``n_slots`` KV-cache lanes
+(``slots.SlotCache``) and runs an iteration-level loop: every ``step()``
+
+1. **admits** up to ``max_prefills_per_step`` FIFO-queued requests into
+   free lanes — each admission is a batch=1 prefill (optionally padded to a
+   prefill bucket so jit traces stay bounded) whose cache is scattered into
+   the lane, and whose last-position logits yield the request's *first*
+   token (the TTFT token);
+2. **decodes** one token for every occupied lane in a single jitted
+   ``decode_step`` over the whole pool — fixed shapes, zero retraces —
+   sampling per-lane (greedy / temperature / top-k);
+3. **evicts** finished lanes (length budget or EOS) immediately, so the
+   next step can refill them instead of burning compute on dead lanes.
+
+This is what keeps a byte-size integer GEMM accelerator fed: the decode
+GEMMs always run at the full pool batch, prefill is interleaved instead of
+lock-stepped, and a long request never stalls the batch (the failure mode
+of the static ``serve_batch`` baseline).
+
+The model side is the ordinary ``launch/steps.py`` builders, so the whole
+quantized ``gemm_backend`` pipeline (Pallas SPOGA kernels, int8 KV cache,
+parametric quant modes) serves every engine step unchanged.
+
+Supported: decoder-only token-input stacks (any cache kind, including MLA
+and recurrent state).  Prefill buckets require attention-family caches —
+recurrent state integrates right-padding — so bucketed padding is rejected
+for rglru/mlstm/slstm patterns at construction time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import KV_CACHE_HEADROOM, ModelConfig, default_cache_len
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.serving.metrics import EngineMetrics
+from repro.serving.request import Request
+from repro.serving.sampling import SamplingParams, request_key, sample_tokens
+from repro.serving.scheduler import FIFOScheduler
+from repro.serving.slots import SlotCache
+
+RECURRENT_KINDS = frozenset({"rglru", "mlstm", "slstm"})
+
+_ZERO_KEY = np.zeros((2,), np.uint32)
+
+
+# jit wrappers are cached per (cfg, cache_len) so spinning up a new engine
+# (benchmark sweeps, tests) reuses compiled traces instead of re-jitting —
+# ``make_*_step`` returns a fresh closure per call, which defeats jax's own
+# cache if wrapped naively per instance.
+@functools.lru_cache(maxsize=None)
+def _jitted_admit(cfg: ModelConfig, cache_len: int):
+    """Fused admission: prefill + first-token sample + lane scatter in ONE
+    dispatch (the batch=1 cache never materializes as a standalone output).
+    Single prefills are the engine's per-request overhead; at small scale
+    dispatch latency rivals compute, so fusion matters."""
+    from repro.serving.slots import scatter_lane
+
+    prefill = make_prefill_step(cfg, cache_len, with_lengths=True)
+
+    def admit(pool, params, tokens, lengths, slot, temp, topk, greedy, key,
+              axes_flat):
+        logits, single = prefill(params, {"tokens": tokens}, lengths)
+        tok = sample_tokens(logits, temp, topk, greedy, key)
+        return tok, scatter_lane(pool, single, slot, axes_flat)
+
+    return jax.jit(admit, donate_argnums=(0,), static_argnums=(9,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode_sample(cfg: ModelConfig):
+    """Fused decode+sample: one jit dispatch per engine step.
+
+    ``any_stochastic`` is static so the all-greedy trace (the default, and
+    every exact-match path) lowers to a pure argmax — without it every step
+    would pay sample_tokens' full-vocab sort + categorical just to discard
+    the result in the greedy ``where``."""
+    decode = make_serve_step(cfg)
+
+    def step(params, tokens, cache, temps, topk, greedy, keys,
+             any_stochastic: bool):
+        logits, cache = decode(params, tokens, cache)
+        if any_stochastic:
+            toks = sample_tokens(logits, temps, topk, greedy, keys)
+        else:
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return toks, cache
+
+    return jax.jit(step, donate_argnums=(2,), static_argnums=(7,))
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine shape/policy knobs (model behaviour stays in ``ModelConfig``)."""
+
+    n_slots: int = 4
+    cache_len: int = 256
+    max_prefills_per_step: int = 1
+    # Prompt lengths are padded up to the smallest bucket >= len(prompt) so
+    # the jitted prefill traces at most len(buckets) shapes. None/() = exact
+    # lengths (one trace per distinct prompt length).
+    prefill_buckets: Optional[tuple[int, ...]] = None
+    eos_token: Optional[int] = None
+
+    @staticmethod
+    def for_workload(prompt_len: int, gen_tokens: int, n_slots: int = 4,
+                     **kw) -> "EngineConfig":
+        """Cache sized by the shared serving policy (prompt + gen + headroom)."""
+        return EngineConfig(
+            n_slots=n_slots,
+            cache_len=default_cache_len(prompt_len, gen_tokens),
+            **kw,
+        )
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig):
+        if cfg.is_encoder_decoder or cfg.frontend is not None:
+            raise ValueError(
+                "ServingEngine handles decoder-only token-input models; "
+                "enc-dec / frontend archs serve via launch.serve.serve_batch")
+        buckets = tuple(sorted(engine_cfg.prefill_buckets or ()))
+        if buckets and RECURRENT_KINDS & set(cfg.block_pattern):
+            raise ValueError(
+                f"prefill buckets pad prompts, but {sorted(RECURRENT_KINDS & set(cfg.block_pattern))} "
+                "state integrates padded tokens; use exact-length prefill "
+                "(prefill_buckets=None) for recurrent stacks")
+        if buckets and buckets[-1] > engine_cfg.cache_len:
+            raise ValueError("largest prefill bucket exceeds cache_len")
+        self.cfg = cfg
+        self.params = params
+        self.engine_cfg = engine_cfg
+        self.buckets = buckets
+
+        n = engine_cfg.n_slots
+        self.scheduler = FIFOScheduler(n, engine_cfg.max_prefills_per_step)
+        self.slots = SlotCache(cfg, n, engine_cfg.cache_len)
+        self.metrics = EngineMetrics()
+
+        self._admit_fn = _jitted_admit(cfg, engine_cfg.cache_len)
+        self._decode_sample = _jitted_decode_sample(cfg)
+
+        # per-lane state. ``_tokens`` may be a DEVICE array: between sync
+        # points sampled tokens feed the next decode device-to-device (see
+        # ``step``); the rest are host arrays passed to the fused step.
+        self._tokens = np.zeros((n,), np.int32)
+        self._temps = np.ones((n,), np.float32)
+        self._topk = np.zeros((n,), np.int32)
+        self._greedy = np.ones((n,), bool)
+        self._keys = np.zeros((n, 2), np.uint32)
+        # decode steps whose tokens haven't been pulled to host yet:
+        # (device (n,) tokens, {slot: request} snapshot at that step)
+        self._pending: list = []
+        self._next_id = 0
+        self._step_idx = 0
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def add_request(self, prompt: Sequence[int], max_new_tokens: int,
+                    sampling: Optional[SamplingParams] = None,
+                    eos_token: Optional[int] = None) -> Request:
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        need = len(prompt) + max_new_tokens
+        if need > self.engine_cfg.cache_len + 1:
+            raise ValueError(
+                f"request needs {need} cache positions but cache_len="
+                f"{self.engine_cfg.cache_len}; size the engine with "
+                f"default_cache_len(prompt_len, gen) [headroom={KV_CACHE_HEADROOM}]")
+        req = Request(
+            req_id=self._next_id,
+            prompt=prompt,
+            max_new_tokens=max_new_tokens,
+            sampling=sampling or SamplingParams(),
+            eos_token=self.engine_cfg.eos_token if eos_token is None else eos_token,
+            submit_time=time.perf_counter(),
+        )
+        self._next_id += 1
+        self.scheduler.submit(req)
+        return req
+
+    def _bucket_len(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if b >= prompt_len:
+                return b
+        return prompt_len
+
+    def _lane_key(self, req: Request) -> np.ndarray:
+        if req.sampling.greedy:
+            return _ZERO_KEY
+        k = request_key(req.sampling.seed, req.req_id, len(req.output_tokens))
+        return np.asarray(k, np.uint32)
+
+    def _admit(self, req: Request, slot: int) -> None:
+        padded_len = self._bucket_len(req.prompt_len)
+        tokens = np.zeros((1, padded_len), np.int32)
+        tokens[0, :req.prompt_len] = req.prompt
+        s = req.sampling
+        tok_dev, self.slots.cache = self._admit_fn(
+            self.slots.cache, self.params, tokens,
+            np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
+            np.asarray([s.temperature], np.float32),
+            np.asarray([s.top_k], np.int32),
+            np.asarray([s.greedy]),
+            self._lane_key(req)[None],
+            self.slots._axes_flat,
+        )
+        tok = int(np.asarray(tok_dev)[0])
+        req.append_token(tok)  # stamps TTFT
+        self.metrics.prefills += 1
+        self._tokens = jnp.asarray(self._tokens).at[slot].set(tok)
+        self._temps[slot] = s.temperature
+        self._topk[slot] = s.top_k
+        self._greedy[slot] = s.greedy
+        self._keys[slot] = self._lane_key(req)
+
+    # ------------------------------------------------------------------
+    # The engine loop
+    # ------------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """One scheduler iteration: interleave admissions with a batched
+        decode over all occupied lanes. Returns requests finished this step."""
+        self.metrics.begin()
+        self._step_idx += 1
+        self.metrics.steps += 1
+        finished: list[Request] = []
+
+        admitted = self.scheduler.schedule()
+        if admitted:
+            t0 = time.perf_counter()
+            for req, slot in admitted:
+                self._admit(req, slot)
+                if req.done:  # max_new_tokens == 1 (or instant EOS)
+                    self._evict(slot, finished)
+            jax.block_until_ready(self.slots.cache["pos"])
+            self.metrics.prefill_s += time.perf_counter() - t0
+
+        if self.scheduler.running:
+            t0 = time.perf_counter()
+            toks, self.slots.cache = self._decode_sample(
+                self.params, self._tokens, self.slots.cache,
+                self._temps, self._topk, self._greedy, self._keys,
+                not bool(self._greedy.all()))
+            # feed the sampled tokens into the next decode device-to-device;
+            # pull them to host lazily (only when scheduling needs them),
+            # so all-greedy stretches pipeline like the static loop does
+            self._tokens = toks
+            self._pending.append((toks, dict(self.scheduler.running)))
+            self.metrics.decode_steps += 1
+            if self._needs_sync():
+                self._flush(finished)
+            self.metrics.decode_s += time.perf_counter() - t0
+        return finished
+
+    def _needs_sync(self) -> bool:
+        """Must the pending token arrays reach the host NOW?  Yes iff some
+        running lane's next scheduling decision depends on token values
+        (EOS armed), its PRNG key must advance (stochastic sampling), or it
+        reaches its length budget at this step (eviction due)."""
+        counts: dict[int, int] = {}
+        for _, mapping in self._pending:
+            for req in mapping.values():
+                counts[req.req_id] = counts.get(req.req_id, 0) + 1
+        for req in self.scheduler.running.values():
+            if req.eos_token is not None or not req.sampling.greedy:
+                return True
+            if len(req.output_tokens) + counts.get(req.req_id, 0) >= req.max_new_tokens:
+                return True
+        return False
+
+    def _flush(self, finished: list[Request]) -> None:
+        """Materialize pending decode tokens, then evict completed lanes."""
+        for toks_dev, mapping in self._pending:
+            toks = np.asarray(toks_dev)
+            for slot, req in mapping.items():
+                req.append_token(int(toks[slot]))
+        self._pending.clear()
+        for slot, req in list(self.scheduler.running.items()):
+            self._keys[slot] = self._lane_key(req)
+            if req.done:
+                self._evict(slot, finished)
+
+    def _evict(self, slot: int, finished: list[Request]) -> None:
+        req = self.scheduler.release(slot)
+        self.slots.free(slot)
+        self._greedy[slot] = True  # free lanes sample nothing
+        self.metrics.record_finished(req)
+        finished.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    def run(self, arrivals=None, max_steps: int = 100_000) -> EngineMetrics:
+        """Drive steps until idle.  ``arrivals``: optional list of
+        ``(step_idx, prompt, max_new_tokens[, SamplingParams])`` tuples —
+        requests injected when the engine reaches that step, simulating
+        staggered traffic deterministically."""
+        pending = sorted(arrivals or [], key=lambda a: a[0])
+        i = 0
+        steps_this_run = 0
+        while (i < len(pending) or self.has_work) and steps_this_run < max_steps:
+            while i < len(pending) and pending[i][0] <= self._step_idx:
+                arr = pending[i]
+                self.add_request(arr[1], arr[2],
+                                 sampling=arr[3] if len(arr) > 3 else None)
+                i += 1
+            if not self.has_work:
+                # idle gap before the next arrival: jump to it
+                self._step_idx = pending[i][0]
+                continue
+            self.step()
+            steps_this_run += 1
+        if self._pending:  # max_steps bail-out with tokens still in flight
+            self._flush([])
+        return self.metrics

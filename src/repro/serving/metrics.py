@@ -1,0 +1,77 @@
+"""Engine-level serving metrics: throughput, TTFT, per-request latency."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.serving.request import Request
+
+
+def _mean(xs):
+    xs = [x for x in xs if x is not None]
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Accumulated over an engine run; ``report()`` emits the summary."""
+
+    start_time: float = 0.0
+    end_time: float = 0.0
+    steps: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    finished: list = dataclasses.field(default_factory=list)
+
+    def begin(self) -> None:
+        if not self.start_time:
+            self.start_time = time.perf_counter()
+
+    def record_finished(self, req: Request) -> None:
+        req.finish_time = time.perf_counter()
+        self.end_time = req.finish_time
+        self.finished.append(req)
+
+    # -- summary -----------------------------------------------------------
+    @property
+    def wall_s(self) -> float:
+        end = self.end_time or time.perf_counter()
+        return max(end - self.start_time, 1e-9)
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(r.output_tokens) for r in self.finished)
+
+    def report(self) -> dict:
+        """Machine-readable summary (also what ``BENCH_serve.json`` stores)."""
+        reqs = self.finished
+        return {
+            "requests": len(reqs),
+            "generated_tokens": self.generated_tokens,
+            "prompt_tokens": sum(r.prompt_len for r in reqs),
+            "wall_s": round(self.wall_s, 4),
+            "tokens_per_s": round(self.generated_tokens / self.wall_s, 2),
+            "steps": self.steps,
+            "prefills": self.prefills,
+            "decode_steps": self.decode_steps,
+            "prefill_s": round(self.prefill_s, 4),
+            "decode_s": round(self.decode_s, 4),
+            "ttft_mean_s": round(_mean([r.ttft_s for r in reqs]), 4),
+            "ttft_max_s": round(max([r.ttft_s or 0.0 for r in reqs], default=0.0), 4),
+            "latency_mean_s": round(_mean([r.latency_s for r in reqs]), 4),
+            "latency_max_s": round(
+                max([r.latency_s or 0.0 for r in reqs], default=0.0), 4),
+        }
+
+    def format_report(self) -> str:
+        r = self.report()
+        return (
+            f"[engine] {r['requests']} requests, {r['generated_tokens']} tokens "
+            f"in {r['wall_s']:.2f}s = {r['tokens_per_s']:.1f} tok/s | "
+            f"{r['prefills']} prefills + {r['decode_steps']} decode steps | "
+            f"TTFT mean {r['ttft_mean_s']*1e3:.0f}ms max {r['ttft_max_s']*1e3:.0f}ms | "
+            f"latency mean {r['latency_mean_s']:.2f}s"
+        )

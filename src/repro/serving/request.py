@@ -1,0 +1,72 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A request moves WAITING -> RUNNING -> FINISHED.  There is no separate
+PREFILL state: admission (prefill + first sampled token) happens inside one
+engine step, so a request is RUNNING from the moment its KV cache occupies a
+slot.  All bookkeeping here is host-side Python — device state lives in
+``slots.SlotCache``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Optional
+
+from repro.serving.sampling import SamplingParams
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"      # queued, no slot yet
+    RUNNING = "running"      # occupies a slot, decoding
+    FINISHED = "finished"    # evicted; outputs final
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: prompt tokens in, sampled tokens out."""
+
+    req_id: int
+    prompt: list[int]
+    max_new_tokens: int
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    eos_token: Optional[int] = None
+
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    output_tokens: list[int] = dataclasses.field(default_factory=list)
+
+    # wall-clock timeline (engine-stamped)
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        if len(self.output_tokens) >= self.max_new_tokens:
+            return True
+        return (self.eos_token is not None and self.output_tokens
+                and self.output_tokens[-1] == self.eos_token)
+
+    def append_token(self, tok: int) -> None:
+        if self.first_token_time is None:
+            self.first_token_time = time.perf_counter()
+        self.output_tokens.append(tok)
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (submit -> first sampled token)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.submit_time

@@ -1,0 +1,67 @@
+"""Token sampling for the serving engine: greedy, temperature, top-k.
+
+The engine decodes all slots in one jitted call, but each slot may carry a
+different sampling policy, so sampling is vectorized over per-slot parameter
+arrays (temperature / top_k / greedy mask) rather than dispatching per
+request in Python.  ``top_k <= 0`` disables the top-k filter for that lane;
+``greedy`` lanes ignore the randomness entirely, so a greedy request's
+tokens are bit-identical whether or not stochastic neighbours share the
+batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_TEMP_EPS = 1e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy. Defaults to deterministic greedy."""
+
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0          # <= 0: no top-k truncation
+    seed: int = 0           # folded into the engine key per request
+
+    def __post_init__(self):
+        if not self.greedy and self.temperature <= 0:
+            raise ValueError("temperature must be > 0 for stochastic sampling "
+                             "(use greedy=True for argmax decoding)")
+
+
+def request_key(seed: int, req_id: int, token_index: int):
+    """Per-(request, position) PRNG key.  Depends only on the request's own
+    seed/id and how many tokens it has produced — never on which other
+    requests share the batch — so stochastic outputs are reproducible under
+    any continuous-batching interleaving."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), req_id)
+    return jax.random.fold_in(base, token_index)
+
+
+def sample_tokens(logits, temperature, top_k, greedy, keys):
+    """Sample one token per lane. All inputs batched over lanes.
+
+    logits: (B, V) f32/bf16; temperature: (B,) f32; top_k: (B,) int32
+    (<= 0 disables); greedy: (B,) bool; keys: (B, 2) uint32 — one PRNG key
+    per lane (see ``request_key``; ignored for greedy lanes).
+    Returns (B,) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    scaled = logits / jnp.maximum(temperature, _TEMP_EPS)[:, None]
+    # per-lane top-k with lane-varying k: threshold at the k-th largest value
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k_idx = jnp.clip(top_k - 1, 0, v - 1)
+    kth = jnp.take_along_axis(sorted_desc, k_idx[:, None], axis=1)
+    keep = (top_k[:, None] <= 0) | (scaled >= kth)
+    masked = jnp.where(keep, scaled, -jnp.inf)
+
+    sampled = jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(keys, masked)
+    return jnp.where(greedy, greedy_tok, sampled.astype(jnp.int32))

@@ -1,0 +1,94 @@
+"""Fixed-shape slot-based KV cache for continuous batching.
+
+One device-resident cache pytree is allocated once for ``n_slots`` lanes at
+a fixed ``cache_len`` (built from ``models/kvcache.py`` shapes, so every
+block kind — attn / MLA / recurrent state — and the int8 byte-size variant
+work unchanged).  Requests come and go by *scattering into a lane* of that
+fixed tree, so the jitted decode step never sees a new shape and never
+retraces:
+
+* ``insert(single_cache, slot)`` — write a freshly prefilled batch=1 cache
+  into lane ``slot`` (one fused ``dynamic_update_slice`` per leaf).
+* ``free(slot)`` — release the lane; its ``pos`` is reset to 0.
+
+The batch axis is leaf-dependent: scanned ``blocks`` / ``cross_kv`` leaves
+are stacked ``(n_periods, B, ...)`` (axis 1), everything else is ``(B,
+...)`` (axis 0); the axis map is derived from the cache's top-level keys.
+
+Free lanes still ride through ``decode_step`` (their ``pos`` advances on
+garbage tokens).  That is safe by construction: lanes are independent, and
+``dynamic_update_slice`` clamps out-of-range starts, so a long-idle lane
+just rewrites its last row until a new request's insert resets it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.models.kvcache import zeros_like_shapes
+
+# top-level cache keys whose leaves are stacked over scan periods, putting
+# the batch/lane dim at axis 1 instead of 0
+_PERIOD_STACKED = ("blocks", "cross_kv")
+
+
+def batch_axes(cache) -> dict:
+    """Pytree of ints (same structure as ``cache``): each leaf's lane axis."""
+    return {
+        key: jax.tree_util.tree_map(
+            lambda _leaf, ax=(1 if key in _PERIOD_STACKED else 0): ax, sub
+        )
+        for key, sub in cache.items()
+    }
+
+
+def scatter_lane(cache, single, slot, axes_flat):
+    """Write the batch=1 ``single`` tree into lane ``slot`` of ``cache``
+    (one ``dynamic_update_slice`` per leaf). Traceable — the engine inlines
+    it into the fused admission step; ``_scatter_lane`` below is the
+    standalone jitted form."""
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    single_leaves = treedef.flatten_up_to(single)
+
+    def one(full, part, ax):
+        starts = tuple(
+            jnp.asarray(slot, jnp.int32) if i == ax else 0
+            for i in range(full.ndim)
+        )
+        return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), starts)
+
+    return treedef.unflatten(
+        [one(c, s, ax) for c, s, ax in zip(leaves, single_leaves, axes_flat)])
+
+
+# module-level jit (axes static) so the trace cache is shared across
+# SlotCache/engine instances — re-instantiating an engine must not recompile
+_scatter_lane = jax.jit(scatter_lane, donate_argnums=(0,), static_argnums=(3,))
+
+
+class SlotCache:
+    """Engine-owned cache pool: ``n_slots`` lanes of length ``cache_len``."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int,
+                 cross_len: int = 0):
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        shapes = model_lib.cache_shapes(cfg, n_slots, cache_len, cross_len)
+        self.cache = zeros_like_shapes(shapes)
+        self._axes_flat = tuple(jax.tree_util.tree_leaves(batch_axes(self.cache)))
+
+    def insert(self, single_cache, slot: int) -> None:
+        """Scatter a batch=1 prefill cache into lane ``slot``."""
+        self.cache = _scatter_lane(self.cache, single_cache, jnp.int32(slot),
+                                   self._axes_flat)
+
+    def free(self, slot: int) -> None:
+        """Release a lane (resets its write position)."""
+        self.cache = {**self.cache, "pos": self.cache["pos"].at[slot].set(0)}
+
+    @property
+    def pos(self):
+        return self.cache["pos"]

@@ -1,8 +1,11 @@
-"""Serving consistency: prefill + stepwise decode == full-context forward.
+"""Serving consistency: prefill + stepwise decode == full-context forward,
+and the continuous-batching engine == solo decoding of each request.
 
 The strongest functional check of the KV-cache / recurrent-state machinery:
 for every cache-bearing architecture family, decoding token t against the
 cache must produce the same logits as a full forward pass over [0..t].
+The engine tests extend that to slot scattering, padded prefill buckets,
+staggered admission and slot reuse: scheduling must be output-invisible.
 """
 
 import jax
@@ -12,6 +15,15 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import decode_step, forward, init_params, prefill
+from repro.serving import (
+    EngineConfig,
+    FIFOScheduler,
+    Request,
+    SamplingParams,
+    ServingEngine,
+    SlotCache,
+    sample_tokens,
+)
 
 # One representative per cache mechanism:
 #   GQA dense, MLA latents, MoE, mLSTM/sLSTM state, RG-LRU + local ring,
@@ -82,6 +94,158 @@ def test_serve_batch_driver_runs():
     assert out.shape == (2, 5)
     assert timings["prefill_s"] > 0 and timings["decode_s"] > 0
     assert (np.asarray(out) >= 0).all() and (np.asarray(out) < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+# one attention-family arch exercising padded prefill buckets (MLA has the
+# most intricate cache) + one recurrent arch on the exact-length path; both
+# produce varied greedy continuations at smoke scale (llama's random init
+# collapses to a repeated token, which would mask pos-bookkeeping bugs).
+ENGINE_CASES = [
+    ("llama3.2-1b", (8, 16)),
+    ("minicpm3-4b", (8, 16)),
+    ("xlstm-125m", None),
+]
+
+
+def _engine_setup(arch, buckets, n_slots=2, cache_len=32, **cfg_kw):
+    cfg = reduced(get_config(arch)).with_(remat=False, **cfg_kw)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(n_slots=n_slots, cache_len=cache_len,
+                        prefill_buckets=buckets)
+    return cfg, params, ServingEngine(cfg, params, ecfg)
+
+
+@pytest.mark.parametrize("arch,buckets", ENGINE_CASES)
+def test_engine_matches_solo_staggered(arch, buckets):
+    """Acceptance: unequal-length requests arriving staggered, with more
+    requests than slots (queueing + eviction + slot reuse), each produce
+    EXACTLY the greedy tokens of a solo serve_batch run of that request."""
+    from repro.launch.serve import serve_batch
+
+    cfg, params, engine = _engine_setup(arch, buckets)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (5, 9, 3, 7)]
+    gens = [6, 4, 8, 5]
+    arrivals = [(0, prompts[0], gens[0]), (0, prompts[1], gens[1]),
+                (2, prompts[2], gens[2]), (4, prompts[3], gens[3])]
+    metrics = engine.run(arrivals)
+
+    assert len(metrics.finished) == 4
+    by_id = {r.req_id: r for r in metrics.finished}
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        solo, _ = serve_batch(cfg, params,
+                              {"tokens": jnp.asarray([p], jnp.int32)},
+                              cache_len=engine.engine_cfg.cache_len,
+                              gen_tokens=g)
+        assert by_id[i].output_tokens == np.asarray(solo)[0].tolist(), (
+            f"{arch}: request {i} diverged from its solo decode")
+    rep = metrics.report()
+    assert rep["generated_tokens"] == sum(gens)
+    assert rep["prefills"] == 4
+    assert rep["ttft_mean_s"] > 0 and rep["latency_mean_s"] > 0
+
+
+def test_engine_int8_kv_parity():
+    """Satellite: greedy decode through the engine with the byte-size int8
+    KV cache tracks the bf16 cache within quantization tolerance.  Token
+    streams feed back into the model, so one early flip cascades — require
+    exact first tokens (pure prefill logits) and high overall agreement."""
+    outs = {}
+    for kv in ("bf16", "int8"):
+        cfg, params, engine = _engine_setup("minicpm3-4b", None,
+                                            kv_cache_dtype=kv)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (6, 9, 4)]
+        metrics = engine.run([(0, prompts[0], 5), (1, prompts[1], 5),
+                              (2, prompts[2], 5)])
+        outs[kv] = {r.req_id: r.output_tokens for r in metrics.finished}
+    agree = 0
+    total = 0
+    for rid, ref in outs["bf16"].items():
+        assert outs["int8"][rid][0] == ref[0], "first token must match"
+        agree += sum(a == b for a, b in zip(outs["int8"][rid], ref))
+        total += len(ref)
+    assert agree / total >= 0.8, f"int8 KV agreement {agree}/{total}"
+
+
+def test_engine_rejects_bad_configs():
+    cfg = reduced(get_config("xlstm-125m")).with_(remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="recurrent|state integrates"):
+        ServingEngine(cfg, params,
+                      EngineConfig(n_slots=2, cache_len=32, prefill_buckets=(8,)))
+    _, _, engine = _engine_setup("llama3.2-1b", None, cache_len=16)
+    with pytest.raises(ValueError, match="cache_len"):
+        engine.add_request(list(range(1, 14)), max_new_tokens=8)
+
+
+# ---------------------------------------------------------------------------
+# Engine components (host-side units)
+# ---------------------------------------------------------------------------
+
+def test_fifo_scheduler_slots_and_queueing():
+    sched = FIFOScheduler(n_slots=2, max_prefills_per_step=1)
+    reqs = [Request(req_id=i, prompt=[1], max_new_tokens=1) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    # one admission per step (interleave policy), lowest slot first
+    assert [(r.req_id, s) for r, s in sched.schedule()] == [(0, 0)]
+    assert [(r.req_id, s) for r, s in sched.schedule()] == [(1, 1)]
+    assert sched.schedule() == []  # pool full, 2 still waiting
+    assert sched.free_slots == 0 and len(sched.waiting) == 2
+    done = sched.release(0)
+    assert done.req_id == 0 and done.slot is None
+    # freed slot is immediately reusable, FIFO order preserved
+    assert [(r.req_id, s) for r, s in sched.schedule()] == [(2, 0)]
+    sched.release(1)
+    assert [(r.req_id, s) for r, s in sched.schedule()] == [(3, 1)]
+    sched.release(0), sched.release(1)
+    assert not sched.has_work and sched.free_slots == 2
+
+
+def test_sample_tokens_policies():
+    logits = jnp.asarray([[0.0, 1.0, 3.0, 2.0]] * 3, jnp.float32)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3))
+    # greedy lanes: argmax regardless of key/temperature
+    toks = sample_tokens(logits, jnp.ones((3,)), jnp.zeros((3,), jnp.int32),
+                         jnp.ones((3,), bool), keys)
+    assert toks.tolist() == [2, 2, 2]
+    # top_k=1 equals greedy even when stochastic
+    toks = sample_tokens(logits, jnp.full((3,), 5.0),
+                         jnp.ones((3,), jnp.int32), jnp.zeros((3,), bool), keys)
+    assert toks.tolist() == [2, 2, 2]
+    # top_k=2 at high temperature only ever emits the top-2 set {2, 3}
+    seen = set()
+    for s in range(20):
+        ks = jax.vmap(jax.random.PRNGKey)(jnp.arange(3) + 100 * s)
+        toks = sample_tokens(logits, jnp.full((3,), 10.0),
+                             jnp.full((3,), 2, jnp.int32),
+                             jnp.zeros((3,), bool), ks)
+        seen |= set(toks.tolist())
+    assert seen == {2, 3}
+
+
+def test_slot_cache_insert_free_roundtrip():
+    cfg = reduced(get_config("llama3.2-1b")).with_(remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pool = SlotCache(cfg, n_slots=3, cache_len=16)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0,
+                                          cfg.vocab_size)}
+    _, single = prefill(params, cfg, batch, cache_len=16)
+    pool.insert(single, 1)
+    assert pool.pos.tolist() == [0, 6, 0]
+    # the lane's stacked-block K rows equal the batch=1 prefill cache ...
+    k_pool = np.asarray(pool.cache["blocks"][0]["k"][:, 1])
+    k_one = np.asarray(single["blocks"][0]["k"][:, 0])
+    np.testing.assert_array_equal(k_pool, k_one)
+    # ... and the other lanes stay zero
+    assert not np.asarray(pool.cache["blocks"][0]["k"][:, 0]).any()
+    pool.free(1)
+    assert pool.pos.tolist() == [0, 0, 0]
 
 
 def test_int8_kv_cache_close_to_bf16():
