@@ -1,7 +1,8 @@
-"""Serving benchmark: continuous batching vs the static-batch baseline.
+"""Serving benchmark: continuous batching vs the static-batch baseline,
+and the paged KV cache vs the slot cache at a fixed KV budget.
 
 A mixed-length workload (bimodal generation budgets — the realistic case
-that kills lockstep batching) is served two ways over identical requests:
+that kills lockstep batching) is served over identical requests:
 
 * **static** — FIFO groups of ``slots`` requests through
   ``launch.serve.serve_batch``: prompts padded to a common length, every
@@ -10,6 +11,11 @@ that kills lockstep batching) is served two ways over identical requests:
 * **engine** — ``repro.serving.ServingEngine``: slot-based KV cache,
   finished lanes evicted and refilled from the queue each step, prefill
   interleaved with decode.
+* **paged**  — the same engine on ``cache_mode="paged"`` with the *same
+  page budget* the slot pool would occupy, but more lanes: requests
+  reserve their own worst case instead of the global ``cache_len``, so
+  mixed-length traffic packs strictly more concurrent requests into the
+  same KV memory (the ``peak_running`` column).
 
 Throughput counts *useful* tokens only (each request's own budget), so the
 static baseline is not charged for the padded garbage it produces — the
@@ -35,10 +41,17 @@ import numpy as np
 sys.path.insert(0, str(pathlib.Path(__file__).parent))
 from bench_record import append_run  # noqa: E402
 
-from repro.configs import default_cache_len, get_config, reduced
+from repro.configs import (
+    default_cache_len,
+    default_page_count,
+    get_config,
+    reduced,
+)
 from repro.launch.serve import serve_batch
 from repro.models import init_params
 from repro.serving import EngineConfig, ServingEngine
+
+PAGE_SIZE = 16
 
 
 def make_workload(cfg, n_requests: int, prompt_len: int, gen: int, seed: int = 0):
@@ -91,16 +104,29 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
 
 
 def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
-               stagger: int = 0):
+               stagger: int = 0, **ecfg_kw):
     ecfg = EngineConfig(n_slots=slots, cache_len=cache_len,
-                        prefill_buckets=buckets)
+                        prefill_buckets=buckets, **ecfg_kw)
     engine = ServingEngine(cfg, params, ecfg)
     arrivals = [(i * stagger, p, b) for i, (p, b) in enumerate(workload)]
     metrics = engine.run(arrivals)
     rep = metrics.report()
-    rep["mode"] = "engine"
+    rep["mode"] = "paged" if ecfg_kw.get("cache_mode") == "paged" else "engine"
     rep["stagger"] = stagger
     return rep
+
+
+def paged_kw(slots: int, cache_len: int, n_requests: int):
+    """Paged engine at the *slot pool's* KV budget: same page count the
+    slot cache would pin (``slots`` worst-case lanes), but lane count
+    unconstrained by memory — admission reserves per-request worst cases,
+    so concurrency is bounded by actual lengths, not by ``cache_len``."""
+    return dict(
+        cache_mode="paged",
+        page_size=PAGE_SIZE,
+        n_pages=default_page_count(slots, cache_len, PAGE_SIZE),
+        prefill_chunk=None,
+    ), min(max(2 * slots, slots + 1), n_requests)
 
 
 def main():
@@ -185,6 +211,20 @@ def main():
                   f"{rec['tokens_per_s']:8.1f} {rec['decode_steps']:6d} "
                   f"{rec['ttft_mean_s']:10.3f} {rec['ttft_max_s']:9.3f}")
 
+        # paged sweep: SAME page budget as the slot pool above, more lanes
+        pkw, lanes = paged_kw(slots, cache_len, args.requests)
+        run_engine(cfg, params, warm, lanes, cache_len, buckets, 0, **pkw)
+        rec = max((run_engine(cfg, params, workload, lanes, cache_len,
+                              buckets, 0, **pkw)
+                   for _ in range(args.repeats)),
+                  key=lambda r: r["tokens_per_s"])
+        rec["slots"], rec["lanes"], rec["repeats"] = slots, lanes, args.repeats
+        records.append(rec)
+        print(f"{'paged':>8s} {slots:6d} {0:8d} {rec['tokens_per_s']:8.1f} "
+              f"{rec['decode_steps']:6d} {rec['ttft_mean_s']:10.3f} "
+              f"{rec['ttft_max_s']:9.3f}   "
+              f"peak {rec['peak_running']} lanes in {rec['pages_total']} pages")
+
     # headline: per-slot-count ratio of the engine's best arrival pattern vs
     # static's best case (all requests available at t=0 — static cannot even
     # express staggered arrivals without waiting to fill a batch). The
@@ -201,6 +241,18 @@ def main():
           + ", ".join(f"{r:.2f}x @ {s} slots" for s, r in ratios.items())
           + " (mixed budgets; finished lanes refill instead of idling)")
 
+    # paged headline: concurrency at the slot pool's KV budget — the slot
+    # cache can NEVER exceed `slots` concurrent requests in that memory;
+    # the paged pool packs by actual lengths
+    paged_conc = {}
+    for slots in slot_sweep:
+        p = next(r for r in records
+                 if r["mode"] == "paged" and r["slots"] == slots)
+        paged_conc[slots] = (p["peak_running"], p["tokens_per_s"])
+    print("paged concurrency at the slot KV budget: "
+          + ", ".join(f"{c} lanes vs {s} slots ({t:.1f} tok/s)"
+                      for s, (c, t) in paged_conc.items()))
+
     run = {
         "arch": cfg.name,
         "config": {
@@ -210,6 +262,7 @@ def main():
         },
         "speedup_vs_static": round(speedup, 3),
         "speedup_by_slots": {str(s): round(r, 3) for s, r in ratios.items()},
+        "paged_peak_lanes_by_slots": {str(s): c for s, (c, _) in paged_conc.items()},
         "records": records,
     }
     stamped = append_run(args.out, "serve_bench", run)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import (
+    DEFAULT_PAGE_SIZE,
     KV_CACHE_HEADROOM,
     MLAConfig,
     ModelConfig,
@@ -16,6 +17,8 @@ from repro.configs.base import (
     SHAPES,
     ShapeConfig,
     default_cache_len,
+    default_page_count,
+    pages_for,
 )
 
 from repro.configs import (

@@ -34,6 +34,25 @@ def default_cache_len(prompt_len: int, gen_tokens: int,
     return prompt_len + gen_tokens + headroom
 
 
+# Paged KV-cache policy (repro/paging/). A page holds PAGE_SIZE token rows;
+# 16 keeps per-request internal fragmentation under one MXU tile while the
+# byte-size int8 page (16 x H x D int8 + scales) stays a few KiB — small
+# enough that mixed-length traffic packs the pool tightly.
+DEFAULT_PAGE_SIZE = 16
+
+
+def pages_for(tokens: int, page_size: int = DEFAULT_PAGE_SIZE) -> int:
+    """Pages covering ``tokens`` cache rows (ceil division)."""
+    return -(-max(int(tokens), 0) // page_size)
+
+
+def default_page_count(n_lanes: int, cache_len: int,
+                       page_size: int = DEFAULT_PAGE_SIZE) -> int:
+    """Pool size matching the slot-cache KV budget: ``n_lanes`` worst-case
+    requests, plus the reserved trash page 0 (see paging/manager.py)."""
+    return n_lanes * pages_for(cache_len, page_size) + 1
+
+
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
     num_experts: int = 0          # routed experts
@@ -100,6 +119,11 @@ class ModelConfig:
     # KV cache storage dtype for decode: "bf16" | "int8" (SPOGA-sliced
     # storage: int8 payload + per-(pos, head) scale; halves cache HBM reads)
     kv_cache_dtype: str = "bf16"
+    # Paged-attention implementation for block-table decode (repro/paging/):
+    # None = auto (Pallas kernel on TPU, jnp gather twin elsewhere);
+    # "jnp" | "pallas" | "pallas_interpret" force a path (interpret covers
+    # the kernel body in CI, mirroring the GEMM backends).
+    paged_attn_impl: Optional[str] = None
     # Fully unroll every lax.scan (layers + loss chunks). Used by the
     # dry-run's cost-calibration pass: XLA's HloCostAnalysis counts a
     # while-loop body ONCE (not x trip count), so scanned stacks would
@@ -124,6 +148,10 @@ class ModelConfig:
             from repro.backends import get_backend
 
             get_backend(self.gemm_backend)  # raises KeyError on unknown names
+        if self.paged_attn_impl not in (None, "jnp", "pallas", "pallas_interpret"):
+            raise ValueError(
+                "paged_attn_impl must be None (auto), 'jnp', 'pallas' or "
+                f"'pallas_interpret', got {self.paged_attn_impl!r}")
         if self.family == "moe" and self.moe is None:
             raise ValueError("moe family requires moe config")
 

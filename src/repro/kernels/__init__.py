@@ -2,11 +2,13 @@
 
 ``spoga_gemm``  — the paper's fused bit-sliced dataflow (one kernel).
 ``deas_gemm``   — prior-work baseline with materialized slice partials.
+``paged_attention`` — block-table decode attention (fused int8 dequant).
 ``ops``         — jit'd dispatch (TPU kernel / interpret / jnp fallback).
 ``ref``         — pure-jnp exact oracles.
 """
 
 from repro.kernels.ops import int8_gemm, int8_gemm_dequant
+from repro.kernels.paged_attention import paged_attention, paged_attention_ref
 from repro.kernels.spoga_gemm import spoga_gemm
 from repro.kernels.spoga_gemm_dequant import spoga_gemm_dequant
 from repro.kernels.deas_gemm import deas_gemm
@@ -14,6 +16,8 @@ from repro.kernels.deas_gemm import deas_gemm
 __all__ = [
     "int8_gemm",
     "int8_gemm_dequant",
+    "paged_attention",
+    "paged_attention_ref",
     "spoga_gemm",
     "spoga_gemm_dequant",
     "deas_gemm",

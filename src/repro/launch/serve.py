@@ -7,6 +7,12 @@ of mixed-length prompts with staggered arrivals:
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --requests 8 --slots 4 --prompt-len 32 --gen 16 --stagger 2
 
+``--cache-mode paged`` serves from the global page pool (block tables,
+optional ``--prefill-chunk`` chunked long-prompt admission, int8 byte-size
+pages via ``--kv-cache-dtype int8``, ``--paged-attn pallas_interpret`` to
+force the Pallas kernel through the interpreter off-TPU).  ``--stream``
+prints every token the moment it reaches the host.
+
 ``--static`` (and enc-dec / frontend archs, which the engine does not
 admit) falls back to the lockstep static-batch baseline ``serve_batch`` —
 kept both as the reference implementation the engine is tested against and
@@ -109,14 +115,25 @@ def _engine_main(cfg, params, args):
         n_slots=args.slots,
         max_prefills_per_step=args.max_prefills,
         prefill_buckets=_auto_buckets(args.prompt_len) if use_buckets else None,
+        cache_mode=args.cache_mode,
+        page_size=args.page_size,
+        n_pages=args.pages,
+        prefill_chunk=args.prefill_chunk,
     )
     engine = ServingEngine(cfg, params, ecfg)
     arrivals = [(s, p, g, sampling)
                 for s, p, g in synthetic_workload(cfg, args.requests,
                                                   args.prompt_len, args.gen,
                                                   args.stagger, args.seed)]
-    metrics = engine.run(arrivals)
+    on_token = (lambda req, tok: print(f"[stream] req {req.req_id}: {tok}",
+                                       flush=True)) if args.stream else None
+    metrics = engine.run(arrivals, on_token=on_token)
     print(metrics.format_report())
+    if engine.paged:
+        m = metrics
+        print(f"[engine] paged: peak {m.peak_running} concurrent lanes, "
+              f"{m.peak_pages_used}/{m.pages_total} pages "
+              f"(page_size {m.page_size}), {m.chunk_steps} prefill chunks")
     if metrics.finished:
         first = min(metrics.finished, key=lambda r: r.req_id)
         print(f"[engine] sample (req {first.req_id}):", first.output_tokens[:12])
@@ -158,13 +175,27 @@ def main():
                     help="GEMM backend registry name; default auto-selection")
     ap.add_argument("--kv-cache-dtype", default="bf16", choices=["bf16", "int8"],
                     help="int8: SPOGA-style byte-size KV cache (+scales)")
+    ap.add_argument("--cache-mode", default="slot", choices=["slot", "paged"],
+                    help="paged: global page pool + block tables (repro/paging)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per KV page")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged: pool size in pages (default: slot-equivalent budget)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged: admit long prompts in chunks of this many "
+                         "tokens (multiple of page-size), interleaved with decode")
+    ap.add_argument("--paged-attn", default=None,
+                    choices=["jnp", "pallas", "pallas_interpret"],
+                    help="paged attention impl (default: auto by platform)")
+    ap.add_argument("--stream", action="store_true",
+                    help="engine: print every token as it reaches the host")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
     cfg = cfg.with_(quant_mode=args.quant_mode, kv_cache_dtype=args.kv_cache_dtype,
-                    gemm_backend=args.gemm_backend)
+                    gemm_backend=args.gemm_backend, paged_attn_impl=args.paged_attn)
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     engine_capable = not cfg.is_encoder_decoder and cfg.frontend is None

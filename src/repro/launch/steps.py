@@ -112,9 +112,16 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int, with_lengths: bool = Fal
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
-    def serve_step(params, tokens, cache):
-        return model_lib.decode_step(params, cfg, tokens, cache)
+def make_serve_step(cfg: ModelConfig, with_active: bool = False):
+    """``with_active``: the serving engine's variant — takes a (B,) live-lane
+    mask so idle lanes' positions are pinned instead of drifting and paged
+    writes are redirected to the trash page (see ``model.decode_step``)."""
+    if with_active:
+        def serve_step(params, tokens, cache, active):
+            return model_lib.decode_step(params, cfg, tokens, cache, active)
+    else:
+        def serve_step(params, tokens, cache):
+            return model_lib.decode_step(params, cfg, tokens, cache)
 
     return serve_step
 

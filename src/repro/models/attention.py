@@ -164,6 +164,49 @@ def quantize_kv(t):
     return q, scale
 
 
+def _decode_qkv(x_t, p, cfg: ModelConfig, pos):
+    """Shared decode-side projections + RoPE. Returns q, k, v (B, 1, H, D)."""
+    b = x_t.shape[0]
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    q = linear(x_t, p["wq"], qm, be).reshape(b, 1, hq, hd)
+    k = linear(x_t, p["wk"], qm, be).reshape(b, 1, hkv, hd)
+    v = linear(x_t, p["wv"], qm, be).reshape(b, 1, hkv, hd)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    return q, k, v
+
+
+def _decode_attend(qg, k_cache, v_cache, k_scale, v_scale, valid):
+    """Single-token attention math over a logically-contiguous KV view.
+
+    qg: (B, 1, G, Hkv, D); k_cache/v_cache: (B, S, Hkv, D) payloads
+    (int8 when scales are given); valid: (B, S) bool.  Shared by the slot
+    path and the paged jnp twin so the two lower to the same graph — that
+    structural identity is what makes paged serving bitwise
+    output-invisible when the gathered view matches the slot cache_len.
+    """
+    hd = qg.shape[-1]
+    int8_cache = k_scale is not None
+    # int8 payload feeds the dot (fused dequant / MXU int8 path); the
+    # per-(pos, head) scale factors out of the D-contraction.
+    k_op = k_cache.astype(qg.dtype) if int8_cache else k_cache
+    scores = jnp.einsum("bcghd,bshd->bcghs", qg, k_op,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if int8_cache:
+        scores = scores * k_scale.transpose(0, 2, 1)[:, None, None, :, :]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if int8_cache:
+        probs = probs * v_scale.transpose(0, 2, 1)[:, None, None, :, :]
+        v_op = v_cache.astype(qg.dtype)
+    else:
+        v_op = v_cache
+    return jnp.einsum("bcghs,bshd->bcghd", probs.astype(v_op.dtype), v_op,
+                      preferred_element_type=jnp.float32)
+
+
 def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
     """One-token decode. x_t: (B, 1, d); cache {"k","v"[,"k_scale","v_scale"]}
     payloads (B, Smax, Hkv, D); pos (B,). Returns (out, new cache dict)."""
@@ -171,12 +214,7 @@ def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
     hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     qm, be = cfg.quant_mode, cfg.gemm_backend
     int8_cache = cfg.kv_cache_dtype == "int8"
-    q = linear(x_t, p["wq"], qm, be).reshape(b, 1, hq, hd)
-    k = linear(x_t, p["wk"], qm, be).reshape(b, 1, hkv, hd)
-    v = linear(x_t, p["wv"], qm, be).reshape(b, 1, hkv, hd)
-    posb = pos[:, None]
-    q = apply_rope(q, posb, cfg.rope_theta)
-    k = apply_rope(k, posb, cfg.rope_theta)
+    q, k, v = _decode_qkv(x_t, p, cfg, pos)
 
     k_cache, v_cache = cache["k"], cache["v"]
     smax = k_cache.shape[1]
@@ -191,6 +229,7 @@ def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
         )(c, t, i)
 
     new_cache = dict(cache)
+    k_scale = v_scale = None
     if int8_cache:
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
@@ -204,13 +243,6 @@ def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
 
     g = hq // hkv
     qg = q.reshape(b, 1, g, hkv, hd)
-    # int8 payload feeds the dot (fused dequant / MXU int8 path); the
-    # per-(pos, head) scale factors out of the D-contraction.
-    k_op = k_cache.astype(qg.dtype) if int8_cache else k_cache
-    scores = jnp.einsum("bcghd,bshd->bcghs", qg, k_op,
-                        preferred_element_type=jnp.float32) * (hd ** -0.5)
-    if int8_cache:
-        scores = scores * k_scale.transpose(0, 2, 1)[:, None, None, :, :]
     kpos = jnp.arange(smax)[None, :]
     if window is not None:
         # Ring cache (smax == window): before the ring wraps only slots
@@ -218,16 +250,166 @@ def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
         valid = jnp.where(pos[:, None] >= smax, jnp.ones_like(kpos, bool), kpos <= pos[:, None])
     else:
         valid = kpos <= pos[:, None]
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    if int8_cache:
-        probs = probs * v_scale.transpose(0, 2, 1)[:, None, None, :, :]
-        v_op = v_cache.astype(qg.dtype)
-    else:
-        v_op = v_cache
-    out = jnp.einsum("bcghs,bshd->bcghd", probs.astype(v_op.dtype), v_op,
-                     preferred_element_type=jnp.float32)
+    out = _decode_attend(qg, k_cache, v_cache, k_scale, v_scale, valid)
     out = out.astype(x_t.dtype).reshape(b, 1, hq * hd)
+    return linear(out, p["wo"], qm, be), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged attention (block-table KV cache; repro/paging/)
+# ---------------------------------------------------------------------------
+
+def _resolve_paged_impl(cfg: ModelConfig) -> str:
+    if cfg.paged_attn_impl is not None:
+        return cfg.paged_attn_impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _write_page(tables, pos, page_size, active):
+    """(physical page, in-page offset) each lane's next token writes to.
+
+    Inactive lanes are redirected to the reserved trash page 0: unlike the
+    slot cache, a lane's pages return to the shared pool on eviction, so a
+    garbage write through a stale table entry would corrupt whichever
+    request owns that page now.
+    """
+    pg = jnp.take_along_axis(tables, (pos // page_size)[:, None], axis=1,
+                             mode="clip")[:, 0]
+    off = pos % page_size
+    if active is not None:
+        pg = jnp.where(active, pg, 0)
+        off = jnp.where(active, off, 0)
+    return pg, off
+
+
+def _gather_pages(pool, tables):
+    """(n_pages, page_size, ...) pool + (B, P) tables -> (B, P*page_size, ...)
+    logically-contiguous per-lane view (gather; the Pallas kernel instead
+    streams pages directly from the pool)."""
+    b, n_tbl = tables.shape
+    g = pool[tables]
+    return g.reshape((b, n_tbl * pool.shape[1]) + pool.shape[2:])
+
+
+def paged_attention_decode(x_t, p, cfg: ModelConfig, cache, pos, tables, *,
+                           active=None):
+    """One-token decode over this layer's page pools.
+
+    cache: {"kp","vp"[,"kp_scale","vp_scale"]} with payloads
+    (n_pages, page_size, Hkv, D); tables: (B, P) int32 block tables;
+    pos: (B,).  The new token's K/V is scattered into page
+    ``tables[b, pos // page_size]`` and attention runs over the gathered
+    logical view (jnp twin) or streams pages inside the Pallas kernel.
+    With ``P * page_size == cache_len`` the jnp twin is bitwise identical
+    to :func:`attention_decode` on a slot cache.
+    """
+    b = x_t.shape[0]
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    int8_cache = "kp_scale" in cache
+    q, k, v = _decode_qkv(x_t, p, cfg, pos)
+
+    kp, vp = cache["kp"], cache["vp"]
+    page_size = kp.shape[1]
+    pg, off = _write_page(tables, pos, page_size, active)
+
+    new_cache = dict(cache)
+    if int8_cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        kp, vp = kp.at[pg, off].set(kq[:, 0]), vp.at[pg, off].set(vq[:, 0])
+        kps = cache["kp_scale"].at[pg, off].set(ks[:, 0])
+        vps = cache["vp_scale"].at[pg, off].set(vs[:, 0])
+        new_cache.update(kp_scale=kps, vp_scale=vps)
+    else:
+        kp = kp.at[pg, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[pg, off].set(v[:, 0].astype(vp.dtype))
+    new_cache.update(kp=kp, vp=vp)
+
+    g = hq // hkv
+    impl = _resolve_paged_impl(cfg)
+    if impl == "jnp":
+        qg = q.reshape(b, 1, g, hkv, hd)
+        smax = tables.shape[1] * page_size
+        k_all, v_all = _gather_pages(kp, tables), _gather_pages(vp, tables)
+        ks_all = _gather_pages(kps, tables) if int8_cache else None
+        vs_all = _gather_pages(vps, tables) if int8_cache else None
+        valid = jnp.arange(smax)[None, :] <= pos[:, None]
+        out = _decode_attend(qg, k_all, v_all, ks_all, vs_all, valid)
+    else:
+        from repro.kernels.paged_attention import paged_attention
+
+        qk = q[:, 0].reshape(b, g, hkv, hd).transpose(0, 2, 1, 3)  # (B,Hkv,G,D)
+        out = paged_attention(
+            qk, kp, vp, tables, pos + 1,
+            k_scale=new_cache.get("kp_scale"),
+            v_scale=new_cache.get("vp_scale"),
+            interpret=(impl == "pallas_interpret"),
+        )
+        out = out.transpose(0, 2, 1, 3)[:, None]  # (B, 1, G, Hkv, D)
+    out = out.astype(x_t.dtype).reshape(b, 1, hq * hd)
+    return linear(out, p["wo"], qm, be), new_cache
+
+
+def _chunk_pages(tables_row, start, chunk, page_size):
+    """Page/offset pairs for chunk positions ``start + [0, chunk)`` of one
+    lane. tables_row: (1, P); start: (1,) int32. Returns ((C,), (C,))."""
+    idx = start[:, None] + jnp.arange(chunk)[None, :]          # (1, C)
+    pg = jnp.take_along_axis(tables_row, idx // page_size, axis=1, mode="clip")
+    return pg[0], (idx % page_size)[0]
+
+
+def attention_chunk(x, p, cfg: ModelConfig, cache, tables_row, start, *,
+                    positions):
+    """Chunked-prefill extend of one lane's paged KV (B == 1).
+
+    x: (1, C, d) chunk hidden states; cache: this layer's page pools;
+    tables_row: (1, P) block-table row; start: (1,) absolute position of
+    the chunk's first token; positions: (1, C) for RoPE.  Writes the
+    chunk's K/V into the lane's pages, then attends gathered prefix +
+    chunk under the standard causal mask.  Prior chunks' rows are bitwise
+    what full prefill computes (the bf16 cache roundtrip is lossless) and
+    a padded tail is overwritten by the next chunk before any query can
+    attend it, so chunking stays output-invisible.
+    """
+    b, cs, _ = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    int8_cache = "kp_scale" in cache
+    q = linear(x, p["wq"], qm, be).reshape(b, cs, hq, hd)
+    k = linear(x, p["wk"], qm, be).reshape(b, cs, hkv, hd)
+    v = linear(x, p["wv"], qm, be).reshape(b, cs, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    kp, vp = cache["kp"], cache["vp"]
+    page_size = kp.shape[1]
+    pg, off = _chunk_pages(tables_row, start, cs, page_size)
+
+    new_cache = dict(cache)
+    if int8_cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        kp, vp = kp.at[pg, off].set(kq[0]), vp.at[pg, off].set(vq[0])
+        kps = cache["kp_scale"].at[pg, off].set(ks[0])
+        vps = cache["vp_scale"].at[pg, off].set(vs[0])
+        new_cache.update(kp_scale=kps, vp_scale=vps)
+    else:
+        kp = kp.at[pg, off].set(k[0].astype(kp.dtype))
+        vp = vp.at[pg, off].set(v[0].astype(vp.dtype))
+    new_cache.update(kp=kp, vp=vp)
+
+    k_all, v_all = _gather_pages(kp, tables_row), _gather_pages(vp, tables_row)
+    if int8_cache:
+        # prefill-side chunks attend the dequantized pages (tolerance path;
+        # the exactness argument applies to the full-precision pools)
+        ks_all = _gather_pages(kps, tables_row)
+        vs_all = _gather_pages(vps, tables_row)
+        k_all = (k_all.astype(jnp.float32) * ks_all[..., None]).astype(x.dtype)
+        v_all = (v_all.astype(jnp.float32) * vs_all[..., None]).astype(x.dtype)
+    qg = q.reshape(b, cs, hq // hkv, hkv, hd)
+    out = _attend_chunk(qg, k_all, v_all, start[0], 0, True, None)
+    out = out.astype(x.dtype).reshape(b, cs, hq * hd)
     return linear(out, p["wo"], qm, be), new_cache
 
 
@@ -310,10 +492,39 @@ def mla_block(x, p, cfg: ModelConfig, positions):
     return out, (c_kv, k_rope.reshape(b, s, m.qk_rope_head_dim))
 
 
+def _mla_attend(q_nope, q_rope, ckv_view, kr_view, pos, p, cfg: ModelConfig):
+    """Absorbed-matmul MLA attention over a logically-contiguous latent view.
+
+    ckv_view: (B, S, kv_lora_rank); kr_view: (B, S, rope_dim).  Shared by
+    the slot path and the paged gather twin (same structural-identity
+    argument as ``_decode_attend``). Returns (B, 1, H * v_head_dim).
+    """
+    m, h = cfg.mla, cfg.n_heads
+    b = q_nope.shape[0]
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum(
+        "bchd,lhd->bchl", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
+    )  # (B,1,H,latent)
+    scores = jnp.einsum("bchl,bsl->bchs", q_lat.astype(ckv_view.dtype), ckv_view,
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bchr,bsr->bchs", q_rope.astype(kr_view.dtype), kr_view,
+                         preferred_element_type=jnp.float32)
+    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    smax = ckv_view.shape[1]
+    valid = jnp.arange(smax)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bchs,bsl->bchl", probs.astype(ckv_view.dtype), ckv_view,
+                         preferred_element_type=jnp.float32)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bchl,lhv->bchv", out_lat, w_uv.astype(jnp.float32))
+    return out.reshape(b, 1, h * m.v_head_dim)
+
+
 def mla_decode(x_t, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
     """Absorbed-matmul MLA decode: attention runs in the latent space, the
     cache holds only (c_kv, k_rope) — the MLA memory saving."""
-    m, h = cfg.mla, cfg.n_heads
+    m = cfg.mla
     b = x_t.shape[0]
     qm, be = cfg.quant_mode, cfg.gemm_backend
     q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(x_t, p, cfg, pos[:, None])
@@ -325,22 +536,73 @@ def mla_decode(x_t, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
         lambda c, t, i: jax.lax.dynamic_update_slice_in_dim(c, t, i, axis=0)
     )(krope_cache, k_rope_t.reshape(b, 1, m.qk_rope_head_dim), pos)
 
-    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
-    q_lat = jnp.einsum(
-        "bchd,lhd->bchl", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
-    )  # (B,1,H,latent)
-    scores = jnp.einsum("bchl,bsl->bchs", q_lat.astype(ckv_cache.dtype), ckv_cache,
-                        preferred_element_type=jnp.float32)
-    scores += jnp.einsum("bchr,bsr->bchs", q_rope.astype(krope_cache.dtype), krope_cache,
-                         preferred_element_type=jnp.float32)
-    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    smax = ckv_cache.shape[1]
-    valid = jnp.arange(smax)[None, :] <= pos[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out_lat = jnp.einsum("bchs,bsl->bchl", probs.astype(ckv_cache.dtype), ckv_cache,
-                         preferred_element_type=jnp.float32)
-    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
-    out = jnp.einsum("bchl,lhv->bchv", out_lat, w_uv.astype(jnp.float32))
-    out = out.astype(x_t.dtype).reshape(b, 1, h * m.v_head_dim)
+    out = _mla_attend(q_nope, q_rope, ckv_cache, krope_cache, pos, p, cfg)
+    out = out.astype(x_t.dtype)
     return linear(out, p["wo"], qm, be), (ckv_cache, krope_cache)
+
+
+def mla_paged_decode(x_t, p, cfg: ModelConfig, cache, pos, tables, *,
+                     active=None):
+    """Absorbed MLA decode over latent page pools.
+
+    cache: {"ckvp","krp"} with (n_pages, page_size, rank) payloads — the
+    compressed latents are already the MLA memory saving; paging makes the
+    *pool* shared across lanes.  jnp gather twin only (the latent view is
+    rank-sized, far below the GQA KV stream the Pallas kernel targets).
+    """
+    m = cfg.mla
+    b = x_t.shape[0]
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_qkv(x_t, p, cfg, pos[:, None])
+
+    ckvp, krp = cache["ckvp"], cache["krp"]
+    pg, off = _write_page(tables, pos, ckvp.shape[1], active)
+    ckvp = ckvp.at[pg, off].set(c_kv_t[:, 0].astype(ckvp.dtype))
+    krp = krp.at[pg, off].set(
+        k_rope_t.reshape(b, m.qk_rope_head_dim).astype(krp.dtype))
+    new_cache = dict(cache, ckvp=ckvp, krp=krp)
+
+    ckv_view = _gather_pages(ckvp, tables)
+    kr_view = _gather_pages(krp, tables)
+    out = _mla_attend(q_nope, q_rope, ckv_view, kr_view, pos, p, cfg)
+    out = out.astype(x_t.dtype)
+    return linear(out, p["wo"], qm, be), new_cache
+
+
+def mla_chunk(x, p, cfg: ModelConfig, cache, tables_row, start, *, positions):
+    """Chunked-prefill extend of one lane's paged MLA latents (B == 1).
+
+    Mirrors :func:`mla_block` (the non-absorbed prefill form): the chunk's
+    latents are written to pages, then K/V are *recomputed from the
+    gathered latents* via the up-projections — bitwise the values the full
+    prefill computes, because the latent cache roundtrips bf16 losslessly
+    and the up-projection is row-independent.  This keeps chunked MLA
+    admission output-invisible even though decode later switches to the
+    absorbed form (exactly like the unchunked prefill -> decode handoff).
+    """
+    m, h = cfg.mla, cfg.n_heads
+    b, cs, _ = x.shape
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(x, p, cfg, positions)
+
+    ckvp, krp = cache["ckvp"], cache["krp"]
+    pg, off = _chunk_pages(tables_row, start, cs, ckvp.shape[1])
+    ckvp = ckvp.at[pg, off].set(c_kv[0].astype(ckvp.dtype))
+    krp = krp.at[pg, off].set(
+        k_rope.reshape(b, cs, m.qk_rope_head_dim)[0].astype(krp.dtype))
+    new_cache = dict(cache, ckvp=ckvp, krp=krp)
+
+    ckv_all = _gather_pages(ckvp, tables_row)                  # (1, L, rank)
+    kr_all = _gather_pages(krp, tables_row)                    # (1, L, rope)
+    smax = ckv_all.shape[1]
+    k_nope = linear(ckv_all, p["w_uk"], qm, be).reshape(b, smax, h, m.qk_nope_head_dim)
+    v_all = linear(ckv_all, p["w_uv"], qm, be).reshape(b, smax, h, m.v_head_dim)
+    k_all = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(kr_all[:, :, None, :], (b, smax, h, m.qk_rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qg = q.reshape(b, cs, 1, h, q.shape[-1])
+    out = _attend_chunk(qg, k_all, v_all, start[0], 0, True, None)
+    out = out.astype(x.dtype).reshape(b, cs, h * m.v_head_dim)
+    return linear(out, p["wo"], qm, be), new_cache

@@ -9,6 +9,11 @@ scanned period axis) so ``lax.scan`` can thread them through the stack:
 * ``rglru``      -> {"h","conv"}: O(1) recurrent state.
 * ``mlstm``      -> {"C","n"}: matrix memory, O(1) in sequence length.
 * ``slstm``      -> {"c","n","h"}.
+
+``paged_block_cache_shape`` gives the paged layout (repro/paging/): the
+same payloads re-cut into a global ``(n_pages, page_size, ...)`` pool that
+per-lane block tables index, for kinds whose cache grows with sequence
+length; O(1)/O(window) kinds keep the per-lane layout.
 """
 
 from __future__ import annotations
@@ -65,6 +70,49 @@ def block_cache_shape(kind: str, cfg: ModelConfig, batch: int, cache_len: int):
         s = jax.ShapeDtypeStruct((batch, cfg.n_heads, dh), f32)
         return {"c": s, "n": s, "h": s}
     raise ValueError(f"no cache for block kind {kind!r}")
+
+
+def paged_block_cache_shape(kind: str, cfg: ModelConfig, batch: int,
+                            cache_len: int, n_pages: int, page_size: int):
+    """ShapeDtypeStructs for one layer's *paged* cache of the given kind.
+
+    Attention-family kinds store KV in a global page pool shared by every
+    lane — ``(n_pages, page_size, H_kv, D)`` payloads (``kp``/``vp``, plus
+    ``kp_scale``/``vp_scale`` planes for the int8 byte-size variant) indexed
+    through per-lane block tables.  MLA pages hold the compressed latents
+    (``ckvp``/``krp``).  Kinds whose state is already O(1) or O(window) per
+    lane keep their per-lane layout from :func:`block_cache_shape`:
+
+    * recurrent state (rglru/mlstm/slstm) — nothing to page;
+    * local_attn ring buffers — a window-sized ring is its own best
+      packing; paging it would only re-introduce indirection.
+    """
+    hd = cfg.resolved_head_dim
+    if kind in ("attn", "moe", "dense_ffn_layer") or (
+        kind == "local_attn" and cfg.sliding_window is None
+    ):
+        shp = (n_pages, page_size, cfg.n_kv_heads, hd)
+        if cfg.kv_cache_dtype == "int8":
+            return {
+                "kp": jax.ShapeDtypeStruct(shp, jnp.int8),
+                "vp": jax.ShapeDtypeStruct(shp, jnp.int8),
+                "kp_scale": jax.ShapeDtypeStruct(shp[:3], jnp.float32),
+                "vp_scale": jax.ShapeDtypeStruct(shp[:3], jnp.float32),
+            }
+        return {
+            "kp": jax.ShapeDtypeStruct(shp, COMPUTE_DTYPE),
+            "vp": jax.ShapeDtypeStruct(shp, COMPUTE_DTYPE),
+        }
+    if kind == "mla":
+        m = cfg.mla
+        return {
+            "ckvp": jax.ShapeDtypeStruct(
+                (n_pages, page_size, m.kv_lora_rank), COMPUTE_DTYPE),
+            "krp": jax.ShapeDtypeStruct(
+                (n_pages, page_size, m.qk_rope_head_dim), COMPUTE_DTYPE),
+        }
+    # per-lane kinds ride the slot layout unchanged
+    return block_cache_shape(kind, cfg, batch, cache_len)
 
 
 def zeros_like_shapes(tree):

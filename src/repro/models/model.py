@@ -27,7 +27,11 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import transformer as tfm
-from repro.models.kvcache import block_cache_shape, zeros_like_shapes
+from repro.models.kvcache import (
+    block_cache_shape,
+    paged_block_cache_shape,
+    zeros_like_shapes,
+)
 from repro.models.layers import (
     COMPUTE_DTYPE,
     embed,
@@ -283,6 +287,42 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, cross_len: int = 0)
     return zeros_like_shapes(cache_shapes(cfg, batch, cache_len, cross_len))
 
 
+def paged_cache_shapes(cfg: ModelConfig, n_lanes: int, cache_len: int,
+                       page_size: int, n_pages: int):
+    """ShapeDtypeStruct tree for the *paged* decode cache (repro/paging/).
+
+    Same block layout as :func:`cache_shapes`, but attention-family KV
+    lives in global page pools indexed through ``block_tables`` —
+    ``(n_lanes, max_pages_per_lane)`` int32, logical page ``j`` of lane
+    ``b`` is physical page ``block_tables[b, j]``.  ``cache_len`` bounds a
+    single lane (it sizes the table width), not the pool.
+    """
+    if cfg.is_encoder_decoder:
+        raise ValueError("paged caches support decoder-only stacks")
+    from repro.configs.base import pages_for
+
+    lead, n_periods, tail_kinds = tfm.layer_layout(cfg)
+    max_pages = pages_for(cache_len, page_size)
+
+    def one(kind):
+        return paged_block_cache_shape(
+            tfm.effective_kind(kind, cfg), cfg, n_lanes, cache_len,
+            n_pages, page_size)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_periods,) + s.shape, s.dtype), tree
+        )
+
+    return {
+        "pos": jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+        "block_tables": jax.ShapeDtypeStruct((n_lanes, max_pages), jnp.int32),
+        "head_blocks": [one("dense_ffn_layer") for _ in range(lead)],
+        "blocks": tuple(stack(one(kind)) for kind in cfg.block_pattern) if n_periods else (),
+        "tail_blocks": [one(kind) for kind in tail_kinds],
+    }
+
+
 # ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------
@@ -382,11 +422,23 @@ def _prefill_decoder_with_cross(x, params, cfg, positions, cache):
 # Decode
 # ---------------------------------------------------------------------------
 
-def decode_step(params, cfg: ModelConfig, tokens, cache):
+def decode_step(params, cfg: ModelConfig, tokens, cache, active=None):
     """One token for every sequence. tokens: (B,) int32 (or (B,d) embeds).
+
+    ``active`` (optional, (B,) bool): lanes currently serving a request.
+    Inactive lanes still ride the fixed-shape step (continuous batching),
+    but their ``pos`` is pinned to 0 instead of advancing on garbage
+    tokens — so host metrics and paged-page accounting can never observe
+    a drifted position — and paged writes are redirected to the reserved
+    trash page.  ``active=None`` (solo decoding) advances every lane.
+
+    A ``block_tables`` key in ``cache`` marks a *paged* cache (see
+    :func:`paged_cache_shapes`); the table is threaded to every
+    attention-family block and passed through unchanged.
 
     Returns (logits (B, V), new cache with pos advanced)."""
     pos = cache["pos"]
+    tables = cache.get("block_tables")
     if tokens.ndim == 1:
         x = embed(tokens[:, None], params["embed"])
     else:
@@ -394,21 +446,24 @@ def decode_step(params, cfg: ModelConfig, tokens, cache):
 
     new_cache = dict(cache)
     for i, p in enumerate(params.get("head_blocks", [])):
-        x, c = tfm.apply_block_decode(x, p, "dense_ffn_layer", cfg, cache["head_blocks"][i], pos)
+        x, c = tfm.apply_block_decode(x, p, "dense_ffn_layer", cfg, cache["head_blocks"][i], pos,
+                                      tables=tables, active=active)
         new_cache["head_blocks"] = list(new_cache.get("head_blocks", []))
         new_cache["head_blocks"][i] = c
     if params.get("blocks", ()):
         if cfg.is_encoder_decoder:
             x, nb = _decode_with_cross(x, params, cfg, cache, pos)
         else:
-            x, nb = tfm.scan_periods_decode(x, params["blocks"], cache["blocks"], cfg, pos)
+            x, nb = tfm.scan_periods_decode(x, params["blocks"], cache["blocks"], cfg, pos,
+                                            tables=tables, active=active)
         new_cache["blocks"] = nb
     lead, n_periods, tail_kinds = tfm.layer_layout(cfg)
     for i, p in enumerate(params.get("tail_blocks", [])):
-        x, c = tfm.apply_block_decode(x, p, tail_kinds[i], cfg, cache["tail_blocks"][i], pos)
+        x, c = tfm.apply_block_decode(x, p, tail_kinds[i], cfg, cache["tail_blocks"][i], pos,
+                                      tables=tables, active=active)
         new_cache["tail_blocks"] = list(new_cache.get("tail_blocks", []))
         new_cache["tail_blocks"][i] = c
-    new_cache["pos"] = pos + 1
+    new_cache["pos"] = pos + 1 if active is None else jnp.where(active, pos + 1, 0)
     h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(h, _head_table(params, cfg))[:, 0, :]
     return logits, new_cache

@@ -174,12 +174,22 @@ def apply_block_prefill(x, p, kind: str, cfg: ModelConfig, positions, cache_temp
 # Decode-time single-token application
 # ---------------------------------------------------------------------------
 
-def apply_block_decode(x_t, p, kind: str, cfg: ModelConfig, cache, pos):
+def apply_block_decode(x_t, p, kind: str, cfg: ModelConfig, cache, pos,
+                       tables=None, active=None):
+    """One-token decode through one block.  A paged cache is recognized by
+    its pool keys (``kp``/``ckvp``); ``tables`` are the block tables
+    threaded down from the cache root, ``active`` the live-lane mask (see
+    ``model.decode_step``).  Per-lane kinds (recurrent state, local-attn
+    rings) take the same path in both cache modes."""
     kind = effective_kind(kind, cfg)
     h = rmsnorm(x_t, p["norm1"], cfg.norm_eps)
     if kind in ("attn", "local_attn", "moe", "dense_ffn_layer"):
         window = cfg.sliding_window if kind == "local_attn" else None
-        a, cache = attn.attention_decode(h, p["attn"], cfg, cache, pos, window=window)
+        if "kp" in cache:
+            a, cache = attn.paged_attention_decode(h, p["attn"], cfg, cache, pos,
+                                                   tables, active=active)
+        else:
+            a, cache = attn.attention_decode(h, p["attn"], cfg, cache, pos, window=window)
         x_t = x_t + a
         h2 = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
         if kind == "moe":
@@ -188,9 +198,13 @@ def apply_block_decode(x_t, p, kind: str, cfg: ModelConfig, cache, pos):
             f = glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
         x_t = x_t + f
     elif kind == "mla":
-        a, (ckv, kr) = attn.mla_decode(h, p["attn"], cfg, cache["ckv"], cache["kr"], pos)
+        if "ckvp" in cache:
+            a, cache = attn.mla_paged_decode(h, p["attn"], cfg, cache, pos,
+                                             tables, active=active)
+        else:
+            a, (ckv, kr) = attn.mla_decode(h, p["attn"], cfg, cache["ckv"], cache["kr"], pos)
+            cache = {**cache, "ckv": ckv, "kr": kr}
         x_t = x_t + a
-        cache = {**cache, "ckv": ckv, "kr": kr}
         h2 = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
         x_t = x_t + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
     elif kind == "rglru":
@@ -276,7 +290,8 @@ def scan_periods(x, stacked_params, cfg: ModelConfig, positions, *, causal=True)
     return x, aux
 
 
-def scan_periods_decode(x_t, stacked_params, stacked_cache, cfg: ModelConfig, pos):
+def scan_periods_decode(x_t, stacked_params, stacked_cache, cfg: ModelConfig, pos,
+                        tables=None, active=None):
     pattern = cfg.block_pattern
 
     def period_fn(carry, xs):
@@ -284,7 +299,10 @@ def scan_periods_decode(x_t, stacked_params, stacked_cache, cfg: ModelConfig, po
         slot_params, slot_cache = xs
         new_cache = []
         for s, kind in enumerate(pattern):
-            h, c = apply_block_decode(h, slot_params[s], kind, cfg, slot_cache[s], pos)
+            # tables/active are loop-invariant captures: every period indexes
+            # its own page pool through the same per-lane block tables
+            h, c = apply_block_decode(h, slot_params[s], kind, cfg, slot_cache[s], pos,
+                                      tables=tables, active=active)
             new_cache.append(c)
         return h, tuple(new_cache)
 

@@ -1,0 +1,35 @@
+"""Paged KV-cache subsystem: a global device-resident page pool shared by
+every serving lane, per-lane block tables, and chunked prefill.
+
+* ``manager.PageManager`` — host-side (numpy) page bookkeeping: alloc /
+  free / reservations / defrag, mirrored into a jit-visible int32 block
+  table so the decode step never retraces.
+* ``cache.PagedCache``   — the device pools (one per layer, built from
+  ``models/kvcache.paged_block_cache_shape``) + traceable page scatter.
+* ``prefill.make_chunk_step`` — page-sized chunked prefill, so one long
+  admission interleaves with in-flight decodes instead of stalling them.
+
+Attention itself lives where the rest of the model math lives:
+``models/attention.paged_attention_decode`` (jnp gather twin and the
+``kernels/paged_attention`` Pallas kernel) behind the cache-kind dispatch
+in ``models/transformer.apply_block_decode``.
+"""
+
+from repro.paging.cache import PagedCache, paged_insert
+from repro.paging.manager import PageManager
+from repro.paging.prefill import (
+    CHUNKABLE_KINDS,
+    chunkable,
+    make_chunk_step,
+    stack_kinds,
+)
+
+__all__ = [
+    "CHUNKABLE_KINDS",
+    "PageManager",
+    "PagedCache",
+    "chunkable",
+    "make_chunk_step",
+    "paged_insert",
+    "stack_kinds",
+]

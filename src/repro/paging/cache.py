@@ -1,0 +1,176 @@
+"""Device-side paged KV cache: page pools + traceable scatter/insert.
+
+``PagedCache`` is the paged counterpart of ``serving.slots.SlotCache``:
+one pool pytree allocated once (built from
+``models/model.paged_cache_shapes``), with attention-family KV in global
+``(n_pages, page_size, ...)`` pools and per-lane state (recurrent cells,
+local-attention rings, ``pos``) in lane-indexed leaves.  Host bookkeeping
+lives in ``manager.PageManager``; the block table is the only
+host-mutated array the jitted decode step reads.
+
+``paged_insert`` is traceable so the engine can fuse
+prefill + first-token sample + page scatter into ONE dispatch, exactly
+like the slot engine's fused admission.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, default_page_count, pages_for
+from repro.models import model as model_lib
+from repro.models.kvcache import zeros_like_shapes
+from repro.paging.manager import PageManager
+
+# paged-pool leaf -> the key holding the same rows in a contiguous
+# (batch=1) prefill cache from ``model.prefill``
+_POOL_KEY_MAP = {
+    "kp": "k", "vp": "v", "kp_scale": "k_scale", "vp_scale": "v_scale",
+    "ckvp": "ckv", "krp": "kr",
+}
+
+
+def _lane_update(full, part, lane, axis):
+    """Write the batch=1 ``part`` into lane ``lane`` of ``full`` (per-lane
+    leaves: recurrent state, local-attn rings)."""
+    starts = tuple(
+        jnp.asarray(lane, jnp.int32) if i == axis else 0
+        for i in range(full.ndim)
+    )
+    return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), starts)
+
+
+def _scatter_block(pool_blk, single_blk, lane, page_ids, stacked: bool):
+    """Insert one layer(-stack)'s prefill cache: paged dicts scatter whole
+    pages, per-lane dicts scatter the lane row.  ``stacked`` marks leaves
+    with a leading scanned-period axis."""
+    if any(k in pool_blk for k in ("kp", "ckvp")):
+        out = {}
+        for pk, leaf in pool_blk.items():
+            src = single_blk[_POOL_KEY_MAP[pk]]
+            if stacked:
+                rows = src[:, 0]                      # (periods, S, ...)
+                ps = leaf.shape[2]
+                rows = rows.reshape(
+                    (rows.shape[0], rows.shape[1] // ps, ps) + rows.shape[2:])
+                out[pk] = leaf.at[:, page_ids].set(rows.astype(leaf.dtype))
+            else:
+                rows = src[0]                         # (S, ...)
+                ps = leaf.shape[1]
+                rows = rows.reshape(
+                    (rows.shape[0] // ps, ps) + rows.shape[1:])
+                out[pk] = leaf.at[page_ids].set(rows.astype(leaf.dtype))
+        return out
+    axis = 1 if stacked else 0
+    return jax.tree_util.tree_map(
+        lambda full, part: _lane_update(full, part, lane, axis),
+        pool_blk, single_blk)
+
+
+def paged_insert(cache, single, lane, page_ids, table_row, new_len):
+    """Scatter a batch=1 contiguous prefill cache into the page pools.
+
+    ``single`` must hold exactly ``len(page_ids) * page_size`` cache rows
+    (the engine sizes the admission prefill that way); ``table_row`` is the
+    lane's full (max_pages,) block-table row, written to the device table
+    in the same dispatch.  Traceable — the engine fuses it into admission.
+    """
+    new = dict(cache)
+    new["pos"] = cache["pos"].at[lane].set(new_len.astype(jnp.int32))
+    new["block_tables"] = cache["block_tables"].at[lane].set(table_row)
+    new["head_blocks"] = [
+        _scatter_block(pb, sb, lane, page_ids, stacked=False)
+        for pb, sb in zip(cache["head_blocks"], single["head_blocks"])
+    ]
+    new["blocks"] = tuple(
+        _scatter_block(pb, sb, lane, page_ids, stacked=True)
+        for pb, sb in zip(cache["blocks"], single["blocks"])
+    )
+    new["tail_blocks"] = [
+        _scatter_block(pb, sb, lane, page_ids, stacked=False)
+        for pb, sb in zip(cache["tail_blocks"], single["tail_blocks"])
+    ]
+    return new
+
+
+# module-level jit shared across engine instances (mirrors slots._scatter_lane)
+_paged_insert = jax.jit(paged_insert, donate_argnums=(0,))
+
+
+def _move_pages_block(blk, src, dst, stacked: bool):
+    if not any(k in blk for k in ("kp", "ckvp")):
+        return blk
+    if stacked:
+        return {k: leaf.at[:, dst].set(leaf[:, src]) for k, leaf in blk.items()}
+    return {k: leaf.at[dst].set(leaf[src]) for k, leaf in blk.items()}
+
+
+def _move_pages(cache, src, dst):
+    """Copy pool pages ``src -> dst`` in every layer (defrag compaction)."""
+    new = dict(cache)
+    new["head_blocks"] = [_move_pages_block(b, src, dst, False)
+                          for b in cache["head_blocks"]]
+    new["blocks"] = tuple(_move_pages_block(b, src, dst, True)
+                          for b in cache["blocks"])
+    new["tail_blocks"] = [_move_pages_block(b, src, dst, False)
+                          for b in cache["tail_blocks"]]
+    return new
+
+
+_move_pages_jit = jax.jit(_move_pages, donate_argnums=(0,))
+
+
+class PagedCache:
+    """Engine-owned paged pool: ``n_lanes`` block-table rows over
+    ``n_pages`` physical pages of ``page_size`` rows each."""
+
+    def __init__(self, cfg: ModelConfig, n_lanes: int, cache_len: int,
+                 page_size: int, n_pages: int | None = None):
+        self.n_lanes = n_lanes
+        self.cache_len = cache_len
+        self.page_size = page_size
+        self.max_pages = pages_for(cache_len, page_size)
+        self.n_pages = (default_page_count(n_lanes, cache_len, page_size)
+                        if n_pages is None else n_pages)
+        shapes = model_lib.paged_cache_shapes(
+            cfg, n_lanes, cache_len, page_size, self.n_pages)
+        self.cache = zeros_like_shapes(shapes)
+        self.manager = PageManager(self.n_pages, page_size, n_lanes,
+                                   self.max_pages)
+
+    def insert(self, single_cache, lane: int, page_ids, new_len) -> None:
+        """Standalone (non-fused) insert — tests and defrag verification;
+        the engine uses the traceable ``paged_insert`` inside its fused
+        admission jit instead."""
+        self.cache = _paged_insert(
+            self.cache, single_cache, jnp.int32(lane),
+            jnp.asarray(page_ids, jnp.int32),
+            jnp.asarray(self.manager.block_tables[lane]),
+            jnp.asarray(new_len, jnp.int32))
+
+    def sync_tables(self) -> None:
+        """Upload the host block table if growth/free/defrag changed it."""
+        if self.manager.dirty:
+            self.cache = {**self.cache,
+                          "block_tables": jnp.asarray(self.manager.block_tables)}
+            self.manager.dirty = False
+
+    def free(self, lane: int) -> int:
+        """Release a lane's pages back to the pool (same step)."""
+        n = self.manager.free_lane(lane)
+        return n
+
+    def defrag(self) -> int:
+        """Compact the pool; returns the number of pages moved."""
+        moves = self.manager.defrag()
+        if moves:
+            src = jnp.asarray([s for s, _ in moves], jnp.int32)
+            dst = jnp.asarray([d for _, d in moves], jnp.int32)
+            self.cache = _move_pages_jit(self.cache, src, dst)
+            self.sync_tables()
+        return len(moves)
+
+    @property
+    def pos(self):
+        return self.cache["pos"]

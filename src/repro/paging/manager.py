@@ -1,0 +1,173 @@
+"""Host-side page-pool bookkeeping for the paged KV cache.
+
+All state here is plain numpy / Python — the device only ever sees the
+``(n_lanes, max_pages_per_lane)`` int32 block table (uploaded when it
+changes, fixed shape, so the jitted decode step never retraces) and the
+page pools themselves (``cache.PagedCache``).
+
+Physical page 0 is **reserved as the trash page**: idle lanes still ride
+the fixed-shape decode step, and their garbage K/V write is redirected
+there (``models/attention._write_page``).  Unlike the slot cache — where a
+stale lane can only scribble on itself — paged lanes write through a table
+into pages that may already belong to someone else, so the redirect is a
+correctness requirement, not hygiene.
+
+Admission uses *reservations*: a lane reserves its worst-case page count
+(prompt + generation budget) up front, but pages are only materialized as
+the sequence actually grows.  Reservations make mid-decode pool exhaustion
+impossible while still packing mixed-length traffic far tighter than the
+slot cache's ``n_slots x cache_len`` worst-case allocation — short
+requests reserve few pages, so more of them fit the same KV budget.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from repro.configs.base import pages_for
+
+TRASH_PAGE = 0
+
+
+class PageManager:
+    def __init__(self, n_pages: int, page_size: int, n_lanes: int,
+                 max_pages_per_lane: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        if page_size < 1 or max_pages_per_lane < 1:
+            raise ValueError("page_size and max_pages_per_lane must be >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_lanes = n_lanes
+        self.max_pages_per_lane = max_pages_per_lane
+        # lowest-index-first like the slot scheduler: deterministic layouts
+        self._free: list[int] = list(range(1, n_pages))
+        heapq.heapify(self._free)
+        self.block_tables = np.zeros((n_lanes, max_pages_per_lane), np.int32)
+        self.lane_pages: list[list[int]] = [[] for _ in range(n_lanes)]
+        self.lengths = np.zeros((n_lanes,), np.int64)   # valid rows per lane
+        self.reserved = np.zeros((n_lanes,), np.int64)  # promised page counts
+        # device table out of date? (set by free/growth/defrag; admission
+        # writes its row inside the fused insert jit instead)
+        self.dirty = False
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    @property
+    def outstanding(self) -> int:
+        """Pages promised to admitted lanes but not yet materialized."""
+        return int(sum(max(int(self.reserved[l]) - len(self.lane_pages[l]), 0)
+                       for l in range(self.n_lanes)))
+
+    @property
+    def available(self) -> int:
+        """Pages an admission may still reserve without risking mid-decode
+        exhaustion of already-admitted lanes."""
+        return len(self._free) - self.outstanding
+
+    def pages_for(self, tokens: int) -> int:
+        return pages_for(tokens, self.page_size)
+
+    def can_admit(self, reserve_tokens: int) -> bool:
+        return self.pages_for(reserve_tokens) <= self.available
+
+    # -- lane lifecycle ----------------------------------------------------
+    def admit(self, lane: int, reserve_tokens: int) -> None:
+        """Reserve worst-case capacity for a lane about to prefill."""
+        if self.lane_pages[lane]:
+            raise RuntimeError(f"lane {lane} already holds pages")
+        need = self.pages_for(reserve_tokens)
+        if need > self.max_pages_per_lane:
+            raise ValueError(
+                f"request needs {need} pages but lanes hold at most "
+                f"{self.max_pages_per_lane} (cache_len / page_size)")
+        if need > self.available:
+            raise RuntimeError(
+                f"admitting {need} pages would overcommit the pool "
+                f"({self.available} available of {self.n_pages - 1})")
+        self.reserved[lane] = need
+        self.lengths[lane] = 0
+
+    def alloc(self, lane: int, n: int = 1) -> list[int]:
+        """Materialize ``n`` pages for a lane (within its reservation)."""
+        held = self.lane_pages[lane]
+        if len(held) + n > self.max_pages_per_lane:
+            raise RuntimeError(f"lane {lane} exceeds its block table width")
+        if n > len(self._free):
+            raise RuntimeError("page pool exhausted (reservation bug?)")
+        got = [heapq.heappop(self._free) for _ in range(n)]
+        for p in got:
+            self.block_tables[lane, len(held)] = p
+            held.append(p)
+        return got
+
+    def ensure(self, lane: int, tokens: int) -> list[int]:
+        """Allocate pages until the lane covers ``tokens`` rows."""
+        need = self.pages_for(tokens) - len(self.lane_pages[lane])
+        if need <= 0:
+            return []
+        self.dirty = True
+        return self.alloc(lane, need)
+
+    def set_length(self, lane: int, tokens: int) -> None:
+        self.lengths[lane] = tokens
+
+    def advance(self, lanes) -> None:
+        """One decode step: each active lane grew by one row."""
+        for lane in lanes:
+            self.lengths[lane] += 1
+
+    def free_lane(self, lane: int) -> int:
+        """Release a lane; its pages return to the pool the same step."""
+        pages = self.lane_pages[lane]
+        n = len(pages)
+        for p in pages:
+            heapq.heappush(self._free, p)
+        pages.clear()
+        self.block_tables[lane, :] = TRASH_PAGE
+        self.lengths[lane] = 0
+        self.reserved[lane] = 0
+        self.dirty = True
+        return n
+
+    # -- defrag ------------------------------------------------------------
+    def defrag(self) -> list[tuple[int, int]]:
+        """Compact allocated pages onto the lowest physical indices.
+
+        Returns ``(src, dst)`` moves for the device-side pool copy
+        (``PagedCache.defrag`` applies them); block tables are remapped
+        here.  After compaction the used set is exactly
+        ``[1, pages_in_use]``, so a long-running pool's free list stays
+        contiguous no matter the alloc/free history.
+        """
+        used = sorted(p for pages in self.lane_pages for p in pages)
+        targets = set(range(1, len(used) + 1))
+        vacant = sorted(targets - set(used))
+        moves: list[tuple[int, int]] = []
+        remap = {}
+        for p in sorted(used, reverse=True):
+            if p in targets:
+                continue
+            dst = vacant.pop(0)
+            remap[p] = dst
+            moves.append((p, dst))
+        if not moves:
+            return []
+        for lane, pages in enumerate(self.lane_pages):
+            for j, p in enumerate(pages):
+                if p in remap:
+                    pages[j] = remap[p]
+                    self.block_tables[lane, j] = remap[p]
+        self._free = list(range(len(used) + 1, self.n_pages))
+        heapq.heapify(self._free)
+        self.dirty = True
+        return moves

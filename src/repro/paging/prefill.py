@@ -1,0 +1,152 @@
+"""Chunked prefill over the paged cache: admit a long prompt in page-sized
+chunks interleaved with decode steps.
+
+One chunk step embeds ``chunk_len`` prompt tokens at absolute offset
+``start``, runs them through the stack — each attention block writes the
+chunk's K/V (or MLA latents) into the lane's pages and attends the
+gathered prefix + chunk under the ordinary causal mask — and returns the
+sampled token for the chunk's last valid row (only the final chunk's
+sample is used).  Because the bf16 cache roundtrip is lossless and every
+per-row computation is position-independent, the chunked admission is
+bitwise the unchunked prefill (see ``models/attention.attention_chunk``);
+the engine's exact-match tests pin that down.
+
+Chunkable kinds are the attention family whose math is strictly
+row-independent: ``attn`` (incl. the MLA rewrite) and dense FFN layers.
+Excluded by construction:
+
+* ``moe`` — expert capacity is ``ceil(S * k / E * cf)``: it depends on how
+  many tokens share the dispatch, so chunking would change which tokens
+  drop and break output-invisibility;
+* recurrent kinds (``rglru``/``mlstm``/``slstm``) — their cells integrate
+  state full-sequence here; the engine already admits those at exact
+  length, unchunked;
+* ``local_attn`` — the ring buffer is written modulo the window, which a
+  partial chunk would wrap incorrectly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.layers import embed, glu_mlp, rmsnorm, unembed
+
+CHUNKABLE_KINDS = frozenset({"attn", "mla", "dense_ffn_layer"})
+
+
+def stack_kinds(cfg: ModelConfig) -> frozenset[str]:
+    """Effective block kinds across the WHOLE stack (lead dense layers +
+    scanned periods + tail remainder) — the one place layout-derived kind
+    sets come from, shared by the engine's paged-pool detection and the
+    chunkability check below."""
+    lead, n_periods, tail_kinds = tfm.layer_layout(cfg)
+    kinds = {"dense_ffn_layer"} if lead else set()
+    if n_periods:
+        kinds |= {tfm.effective_kind(k, cfg) for k in cfg.block_pattern}
+    kinds |= {tfm.effective_kind(k, cfg) for k in tail_kinds}
+    return frozenset(kinds)
+
+
+def chunkable(cfg: ModelConfig) -> bool:
+    """Can this stack prefill in chunks without changing its outputs?"""
+    if cfg.is_encoder_decoder or cfg.frontend is not None:
+        return False
+    return stack_kinds(cfg) <= CHUNKABLE_KINDS
+
+
+def _apply_block_chunk(x, p, kind: str, cfg: ModelConfig, cache, table_row,
+                       start, positions):
+    """One block over a (1, C, d) chunk against the paged cache."""
+    kind = tfm.effective_kind(kind, cfg)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "dense_ffn_layer"):
+        a, cache = attn.attention_chunk(h, p["attn"], cfg, cache, table_row,
+                                        start, positions=positions)
+    elif kind == "mla":
+        a, cache = attn.mla_chunk(h, p["attn"], cfg, cache, table_row,
+                                  start, positions=positions)
+    else:
+        raise ValueError(f"block kind {kind!r} is not chunkable")
+    x = x + a
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode,
+                    backend=cfg.gemm_backend)
+    return x, cache
+
+
+def make_chunk_step(cfg: ModelConfig, chunk_len: int):
+    """Build the jittable chunk step.
+
+    chunk_step(params, cache, tokens, lane, start, true_len)
+        -> (last-valid-row logits (1, V), new cache)
+
+    ``tokens``: (1, chunk_len) right-padded; ``start``: (1,) absolute
+    position of the chunk's first token; ``true_len``: (1,) valid tokens
+    in this chunk.  Padded tail rows write garbage pages that the next
+    chunk (or the first decode step) overwrites before any query can
+    attend them — the same argument that makes bucketed prefill exact.
+    ``cache["pos"]`` for the lane is set to ``start + true_len`` so the
+    final chunk leaves the lane decode-ready.
+    """
+    if not chunkable(cfg):
+        raise ValueError(
+            f"{cfg.name}: stack has non-chunkable kinds "
+            f"{sorted(stack_kinds(cfg) - CHUNKABLE_KINDS)}")
+
+    lead, n_periods, tail_kinds = tfm.layer_layout(cfg)
+
+    def chunk_step(params, cache, tokens, lane, start, true_len):
+        x = embed(tokens, params["embed"])
+        positions = start[:, None] + jnp.arange(chunk_len, dtype=jnp.int32)[None, :]
+        tables = cache["block_tables"]
+        table_row = jax.lax.dynamic_slice(
+            tables, (lane, 0), (1, tables.shape[1]))
+
+        new_cache = dict(cache)
+        new_cache["head_blocks"] = list(cache["head_blocks"])
+        for i, p in enumerate(params.get("head_blocks", [])):
+            x, c = _apply_block_chunk(x, p, "dense_ffn_layer", cfg,
+                                      cache["head_blocks"][i], table_row,
+                                      start, positions)
+            new_cache["head_blocks"][i] = c
+
+        if params.get("blocks", ()):
+            pattern = cfg.block_pattern
+
+            def period_fn(h, xs):
+                slot_params, slot_cache = xs
+                out = []
+                for s, kind in enumerate(pattern):
+                    h, c = _apply_block_chunk(h, slot_params[s], kind, cfg,
+                                              slot_cache[s], table_row,
+                                              start, positions)
+                    out.append(c)
+                return h, tuple(out)
+
+            x, nb = jax.lax.scan(period_fn, x,
+                                 (params["blocks"], cache["blocks"]),
+                                 unroll=cfg.scan_unroll)
+            new_cache["blocks"] = nb
+
+        new_cache["tail_blocks"] = list(cache["tail_blocks"])
+        for i, p in enumerate(params.get("tail_blocks", [])):
+            x, c = _apply_block_chunk(x, p, tail_kinds[i], cfg,
+                                      cache["tail_blocks"][i], table_row,
+                                      start, positions)
+            new_cache["tail_blocks"][i] = c
+
+        new_cache["pos"] = cache["pos"].at[lane].set(
+            (start[0] + true_len[0]).astype(jnp.int32))
+
+        idx = jnp.clip(true_len - 1, 0, chunk_len - 1)          # (1,)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        h = rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = unembed(h, table)[:, 0, :]
+        return logits, new_cache
+
+    return chunk_step

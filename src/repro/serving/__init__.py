@@ -1,6 +1,8 @@
-"""Continuous-batching serving engine (slot-based KV cache, interleaved
-prefill/decode, per-lane sampling).  See ``engine.ServingEngine``."""
+"""Continuous-batching serving engine (slot- or paged-KV cache, interleaved
+prefill/decode, chunked long-prompt admission, per-lane sampling).
+See ``engine.ServingEngine`` and ``repro.paging``."""
 
+from repro.paging import PagedCache, PageManager
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.metrics import EngineMetrics
 from repro.serving.request import Request, RequestState
@@ -12,6 +14,8 @@ __all__ = [
     "EngineConfig",
     "EngineMetrics",
     "FIFOScheduler",
+    "PageManager",
+    "PagedCache",
     "Request",
     "RequestState",
     "SamplingParams",

@@ -1,18 +1,33 @@
 """Continuous-batching serving engine.
 
-One ``ServingEngine`` owns a fixed pool of ``n_slots`` KV-cache lanes
-(``slots.SlotCache``) and runs an iteration-level loop: every ``step()``
+One ``ServingEngine`` owns a fixed pool of ``n_slots`` KV-cache lanes and
+runs an iteration-level loop: every ``step()``
 
 1. **admits** up to ``max_prefills_per_step`` FIFO-queued requests into
    free lanes — each admission is a batch=1 prefill (optionally padded to a
    prefill bucket so jit traces stay bounded) whose cache is scattered into
    the lane, and whose last-position logits yield the request's *first*
-   token (the TTFT token);
+   token (the TTFT token); in paged mode, long prompts instead stream in as
+   page-sized **chunked prefills** interleaved with decode steps, so one
+   big admission can no longer stall in-flight decodes;
 2. **decodes** one token for every occupied lane in a single jitted
    ``decode_step`` over the whole pool — fixed shapes, zero retraces —
    sampling per-lane (greedy / temperature / top-k);
 3. **evicts** finished lanes (length budget or EOS) immediately, so the
    next step can refill them instead of burning compute on dead lanes.
+
+Two cache modes (``EngineConfig.cache_mode``):
+
+* ``"slot"``  — ``slots.SlotCache``: every lane preallocates ``cache_len``
+  rows.  Simple, but a pool serving mixed-length traffic wastes most of
+  its KV HBM on short requests.
+* ``"paged"`` — ``paging.PagedCache``: KV lives in a global page pool
+  (int8 byte-size pages supported) indexed by per-lane block tables;
+  admission *reserves* a request's worst case but pages materialize only
+  as the sequence grows, and eviction returns them the same step.  Same
+  budget, strictly more concurrent requests on mixed lengths.  Scheduling
+  stays output-invisible: greedy tokens equal the solo ``serve_batch``
+  stream in both modes.
 
 This is what keeps a byte-size integer GEMM accelerator fed: the decode
 GEMMs always run at the full pool batch, prefill is interleaved instead of
@@ -34,23 +49,45 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional, Sequence
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import KV_CACHE_HEADROOM, ModelConfig, default_cache_len
+from repro.configs.base import (
+    DEFAULT_PAGE_SIZE,
+    KV_CACHE_HEADROOM,
+    ModelConfig,
+    default_cache_len,
+    pages_for,
+)
 from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.paging import (
+    PagedCache,
+    chunkable,
+    make_chunk_step,
+    paged_insert,
+    stack_kinds,
+)
 from repro.serving.metrics import EngineMetrics
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, request_key, sample_tokens
 from repro.serving.scheduler import FIFOScheduler
 from repro.serving.slots import SlotCache
 
 RECURRENT_KINDS = frozenset({"rglru", "mlstm", "slstm"})
+# effective kinds whose KV lands in page pools (models/kvcache.py); a
+# window-bearing local_attn keeps its per-lane ring in both modes
+PAGED_KINDS = frozenset({"attn", "mla", "moe", "dense_ffn_layer"})
 
 _ZERO_KEY = np.zeros((2,), np.uint32)
+
+_sample_jit = jax.jit(sample_tokens)
+
+
+def _roundup(n: int, m: int) -> int:
+    return pages_for(n, m) * m
 
 
 # jit wrappers are cached per (cfg, cache_len) so spinning up a new engine
@@ -77,6 +114,25 @@ def _jitted_admit(cfg: ModelConfig, cache_len: int):
 
 
 @functools.lru_cache(maxsize=None)
+def _jitted_admit_paged(cfg: ModelConfig, single_len: int):
+    """Paged fused admission: the batch=1 prefill allocates only
+    ``single_len`` rows (the bucket rounded up to whole pages, not the full
+    ``cache_len``) and its cache is scattered straight into the lane's
+    pages + per-lane leaves, with the block-table row written in the same
+    dispatch."""
+    prefill = make_prefill_step(cfg, single_len, with_lengths=True)
+
+    def admit(pool, params, tokens, lengths, lane, page_ids, table_row,
+              temp, topk, greedy, key):
+        logits, single = prefill(params, {"tokens": tokens}, lengths)
+        tok = sample_tokens(logits, temp, topk, greedy, key)
+        return tok, paged_insert(pool, single, lane, page_ids, table_row,
+                                 lengths[0])
+
+    return jax.jit(admit, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
 def _jitted_decode_sample(cfg: ModelConfig):
     """Fused decode+sample: one jit dispatch per engine step.
 
@@ -84,18 +140,25 @@ def _jitted_decode_sample(cfg: ModelConfig):
     every exact-match path) lowers to a pure argmax — without it every step
     would pay sample_tokens' full-vocab sort + categorical just to discard
     the result in the greedy ``where``."""
-    decode = make_serve_step(cfg)
+    decode = make_serve_step(cfg, with_active=True)
 
-    def step(params, tokens, cache, temps, topk, greedy, keys,
+    def step(params, tokens, cache, active, temps, topk, greedy, keys,
              any_stochastic: bool):
-        logits, cache = decode(params, tokens, cache)
+        logits, cache = decode(params, tokens, cache, active)
         if any_stochastic:
             toks = sample_tokens(logits, temps, topk, greedy, keys)
         else:
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return toks, cache
 
-    return jax.jit(step, donate_argnums=(2,), static_argnums=(7,))
+    return jax.jit(step, donate_argnums=(2,), static_argnums=(8,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_chunk_step(cfg: ModelConfig, chunk_len: int):
+    """One chunked-prefill step (see ``paging.prefill.make_chunk_step``),
+    donating the pool so chunk writes are in-place."""
+    return jax.jit(make_chunk_step(cfg, chunk_len), donate_argnums=(1,))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +173,17 @@ class EngineConfig:
     # lengths (one trace per distinct prompt length).
     prefill_buckets: Optional[tuple[int, ...]] = None
     eos_token: Optional[int] = None
+    # "slot" (per-lane cache_len preallocation) | "paged" (global page pool
+    # + block tables; see repro/paging/)
+    cache_mode: str = "slot"
+    page_size: int = DEFAULT_PAGE_SIZE
+    # pool size in pages; None = the slot-equivalent KV budget
+    # (configs.default_page_count)
+    n_pages: Optional[int] = None
+    # paged mode: prompts longer than this admit in page-aligned chunks of
+    # this many tokens, interleaved with decode steps. None = one-shot
+    # admission. Must be a multiple of page_size.
+    prefill_chunk: Optional[int] = None
 
     @staticmethod
     def for_workload(prompt_len: int, gen_tokens: int, n_slots: int = 4,
@@ -136,17 +210,58 @@ class ServingEngine:
                 "(prefill_buckets=None) for recurrent stacks")
         if buckets and buckets[-1] > engine_cfg.cache_len:
             raise ValueError("largest prefill bucket exceeds cache_len")
+        if engine_cfg.cache_mode not in ("slot", "paged"):
+            raise ValueError(f"cache_mode must be 'slot' or 'paged', got "
+                             f"{engine_cfg.cache_mode!r}")
         self.cfg = cfg
         self.params = params
         self.engine_cfg = engine_cfg
         self.buckets = buckets
+        self.paged = engine_cfg.cache_mode == "paged"
 
         n = engine_cfg.n_slots
         self.scheduler = FIFOScheduler(n, engine_cfg.max_prefills_per_step)
-        self.slots = SlotCache(cfg, n, engine_cfg.cache_len)
         self.metrics = EngineMetrics()
 
-        self._admit_fn = _jitted_admit(cfg, engine_cfg.cache_len)
+        # whole-stack effective kinds (lead + periods + tail) from the one
+        # layout-owning helper; a windowless local_attn block caches like
+        # full attention (models/kvcache.py), so it pages too
+        kinds = stack_kinds(cfg)
+        self._has_ring = ("local_attn" in kinds and cfg.sliding_window is not None)
+        self._has_paged_kinds = (
+            bool(kinds & PAGED_KINDS)
+            or ("local_attn" in kinds and cfg.sliding_window is None))
+
+        if self.paged:
+            ps = engine_cfg.page_size
+            if self._has_ring and engine_cfg.cache_len % ps:
+                raise ValueError(
+                    "paged serving of local-attention stacks needs "
+                    "cache_len to be a multiple of page_size (the per-lane "
+                    "ring insert must match the pool's ring length)")
+            if engine_cfg.prefill_chunk is not None:
+                if engine_cfg.prefill_chunk % ps:
+                    raise ValueError("prefill_chunk must be a multiple of "
+                                     "page_size (chunks are page-aligned)")
+                if not chunkable(cfg):
+                    raise ValueError(
+                        f"{cfg.name}: chunked prefill needs a stack of "
+                        "strictly row-independent kinds (attn/MLA/dense); "
+                        "use prefill_chunk=None")
+            self.store = PagedCache(cfg, n, engine_cfg.cache_len, ps,
+                                    engine_cfg.n_pages)
+            self.metrics.pages_total = self.store.n_pages
+            self.metrics.page_size = ps
+            self._chunk_fn = (
+                _jitted_chunk_step(cfg, engine_cfg.prefill_chunk)
+                if engine_cfg.prefill_chunk is not None else None)
+        else:
+            if engine_cfg.prefill_chunk is not None:
+                raise ValueError("chunked prefill requires cache_mode='paged'")
+            self.store = SlotCache(cfg, n, engine_cfg.cache_len)
+
+        self._admit_fn = (None if self.paged
+                          else _jitted_admit(cfg, engine_cfg.cache_len))
         self._decode_sample = _jitted_decode_sample(cfg)
 
         # per-lane state. ``_tokens`` may be a DEVICE array: between sync
@@ -168,7 +283,8 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def add_request(self, prompt: Sequence[int], max_new_tokens: int,
                     sampling: Optional[SamplingParams] = None,
-                    eos_token: Optional[int] = None) -> Request:
+                    eos_token: Optional[int] = None,
+                    on_token=None) -> Request:
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -180,12 +296,25 @@ class ServingEngine:
                 f"request needs {need} cache positions but cache_len="
                 f"{self.engine_cfg.cache_len}; size the engine with "
                 f"default_cache_len(prompt_len, gen) [headroom={KV_CACHE_HEADROOM}]")
+        if self.paged and self._has_paged_kinds:
+            # reject requests the pool can NEVER reserve — otherwise the
+            # head-of-line admission gate would veto them forever and the
+            # engine would spin (run) or hang (stream) without an error
+            pages = pages_for(self._worst_case_rows(len(prompt), max_new_tokens),
+                              self.engine_cfg.page_size)
+            usable = self.store.n_pages - 1  # page 0 is the trash page
+            if pages > usable:
+                raise ValueError(
+                    f"request reserves {pages} pages but the pool only has "
+                    f"{usable} usable pages; raise n_pages (or lower "
+                    f"page_size / the request's budget)")
         req = Request(
             req_id=self._next_id,
             prompt=prompt,
             max_new_tokens=max_new_tokens,
             sampling=sampling or SamplingParams(),
             eos_token=self.engine_cfg.eos_token if eos_token is None else eos_token,
+            on_token=on_token,
             submit_time=time.perf_counter(),
         )
         self._next_id += 1
@@ -204,21 +333,9 @@ class ServingEngine:
         k = request_key(req.sampling.seed, req.req_id, len(req.output_tokens))
         return np.asarray(k, np.uint32)
 
-    def _admit(self, req: Request, slot: int) -> None:
-        padded_len = self._bucket_len(req.prompt_len)
-        tokens = np.zeros((1, padded_len), np.int32)
-        tokens[0, :req.prompt_len] = req.prompt
+    def _arm_lane(self, req: Request, slot: int, tok: int) -> None:
+        """First token sampled: point the lane's decode inputs at it."""
         s = req.sampling
-        tok_dev, self.slots.cache = self._admit_fn(
-            self.slots.cache, self.params, tokens,
-            np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
-            np.asarray([s.temperature], np.float32),
-            np.asarray([s.top_k], np.int32),
-            np.asarray([s.greedy]),
-            self._lane_key(req)[None],
-            self.slots._axes_flat,
-        )
-        tok = int(np.asarray(tok_dev)[0])
         req.append_token(tok)  # stamps TTFT
         self.metrics.prefills += 1
         self._tokens = jnp.asarray(self._tokens).at[slot].set(tok)
@@ -227,38 +344,193 @@ class ServingEngine:
         self._greedy[slot] = s.greedy
         self._keys[slot] = self._lane_key(req)
 
+    def _admit(self, req: Request, slot: int) -> None:
+        padded_len = self._bucket_len(req.prompt_len)
+        tokens = np.zeros((1, padded_len), np.int32)
+        tokens[0, :req.prompt_len] = req.prompt
+        s = req.sampling
+        common = (
+            np.asarray([s.temperature], np.float32),
+            np.asarray([s.top_k], np.int32),
+            np.asarray([s.greedy]),
+            self._lane_key(req)[None],
+        )
+        if self.paged:
+            tok_dev, self.store.cache = self._paged_admit(
+                req, slot, tokens, padded_len, common)
+        else:
+            tok_dev, self.store.cache = self._admit_fn(
+                self.store.cache, self.params, tokens,
+                np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
+                *common, self.store._axes_flat,
+            )
+        self._arm_lane(req, slot, int(np.asarray(tok_dev)[0]))
+
+    # -- paged admission ------------------------------------------------
+    def _single_len(self, padded_len: int) -> int:
+        """Cache rows the batch=1 admission prefill allocates: the bucket
+        rounded to whole pages — except local-attn-ring stacks, whose ring
+        length must match the pool's (cache_len is page-aligned there)."""
+        if self._has_ring:
+            return self.engine_cfg.cache_len
+        return _roundup(padded_len, self.engine_cfg.page_size)
+
+    def _should_chunk_len(self, prompt_len: int) -> bool:
+        c = self.engine_cfg.prefill_chunk
+        if not self.paged or c is None or prompt_len <= c:
+            return False
+        # the padded final chunk must stay inside the lane's block table
+        return _roundup(prompt_len, c) <= self.store.max_pages * self.engine_cfg.page_size
+
+    def _should_chunk(self, req: Request) -> bool:
+        return self._should_chunk_len(req.prompt_len)
+
+    def _admit_rows(self, prompt_len: int) -> int:
+        """Cache rows the admission itself touches (chunk padding or the
+        page-rounded prefill bucket)."""
+        if self._should_chunk_len(prompt_len):
+            return _roundup(prompt_len, self.engine_cfg.prefill_chunk)
+        return self._single_len(self._bucket_len(prompt_len))
+
+    def _worst_case_rows(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Rows a request reserves: its admission footprint or prompt +
+        generation budget, whichever is larger (capped at the block-table
+        capacity, which ``add_request``'s cache_len check already bounds)."""
+        worst = max(self._admit_rows(prompt_len), prompt_len + max_new_tokens)
+        return min(worst, self.store.max_pages * self.engine_cfg.page_size)
+
+    def _reserve_tokens(self, req: Request) -> int:
+        return self._worst_case_rows(req.prompt_len, req.max_new_tokens)
+
+    def _can_admit(self, req: Request) -> bool:
+        if not (self.paged and self._has_paged_kinds):
+            return True
+        return self.store.manager.can_admit(self._reserve_tokens(req))
+
+    def _paged_admit(self, req: Request, slot: int, tokens, padded_len, common):
+        mgr = self.store.manager
+        single_len = self._single_len(padded_len)
+        n_pages = single_len // self.engine_cfg.page_size if self._has_paged_kinds else 0
+        mgr.admit(slot, self._reserve_tokens(req) if self._has_paged_kinds else 0)
+        page_ids = mgr.alloc(slot, n_pages) if n_pages else []
+        mgr.set_length(slot, req.prompt_len)
+        admit_fn = _jitted_admit_paged(self.cfg, single_len)
+        return admit_fn(
+            self.store.cache, self.params, tokens,
+            np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
+            np.asarray(page_ids, np.int32),
+            np.asarray(mgr.block_tables[slot]),
+            *common,
+        )
+
+    # -- chunked prefill -------------------------------------------------
+    def _begin_chunked(self, req: Request, slot: int,
+                       finished: list[Request]) -> None:
+        mgr = self.store.manager
+        mgr.admit(slot, self._reserve_tokens(req))
+        self.scheduler.begin_chunked(slot)
+        req.prefill_done = 0
+        self._process_chunk(req, slot, finished)
+
+    def _process_chunk(self, req: Request, slot: int,
+                       finished: list[Request]) -> None:
+        """Feed one page-aligned prompt chunk; the final chunk samples the
+        first token and promotes the lane into the decode batch."""
+        mgr = self.store.manager
+        c = self.engine_cfg.prefill_chunk
+        start = req.prefill_done
+        n = min(c, req.prompt_len - start)
+        mgr.ensure(slot, start + c)  # the padded tail also lands in pages
+        self.store.sync_tables()
+        tokens = np.zeros((1, c), np.int32)
+        tokens[0, :n] = req.prompt[start:start + n]
+        logits, self.store.cache = self._chunk_fn(
+            self.params, self.store.cache, tokens, jnp.int32(slot),
+            np.asarray([start], np.int32), np.asarray([n], np.int32))
+        req.prefill_done = start + n
+        self.metrics.chunk_steps += 1
+        if req.prefill_done >= req.prompt_len:
+            s = req.sampling
+            tok_dev = _sample_jit(
+                logits, np.asarray([s.temperature], np.float32),
+                np.asarray([s.top_k], np.int32), np.asarray([s.greedy]),
+                self._lane_key(req)[None])
+            mgr.set_length(slot, req.prompt_len)
+            self.scheduler.promote(slot)
+            self._arm_lane(req, slot, int(np.asarray(tok_dev)[0]))
+            if req.done:  # max_new_tokens == 1 (or instant EOS)
+                self._evict(slot, finished)
+
     # ------------------------------------------------------------------
     # The engine loop
     # ------------------------------------------------------------------
     def step(self) -> list[Request]:
-        """One scheduler iteration: interleave admissions with a batched
-        decode over all occupied lanes. Returns requests finished this step."""
+        """One scheduler iteration: interleave admissions (or prompt
+        chunks) with a batched decode over all occupied lanes. Returns
+        requests finished this step."""
         self.metrics.begin()
         self._step_idx += 1
         self.metrics.steps += 1
         finished: list[Request] = []
+        budget = self.engine_cfg.max_prefills_per_step
 
-        admitted = self.scheduler.schedule()
-        if admitted:
-            t0 = time.perf_counter()
-            for req, slot in admitted:
+        t0 = time.perf_counter()
+        did_prefill = False
+        # in-flight chunked admissions continue first (finish what's started)
+        for slot, req in sorted(self.scheduler.chunking.items()):
+            if budget <= 0:
+                break
+            self._process_chunk(req, slot, finished)
+            budget -= 1
+            did_prefill = True
+
+        # admit one at a time: each admission takes its page reservation
+        # before the next one's capacity gate runs, so two jointly-unfittable
+        # requests can never both pass against the same pool snapshot
+        while budget > 0:
+            admitted = self.scheduler.schedule(limit=1,
+                                               admit_ok=self._can_admit)
+            if not admitted:
+                break
+            req, slot = admitted[0]
+            budget -= 1
+            did_prefill = True
+            if self._should_chunk(req):
+                self._begin_chunked(req, slot, finished)
+            else:
                 self._admit(req, slot)
                 if req.done:  # max_new_tokens == 1 (or instant EOS)
                     self._evict(slot, finished)
-            jax.block_until_ready(self.slots.cache["pos"])
+        if did_prefill:
+            jax.block_until_ready(self.store.cache["pos"])
             self.metrics.prefill_s += time.perf_counter() - t0
+
+        occupancy = len(self.scheduler.running) + len(self.scheduler.chunking)
+        self.metrics.peak_running = max(self.metrics.peak_running, occupancy)
 
         if self.scheduler.running:
             t0 = time.perf_counter()
-            toks, self.slots.cache = self._decode_sample(
-                self.params, self._tokens, self.slots.cache,
+            running = self.scheduler.running
+            if self.paged and self._has_paged_kinds:
+                mgr = self.store.manager
+                for slot in running:
+                    mgr.ensure(slot, int(mgr.lengths[slot]) + 1)
+                self.store.sync_tables()
+                self.metrics.peak_pages_used = max(
+                    self.metrics.peak_pages_used, mgr.pages_in_use)
+            active = np.zeros((self.engine_cfg.n_slots,), bool)
+            active[list(running)] = True
+            toks, self.store.cache = self._decode_sample(
+                self.params, self._tokens, self.store.cache, active,
                 self._temps, self._topk, self._greedy, self._keys,
                 not bool(self._greedy.all()))
+            if self.paged:
+                self.store.manager.advance(running)
             # feed the sampled tokens into the next decode device-to-device;
             # pull them to host lazily (only when scheduling needs them),
             # so all-greedy stretches pipeline like the static loop does
             self._tokens = toks
-            self._pending.append((toks, dict(self.scheduler.running)))
+            self._pending.append((toks, dict(running)))
             self.metrics.decode_steps += 1
             if self._needs_sync():
                 self._flush(finished)
@@ -268,14 +540,16 @@ class ServingEngine:
     def _needs_sync(self) -> bool:
         """Must the pending token arrays reach the host NOW?  Yes iff some
         running lane's next scheduling decision depends on token values
-        (EOS armed), its PRNG key must advance (stochastic sampling), or it
-        reaches its length budget at this step (eviction due)."""
+        (EOS armed), its PRNG key must advance (stochastic sampling), it
+        streams tokens to a callback, or it reaches its length budget at
+        this step (eviction due)."""
         counts: dict[int, int] = {}
         for _, mapping in self._pending:
             for req in mapping.values():
                 counts[req.req_id] = counts.get(req.req_id, 0) + 1
         for req in self.scheduler.running.values():
-            if req.eos_token is not None or not req.sampling.greedy:
+            if (req.eos_token is not None or not req.sampling.greedy
+                    or req.on_token is not None):
                 return True
             if len(req.output_tokens) + counts.get(req.req_id, 0) >= req.max_new_tokens:
                 return True
@@ -295,7 +569,7 @@ class ServingEngine:
 
     def _evict(self, slot: int, finished: list[Request]) -> None:
         req = self.scheduler.release(slot)
-        self.slots.free(slot)
+        self.store.free(slot)
         self._greedy[slot] = True  # free lanes sample nothing
         self.metrics.record_finished(req)
         finished.append(req)
@@ -304,19 +578,23 @@ class ServingEngine:
     def has_work(self) -> bool:
         return self.scheduler.has_work
 
-    def run(self, arrivals=None, max_steps: int = 100_000) -> EngineMetrics:
+    def run(self, arrivals=None, max_steps: int = 100_000,
+            on_token=None) -> EngineMetrics:
         """Drive steps until idle.  ``arrivals``: optional list of
         ``(step_idx, prompt, max_new_tokens[, SamplingParams])`` tuples —
         requests injected when the engine reaches that step, simulating
-        staggered traffic deterministically."""
+        staggered traffic deterministically.  ``on_token(req, tok)``, if
+        given, streams every arrival's tokens as they reach the host."""
         pending = sorted(arrivals or [], key=lambda a: a[0])
         i = 0
         steps_this_run = 0
         while (i < len(pending) or self.has_work) and steps_this_run < max_steps:
             while i < len(pending) and pending[i][0] <= self._step_idx:
                 arr = pending[i]
-                self.add_request(arr[1], arr[2],
-                                 sampling=arr[3] if len(arr) > 3 else None)
+                req = self.add_request(arr[1], arr[2],
+                                       sampling=arr[3] if len(arr) > 3 else None)
+                if on_token is not None:
+                    req.on_token = functools.partial(on_token, req)
                 i += 1
             if not self.has_work:
                 # idle gap before the next arrival: jump to it
@@ -327,3 +605,23 @@ class ServingEngine:
         if self._pending:  # max_steps bail-out with tokens still in flight
             self._flush([])
         return self.metrics
+
+    def stream(self, prompt: Sequence[int], max_new_tokens: int,
+               sampling: Optional[SamplingParams] = None,
+               eos_token: Optional[int] = None) -> Iterator[int]:
+        """Submit a request and yield its tokens as the engine produces
+        them, driving ``step()`` in between.  Other queued requests advance
+        normally — this is the single-caller convenience over the
+        ``on_token`` callback hook."""
+        emitted: list[int] = []
+        req = self.add_request(prompt, max_new_tokens, sampling=sampling,
+                               eos_token=eos_token, on_token=emitted.append)
+        i = 0
+        while True:
+            while i < len(emitted):
+                yield emitted[i]
+                i += 1
+            if req.state is RequestState.FINISHED or not self.has_work:
+                break
+            self.step()
+        yield from emitted[i:]

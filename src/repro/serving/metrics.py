@@ -25,6 +25,15 @@ class EngineMetrics:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     finished: list = dataclasses.field(default_factory=list)
+    # concurrency: most lanes simultaneously holding a request (running +
+    # mid-chunk) — the headline the paged cache improves at a fixed KV
+    # budget, since short requests no longer pin worst-case lanes
+    peak_running: int = 0
+    # paged-cache accounting (0 when serving from the slot cache)
+    chunk_steps: int = 0
+    pages_total: int = 0
+    page_size: int = 0
+    peak_pages_used: int = 0
 
     def begin(self) -> None:
         if not self.start_time:
@@ -64,6 +73,11 @@ class EngineMetrics:
             "latency_mean_s": round(_mean([r.latency_s for r in reqs]), 4),
             "latency_max_s": round(
                 max([r.latency_s or 0.0 for r in reqs], default=0.0), 4),
+            "peak_running": self.peak_running,
+            "chunk_steps": self.chunk_steps,
+            "pages_total": self.pages_total,
+            "page_size": self.page_size,
+            "peak_pages_used": self.peak_pages_used,
         }
 
     def format_report(self) -> str:

@@ -1,10 +1,12 @@
 """Request lifecycle for the continuous-batching engine.
 
-A request moves WAITING -> RUNNING -> FINISHED.  There is no separate
-PREFILL state: admission (prefill + first sampled token) happens inside one
-engine step, so a request is RUNNING from the moment its KV cache occupies a
-slot.  All bookkeeping here is host-side Python — device state lives in
-``slots.SlotCache``.
+A request moves WAITING -> RUNNING -> FINISHED.  Single-shot admission
+(prefill + first sampled token) happens inside one engine step, so a
+request is RUNNING from the moment its KV cache occupies a slot; only the
+paged engine's *chunked* admissions pass through PREFILLING, holding their
+slot across the steps that feed the prompt in page-sized chunks.  All
+bookkeeping here is host-side Python — device state lives in
+``slots.SlotCache`` / ``paging.PagedCache``.
 """
 
 from __future__ import annotations
@@ -12,13 +14,14 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.serving.sampling import SamplingParams
 
 
 class RequestState(enum.Enum):
     WAITING = "waiting"      # queued, no slot yet
+    PREFILLING = "prefilling"  # slot held, prompt chunks still streaming in
     RUNNING = "running"      # occupies a slot, decoding
     FINISHED = "finished"    # evicted; outputs final
 
@@ -32,10 +35,18 @@ class Request:
     max_new_tokens: int
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     eos_token: Optional[int] = None
+    # Streaming hook: called with each sampled token as it reaches the
+    # host.  The engine's lazy pulls are forced eager for streaming
+    # requests (tokens surface every step instead of at sync points), so a
+    # callback trades a little decode-dispatch overlap for latency.
+    on_token: Optional[Callable[[int], None]] = dataclasses.field(
+        default=None, repr=False)
 
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
     output_tokens: list[int] = dataclasses.field(default_factory=list)
+    # chunked admission progress: prompt tokens already prefilled
+    prefill_done: int = 0
 
     # wall-clock timeline (engine-stamped)
     submit_time: float = 0.0
@@ -57,6 +68,8 @@ class Request:
         if self.first_token_time is None:
             self.first_token_time = time.perf_counter()
         self.output_tokens.append(tok)
+        if self.on_token is not None:
+            self.on_token(tok)
 
     @property
     def ttft_s(self) -> Optional[float]:

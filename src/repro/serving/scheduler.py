@@ -8,6 +8,17 @@ expensive phase; interleaving it one-or-few at a time keeps decode lanes
 hot — the dataflow-utilization argument the SPOGA/SCONNA accelerators make
 at the GEMM level, applied at the batch level).
 
+Two extensions for the paged engine:
+
+* ``admit_ok`` — a capacity gate the engine supplies in paged mode: the
+  FIFO head only admits when the page pool can *reserve* its worst case.
+  The gate is head-of-line on purpose — skipping ahead to smaller requests
+  would starve large ones forever.
+* chunked admissions — a long prompt occupies its slot in a ``chunking``
+  state while the engine feeds it page-sized prefill chunks between decode
+  steps (``begin_chunked`` / ``promote``).  Chunking lanes are excluded
+  from the decode batch but still hold their slot and pages.
+
 Slots are handed out lowest-index-first purely for determinism: a given
 workload always produces the same lane assignment, which the exact-match
 serving tests rely on.
@@ -17,7 +28,7 @@ from __future__ import annotations
 
 import heapq
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.serving.request import Request, RequestState
 
@@ -32,6 +43,7 @@ class FIFOScheduler:
         self._free: list[int] = list(range(n_slots))
         heapq.heapify(self._free)
         self.running: dict[int, Request] = {}
+        self.chunking: dict[int, Request] = {}
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -39,19 +51,40 @@ class FIFOScheduler:
         self.waiting.append(req)
 
     # -- per-step decisions ------------------------------------------------
-    def schedule(self) -> list[tuple[Request, int]]:
-        """Admit up to ``max_prefills_per_step`` waiting requests into free
-        slots. Returns (request, slot) pairs to prefill this iteration."""
+    def schedule(self, limit: Optional[int] = None,
+                 admit_ok: Optional[Callable[[Request], bool]] = None
+                 ) -> list[tuple[Request, int]]:
+        """Admit up to ``limit`` (default ``max_prefills_per_step``) waiting
+        requests into free slots. Returns (request, slot) pairs to prefill
+        this iteration. ``admit_ok`` vetoes the FIFO head (capacity gate);
+        a vetoed head stays queued and blocks later arrivals."""
+        limit = self.max_prefills_per_step if limit is None else limit
         admitted = []
-        while (self.waiting and self._free
-               and len(admitted) < self.max_prefills_per_step):
-            req = self.waiting.popleft()
+        while self.waiting and self._free and len(admitted) < limit:
+            req = self.waiting[0]
+            if admit_ok is not None and not admit_ok(req):
+                break
+            self.waiting.popleft()
             slot = heapq.heappop(self._free)
             req.state = RequestState.RUNNING
             req.slot = slot
             self.running[slot] = req
             admitted.append((req, slot))
         return admitted
+
+    def begin_chunked(self, slot: int) -> Request:
+        """Move a just-admitted request into the chunked-prefill state."""
+        req = self.running.pop(slot)
+        req.state = RequestState.PREFILLING
+        self.chunking[slot] = req
+        return req
+
+    def promote(self, slot: int) -> Request:
+        """Final chunk done: the lane joins the decode batch."""
+        req = self.chunking.pop(slot)
+        req.state = RequestState.RUNNING
+        self.running[slot] = req
+        return req
 
     def release(self, slot: int) -> Request:
         """Evict the finished request in ``slot``; the lane is reusable."""
@@ -68,7 +101,7 @@ class FIFOScheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.running or self.chunking)
 
     def request_in(self, slot: int) -> Optional[Request]:
-        return self.running.get(slot)
+        return self.running.get(slot) or self.chunking.get(slot)

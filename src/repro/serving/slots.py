@@ -15,10 +15,13 @@ The batch axis is leaf-dependent: scanned ``blocks`` / ``cross_kv`` leaves
 are stacked ``(n_periods, B, ...)`` (axis 1), everything else is ``(B,
 ...)`` (axis 0); the axis map is derived from the cache's top-level keys.
 
-Free lanes still ride through ``decode_step`` (their ``pos`` advances on
-garbage tokens).  That is safe by construction: lanes are independent, and
-``dynamic_update_slice`` clamps out-of-range starts, so a long-idle lane
-just rewrites its last row until a new request's insert resets it.
+Free lanes still ride through ``decode_step`` (fixed shapes), but their
+``pos`` no longer drifts on garbage tokens: the engine passes a live-lane
+mask and the jitted step pins idle lanes' ``pos`` to 0 (see
+``model.decode_step``'s ``active`` argument).  Garbage *writes* from idle
+lanes remain lane-local here (``dynamic_update_slice`` clamps, and row 0
+is rewritten by the next insert) — only the paged cache, where pages are
+shared, needs the additional trash-page redirect.
 """
 
 from __future__ import annotations

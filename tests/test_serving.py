@@ -111,11 +111,11 @@ ENGINE_CASES = [
 ]
 
 
-def _engine_setup(arch, buckets, n_slots=2, cache_len=32, **cfg_kw):
+def _engine_setup(arch, buckets, n_slots=2, cache_len=32, ecfg_kw=None, **cfg_kw):
     cfg = reduced(get_config(arch)).with_(remat=False, **cfg_kw)
     params = init_params(cfg, jax.random.PRNGKey(0))
     ecfg = EngineConfig(n_slots=n_slots, cache_len=cache_len,
-                        prefill_buckets=buckets)
+                        prefill_buckets=buckets, **(ecfg_kw or {}))
     return cfg, params, ServingEngine(cfg, params, ecfg)
 
 
@@ -170,6 +170,182 @@ def test_engine_int8_kv_parity():
         agree += sum(a == b for a, b in zip(outs["int8"][rid], ref))
         total += len(ref)
     assert agree / total >= 0.8, f"int8 KV agreement {agree}/{total}"
+
+
+# ---------------------------------------------------------------------------
+# Paged cache mode (repro/paging/)
+# ---------------------------------------------------------------------------
+
+# every cache mechanism the paged engine serves: GQA pools, MLA latent
+# pools, MoE (attn pools + routed FFN), recurrent per-lane state (the
+# degenerate paged case: no pools, block tables unused), and the hybrid
+# rglru + local-attn ring (rings stay per-lane inside the paged tree)
+PAGED_ARCHS = ["llama3.2-1b", "minicpm3-4b", "granite-moe-3b-a800m",
+               "xlstm-125m", "recurrentgemma-9b"]
+RECURRENT_ARCHS = {"xlstm-125m", "recurrentgemma-9b"}
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_engine_paged_matches_solo(arch):
+    """Acceptance: the paged engine is output-invisible — staggered
+    mixed-length requests (several spanning multiple pages), more requests
+    than lanes, exact greedy match vs solo serve_batch.  page_size=8 with
+    cache_len=32 makes the gathered view the slot shape, so the match is
+    bitwise, not approximate."""
+    from repro.launch.serve import serve_batch
+
+    buckets = (8, 16) if arch not in RECURRENT_ARCHS else None
+    cfg, params, engine = _engine_setup(
+        arch, buckets, ecfg_kw=dict(cache_mode="paged", page_size=8))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (5, 13, 3, 17)]
+    gens = [6, 4, 8, 5]
+    arrivals = [(0, prompts[0], gens[0]), (0, prompts[1], gens[1]),
+                (2, prompts[2], gens[2]), (4, prompts[3], gens[3])]
+    metrics = engine.run(arrivals)
+
+    assert len(metrics.finished) == 4
+    by_id = {r.req_id: r for r in metrics.finished}
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        solo, _ = serve_batch(cfg, params,
+                              {"tokens": jnp.asarray([p], jnp.int32)},
+                              cache_len=engine.engine_cfg.cache_len,
+                              gen_tokens=g)
+        assert by_id[i].output_tokens == np.asarray(solo)[0].tolist(), (
+            f"{arch}: paged request {i} diverged from its solo decode")
+    # eviction returned every page to the pool the same run
+    assert engine.store.manager.pages_in_use == 0 if engine._has_paged_kinds else True
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+def test_engine_chunked_prefill_matches_solo(arch):
+    """Chunked admission (prompts spanning several page-sized chunks,
+    interleaved with running decodes) produces exactly the solo stream."""
+    from repro.launch.serve import serve_batch
+
+    cfg, params, engine = _engine_setup(
+        arch, None, ecfg_kw=dict(cache_mode="paged", page_size=8,
+                                 prefill_chunk=8))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (13, 21, 3, 17)]
+    gens = [5, 4, 6, 5]
+    arrivals = [(0, prompts[0], gens[0]), (0, prompts[1], gens[1]),
+                (2, prompts[2], gens[2]), (4, prompts[3], gens[3])]
+    metrics = engine.run(arrivals)
+
+    assert metrics.chunk_steps >= 6  # 13 -> 2 chunks, 21 -> 3, 17 -> 3
+    by_id = {r.req_id: r for r in metrics.finished}
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        solo, _ = serve_batch(cfg, params,
+                              {"tokens": jnp.asarray([p], jnp.int32)},
+                              cache_len=engine.engine_cfg.cache_len,
+                              gen_tokens=g)
+        assert by_id[i].output_tokens == np.asarray(solo)[0].tolist(), (
+            f"{arch}: chunked request {i} diverged from its solo decode")
+
+
+def test_engine_paged_admissions_serialize_on_capacity():
+    """Two requests that each fit but cannot fit TOGETHER must admit one
+    after the other (reservation taken before the next capacity gate), not
+    crash mid-step on an overcommitted pool."""
+    cfg, params, engine = _engine_setup(
+        "llama3.2-1b", None,
+        ecfg_kw=dict(cache_mode="paged", page_size=8, n_pages=6,
+                     max_prefills_per_step=2))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 16).tolist() for _ in range(2)]
+    metrics = engine.run([(0, prompts[0], 8), (0, prompts[1], 8)])
+    assert len(metrics.finished) == 2
+    assert metrics.peak_running == 1      # 3+3 pages never fit 5 at once
+    assert engine.store.manager.pages_in_use == 0
+
+
+def test_engine_paged_int8_matches_slot_int8():
+    """int8 byte-size pages quantize exactly like the int8 slot cache, so
+    the two modes' greedy streams are identical (not merely close)."""
+    outs = {}
+    for mode in ("slot", "paged"):
+        cfg, params, engine = _engine_setup(
+            "llama3.2-1b", None, kv_cache_dtype="int8",
+            ecfg_kw=dict(cache_mode=mode, page_size=8))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (6, 11, 4)]
+        metrics = engine.run([(0, prompts[0], 5), (1, prompts[1], 5),
+                              (2, prompts[2], 5)])
+        outs[mode] = {r.req_id: r.output_tokens for r in metrics.finished}
+    assert outs["paged"] == outs["slot"]
+
+
+def test_engine_paged_decode_traced_once():
+    """Acceptance: growth, admission, eviction and table refreshes never
+    retrace the decode step (fixed shapes end to end)."""
+    cfg, params, engine = _engine_setup(
+        "llama3.2-1b", None, ecfg_kw=dict(cache_mode="paged", page_size=8,
+                                          prefill_chunk=8))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (13, 5, 17, 4)]
+    engine.run([(0, prompts[0], 6), (1, prompts[1], 4)])
+    n_traces = engine._decode_sample._cache_size()
+    assert n_traces >= 1
+    engine.run([(0, prompts[2], 8), (0, prompts[3], 3)])
+    assert engine._decode_sample._cache_size() == n_traces, (
+        "decode step retraced mid-serve")
+
+
+def test_free_lane_pos_stays_pinned():
+    """Satellite: freed lanes' pos is reset inside the jitted step and no
+    longer drifts upward on garbage decode tokens."""
+    cfg, params, engine = _engine_setup("llama3.2-1b", None, n_slots=2)
+    rng = np.random.default_rng(0)
+    short = rng.integers(0, cfg.vocab_size, 4).tolist()
+    long = rng.integers(0, cfg.vocab_size, 4).tolist()
+    engine.run([(0, short, 2), (0, long, 12)])
+    # lane 0 (short request) evicted many steps before lane 1 finished;
+    # without the active mask its pos would have kept advancing
+    assert engine.store.pos.tolist()[0] == 0
+
+
+def test_engine_streaming_hooks():
+    """Satellite: on_token callback fires for every token (in order), and
+    the generator API yields the same stream the request records."""
+    cfg, params, engine = _engine_setup("minicpm3-4b", None, n_slots=2)
+    rng = np.random.default_rng(3)
+    seen = []
+    req = engine.add_request(rng.integers(0, cfg.vocab_size, 6).tolist(), 5,
+                             on_token=seen.append)
+    while engine.has_work:
+        engine.step()
+    assert seen == req.output_tokens and len(seen) == 5
+
+    cfg, params, engine = _engine_setup("minicpm3-4b", None, n_slots=2)
+    toks = list(engine.stream(rng.integers(0, cfg.vocab_size, 6).tolist(), 4))
+    assert len(toks) == 4
+    assert toks == engine.metrics.finished[0].output_tokens
+
+
+def test_engine_rejects_bad_paged_configs():
+    cfg = reduced(get_config("llama3.2-1b")).with_(remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="cache_mode"):
+        ServingEngine(cfg, params, EngineConfig(cache_mode="virtual"))
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params, EngineConfig(cache_mode="slot", prefill_chunk=8))
+    with pytest.raises(ValueError, match="multiple of"):
+        ServingEngine(cfg, params, EngineConfig(cache_mode="paged", page_size=8,
+                                                prefill_chunk=12))
+    # a request whose worst-case reservation can never fit the pool must
+    # fail fast, not stall the admission gate forever
+    tiny = ServingEngine(cfg, params, EngineConfig(
+        n_slots=2, cache_len=32, cache_mode="paged", page_size=8, n_pages=3))
+    with pytest.raises(ValueError, match="pages"):
+        tiny.add_request(list(range(1, 17)), max_new_tokens=8)  # needs 3 pages, has 2
+    # MoE capacity depends on how many tokens share a dispatch -> unchunkable
+    moe_cfg = reduced(get_config("granite-moe-3b-a800m")).with_(remat=False)
+    moe_params = init_params(moe_cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="chunk"):
+        ServingEngine(moe_cfg, moe_params,
+                      EngineConfig(cache_mode="paged", page_size=8,
+                                   prefill_chunk=8))
 
 
 def test_engine_rejects_bad_configs():
