@@ -5,14 +5,14 @@ A mixed-length workload (bimodal generation budgets — the realistic case
 that kills lockstep batching) is served over identical requests:
 
 * **static** — FIFO groups of ``slots`` requests through
-  ``launch.serve.serve_batch``: prompts padded to a common length, every
+  ``repro.api.serve_batch``: prompts padded to a common length, every
   lane decodes until the *longest* budget in its group finishes (finished
   lanes burn compute), next group waits for the whole previous one.
-* **engine** — ``repro.serving.ServingEngine``: slot-based KV cache,
-  finished lanes evicted and refilled from the queue each step, prefill
-  interleaved with decode.
-* **paged**  — the same engine on ``cache_mode="paged"`` with the *same
-  page budget* the slot pool would occupy, but more lanes: requests
+* **engine** — the continuous-batching engine via the ``repro.api.LLM``
+  facade: slot-based KV cache, finished lanes evicted and refilled from
+  the queue each step, prefill interleaved with decode.
+* **paged**  — the same facade on ``KVConfig(mode="paged")`` with the
+  *same page budget* the slot pool would occupy, but more lanes: requests
   reserve their own worst case instead of the global ``cache_len``, so
   mixed-length traffic packs strictly more concurrent requests into the
   same KV memory (the ``peak_running`` column).
@@ -41,15 +41,21 @@ import numpy as np
 sys.path.insert(0, str(pathlib.Path(__file__).parent))
 from bench_record import append_run  # noqa: E402
 
+from repro.api import (
+    LLM,
+    KVConfig,
+    QuantRuntime,
+    RuntimeConfig,
+    SchedulerConfig,
+    serve_batch,
+)
 from repro.configs import (
     default_cache_len,
     default_page_count,
     get_config,
     reduced,
 )
-from repro.launch.serve import serve_batch
 from repro.models import init_params
-from repro.serving import EngineConfig, ServingEngine
 
 PAGE_SIZE = 16
 
@@ -104,14 +110,19 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
 
 
 def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
-               stagger: int = 0, **ecfg_kw):
-    ecfg = EngineConfig(n_slots=slots, cache_len=cache_len,
-                        prefill_buckets=buckets, **ecfg_kw)
-    engine = ServingEngine(cfg, params, ecfg)
+               stagger: int = 0, quant_mode: str = "bf16",
+               kv_dtype: str = "bf16", **kv_kw):
+    """One facade cell: the RuntimeConfig IS the cell description."""
+    runtime = RuntimeConfig(
+        quant=QuantRuntime(mode=quant_mode),
+        kv=KVConfig(dtype=kv_dtype, cache_len=cache_len, **kv_kw),
+        scheduler=SchedulerConfig(n_slots=slots, prefill_buckets=buckets),
+    )
+    llm = LLM(config=cfg, params=params, runtime=runtime)
     arrivals = [(i * stagger, p, b) for i, (p, b) in enumerate(workload)]
-    metrics = engine.run(arrivals)
+    metrics = llm.engine.run(arrivals)
     rep = metrics.report()
-    rep["mode"] = "paged" if ecfg_kw.get("cache_mode") == "paged" else "engine"
+    rep["mode"] = "paged" if kv_kw.get("mode") == "paged" else "engine"
     rep["stagger"] = stagger
     return rep
 
@@ -122,10 +133,9 @@ def paged_kw(slots: int, cache_len: int, n_requests: int):
     unconstrained by memory — admission reserves per-request worst cases,
     so concurrency is bounded by actual lengths, not by ``cache_len``."""
     return dict(
-        cache_mode="paged",
+        mode="paged",
         page_size=PAGE_SIZE,
         n_pages=default_page_count(slots, cache_len, PAGE_SIZE),
-        prefill_chunk=None,
     ), min(max(2 * slots, slots + 1), n_requests)
 
 
@@ -156,11 +166,17 @@ def main():
     cfg = get_config(args.arch)
     if not args.full:
         cfg = reduced(cfg)
-    cfg = cfg.with_(remat=False, quant_mode=args.quant_mode,
-                    kv_cache_dtype=args.kv_cache_dtype)
+    cfg = cfg.with_(remat=False)
+    # resolve the model-side runtime knobs ONCE so every cell (and the
+    # static baseline) shares the identical jit-hashable ModelConfig
+    cfg = RuntimeConfig(
+        quant=QuantRuntime(mode=args.quant_mode),
+        kv=KVConfig(dtype=args.kv_cache_dtype),
+    ).resolve_model(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
     cache_len = default_cache_len(args.prompt_len, args.gen)
     buckets = (args.prompt_len,)  # one prefill trace; static pads to the same
+    cell_kw = dict(quant_mode=args.quant_mode, kv_dtype=args.kv_cache_dtype)
 
     if args.quick:
         slot_sweep, stagger_sweep = [2], [0]
@@ -188,7 +204,7 @@ def main():
         if args.requests % slots:
             run_static(cfg, params, warm[:args.requests % slots], slots,
                        args.prompt_len, cache_len)
-        run_engine(cfg, params, warm, slots, cache_len, buckets)
+        run_engine(cfg, params, warm, slots, cache_len, buckets, **cell_kw)
 
         # best-of-N: wall-clock on a shared host is noisy; the fastest
         # repetition is the least-perturbed measurement of each schedule
@@ -202,7 +218,7 @@ def main():
               f"{rec['ttft_max_s']:9.3f}")
         for stagger in stagger_sweep:
             rec = max((run_engine(cfg, params, workload, slots, cache_len,
-                                  buckets, stagger)
+                                  buckets, stagger, **cell_kw)
                        for _ in range(args.repeats)),
                       key=lambda r: r["tokens_per_s"])
             rec["slots"], rec["repeats"] = slots, args.repeats
@@ -213,9 +229,10 @@ def main():
 
         # paged sweep: SAME page budget as the slot pool above, more lanes
         pkw, lanes = paged_kw(slots, cache_len, args.requests)
-        run_engine(cfg, params, warm, lanes, cache_len, buckets, 0, **pkw)
+        run_engine(cfg, params, warm, lanes, cache_len, buckets, 0,
+                   **cell_kw, **pkw)
         rec = max((run_engine(cfg, params, workload, lanes, cache_len,
-                              buckets, 0, **pkw)
+                              buckets, 0, **cell_kw, **pkw)
                    for _ in range(args.repeats)),
                   key=lambda r: r["tokens_per_s"])
         rec["slots"], rec["lanes"], rec["repeats"] = slots, lanes, args.repeats

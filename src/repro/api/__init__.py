@@ -1,0 +1,100 @@
+"""``repro.api`` — the public facade over the whole serving stack.
+
+One import gives the vLLM-style surface; everything underneath stays
+reachable for power users but is no longer required wiring:
+
+Map of the package
+==================
+
+``llm.LLM``
+    The single entrypoint.  ``LLM(arch="llama3.2-1b",
+    runtime=RuntimeConfig(...))`` owns param init / checkpoint restore,
+    resolves the runtime config, builds engine + policies, and exposes
+    ``.generate(prompts, SamplingParams) -> list[RequestOutput]``,
+    ``.stream(prompt, detokenize=...)`` and (advanced) ``.engine``.
+
+``config.RuntimeConfig``
+    The one layered runtime surface, subsuming the knobs previously
+    smeared across ``ModelConfig`` / ``EngineConfig`` / CLI flags:
+
+    * ``QuantRuntime``     — quant mode + GEMM backend registry name
+    * ``KVConfig``         — slot vs paged, KV dtype, page geometry
+    * ``SchedulerConfig``  — slots, buckets, chunking, batched admission,
+                             defrag threshold
+    * ``SamplingDefaults`` — default per-request sampling policy
+
+    Frozen + validated; ``to_dict``/``from_dict`` round-trip; one
+    ``resolve(cfg)`` step derives the legacy ``ModelConfig`` overrides and
+    ``EngineConfig`` (jit-hashing behaviour unchanged);
+    ``build_policies()`` yields the ``serving.EnginePolicies``.
+
+``outputs.RequestOutput``
+    Finished-generation record: prompt/output token ids, optional decoded
+    text, finish reason, TTFT / latency.
+
+``baseline.serve_batch``
+    The static lockstep reference the engine is exactness-tested against
+    (and the benchmark baseline); also serves enc-dec / frontend stacks.
+
+Quickstart
+==========
+
+    from repro.api import LLM, RuntimeConfig, KVConfig, SamplingParams
+
+    llm = LLM(arch="llama3.2-1b", runtime=RuntimeConfig(reduced=True))
+    out, = llm.generate([1, 2, 3, 4], max_new_tokens=8)
+    print(out.token_ids, out.finish_reason)
+
+    paged = LLM(arch="llama3.2-1b", runtime=RuntimeConfig(
+        reduced=True, kv=KVConfig(mode="paged", dtype="int8")))
+    for piece in paged.stream([1, 2, 3, 4], detokenize=True):
+        print(piece, end="")
+
+See ``examples/api_quickstart.py`` for the runnable version.
+"""
+
+from repro.api.baseline import serve_batch
+from repro.api.config import (
+    KVConfig,
+    QuantRuntime,
+    RuntimeConfig,
+    SamplingDefaults,
+    SchedulerConfig,
+    auto_buckets,
+)
+from repro.api.llm import LLM
+from repro.api.outputs import RequestOutput
+from repro.serving.policies import (
+    AdmissionPolicy,
+    BucketBatchedAdmission,
+    BudgetOrEOSEviction,
+    DefragPolicy,
+    EnginePolicies,
+    EvictionPolicy,
+    FIFOAdmission,
+    NeverDefrag,
+    ThresholdDefrag,
+)
+from repro.serving.sampling import SamplingParams
+
+__all__ = [
+    "AdmissionPolicy",
+    "BucketBatchedAdmission",
+    "BudgetOrEOSEviction",
+    "DefragPolicy",
+    "EnginePolicies",
+    "EvictionPolicy",
+    "FIFOAdmission",
+    "KVConfig",
+    "LLM",
+    "NeverDefrag",
+    "QuantRuntime",
+    "RequestOutput",
+    "RuntimeConfig",
+    "SamplingDefaults",
+    "SamplingParams",
+    "SchedulerConfig",
+    "ThresholdDefrag",
+    "auto_buckets",
+    "serve_batch",
+]

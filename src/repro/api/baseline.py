@@ -1,0 +1,47 @@
+"""Static-batch lockstep baseline (moved here from ``launch/serve.py`` so
+the CLI and benchmarks consume everything through ``repro.api``).
+
+``serve_batch`` prefills a whole rectangular batch together and decodes
+``gen_tokens`` greedy steps in lockstep.  It is kept for two reasons: it is
+the reference implementation the continuous-batching engine is exactness-
+tested against, and it is the baseline ``benchmarks/serve_bench.py`` beats.
+It also remains the serving path for encoder-decoder / frontend stacks the
+engine does not admit.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.steps import make_prefill_step, make_serve_step
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(cfg, cache_len: int):
+    """jit wrappers keyed by (cfg, cache_len) — ``make_*_step`` returns a new
+    closure per call, so without this every ``serve_batch`` call recompiles."""
+    return (jax.jit(make_prefill_step(cfg, cache_len)),
+            jax.jit(make_serve_step(cfg), donate_argnums=(2,)))
+
+
+def serve_batch(cfg, params, batch, *, cache_len: int, gen_tokens: int):
+    """Static-batch lockstep baseline: every sequence prefills together and
+    decodes ``gen_tokens`` steps together (greedy). Returns (B, gen)."""
+    prefill_fn, step_fn = _jitted_steps(cfg, cache_len)
+    t0 = time.time()
+    logits, cache = prefill_fn(params, batch)
+    prefill_s = time.time() - t0
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(gen_tokens - 1):
+        logits, cache = step_fn(params, tok, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t0
+    return jnp.stack(out, axis=1), {"prefill_s": prefill_s, "decode_s": decode_s}

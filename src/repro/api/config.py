@@ -1,0 +1,317 @@
+"""Layered runtime configuration for the ``repro.api`` facade.
+
+Before this module the runtime knobs were smeared across three surfaces:
+``ModelConfig`` carried execution overrides (``quant_mode``,
+``gemm_backend``, ``kv_cache_dtype``, ``paged_attn_impl``),
+``serving.EngineConfig`` carried pool shape/policy
+(``cache_mode``/``page_size``/``n_pages``/``prefill_chunk``/buckets), and
+the CLIs re-spelled both as flags.  ``RuntimeConfig`` subsumes all of them
+into four explicit, frozen sub-configs:
+
+* ``QuantRuntime``     — GEMM execution: quant mode + backend registry name.
+* ``KVConfig``         — KV cache: slot vs paged, dtype (bf16 / byte-size
+                         int8), page geometry, paged-attention impl.
+* ``SchedulerConfig``  — admission: slots, buckets, chunking, stacked
+                         (batched) prefill admission, defrag threshold.
+* ``SamplingDefaults`` — the default per-request sampling policy.
+
+``resolve()`` is the single resolution step: it derives the legacy
+``ModelConfig`` overrides (via ``ModelConfig.with_``, so the model config
+stays the one frozen, hashable object jit keys on — jit-hashing behaviour
+is unchanged) plus the ``EngineConfig`` the engine consumes.
+``to_dict``/``from_dict`` round-trip through plain JSON-serializable dicts.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Optional, Tuple, Union
+
+from repro.backends.spec import QUANT_MODES, parse_quant_mode
+from repro.configs.base import (
+    DEFAULT_PAGE_SIZE,
+    ModelConfig,
+    default_cache_len,
+)
+from repro.serving.engine import RECURRENT_KINDS, EngineConfig
+from repro.serving.policies import (
+    BucketBatchedAdmission,
+    BudgetOrEOSEviction,
+    EnginePolicies,
+    FIFOAdmission,
+    NeverDefrag,
+    ThresholdDefrag,
+)
+from repro.serving.sampling import SamplingParams
+
+_PAGED_ATTN_IMPLS = (None, "jnp", "pallas", "pallas_interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRuntime:
+    """GEMM execution mode (the paper's byte-size integer pipelines)."""
+
+    # "bf16" | "int8_spoga" | parametric "w<bits>a<bits>[_s<slices>]"
+    mode: str = "bf16"
+    # GEMM backend registry name (None = auto-select by platform/family)
+    gemm_backend: Optional[str] = None
+
+    def __post_init__(self):
+        if self.mode not in QUANT_MODES:
+            try:
+                parse_quant_mode(self.mode)
+            except ValueError:
+                raise ValueError(
+                    f"QuantRuntime.mode must be in {QUANT_MODES} or a "
+                    f"parametric 'w<bits>a<bits>[_s<slice>]' string, got "
+                    f"{self.mode!r}") from None
+        if self.gemm_backend is not None:
+            from repro.backends import get_backend, list_backends
+
+            try:
+                get_backend(self.gemm_backend)
+            except KeyError:
+                raise ValueError(
+                    f"unknown gemm_backend {self.gemm_backend!r}; known: "
+                    f"{list_backends()}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class KVConfig:
+    """KV-cache storage: slot vs paged pool, dtype, page geometry."""
+
+    mode: str = "slot"               # "slot" | "paged"
+    dtype: str = "bf16"              # "bf16" | "int8" (byte-size + scales)
+    # total rows per lane; None = derive from the workload at resolution
+    # time (default_cache_len(prompt_len, gen_tokens))
+    cache_len: Optional[int] = None
+    page_size: int = DEFAULT_PAGE_SIZE
+    # pool size in pages; None = the slot-equivalent KV budget
+    n_pages: Optional[int] = None
+    # paged-attention impl: None (auto) | "jnp" | "pallas" | "pallas_interpret"
+    paged_attn_impl: Optional[str] = None
+
+    def __post_init__(self):
+        if self.mode not in ("slot", "paged"):
+            raise ValueError(f"KVConfig.mode must be 'slot' or 'paged', got "
+                             f"{self.mode!r}")
+        if self.dtype not in ("bf16", "int8"):
+            raise ValueError(f"KVConfig.dtype must be 'bf16' or 'int8', got "
+                             f"{self.dtype!r}")
+        if self.cache_len is not None and self.cache_len < 1:
+            raise ValueError("KVConfig.cache_len must be >= 1")
+        if self.page_size < 1:
+            raise ValueError("KVConfig.page_size must be >= 1")
+        if self.n_pages is not None:
+            if self.mode != "paged":
+                raise ValueError("KVConfig.n_pages requires mode='paged'")
+            if self.n_pages < 2:
+                raise ValueError("KVConfig.n_pages must be >= 2 "
+                                 "(page 0 is the trash page)")
+        if self.paged_attn_impl not in _PAGED_ATTN_IMPLS:
+            raise ValueError(
+                f"KVConfig.paged_attn_impl must be one of {_PAGED_ATTN_IMPLS}, "
+                f"got {self.paged_attn_impl!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission / scheduling: lanes, buckets, chunking, engine policies."""
+
+    n_slots: int = 4
+    max_prefills_per_step: int = 1
+    # None = exact-length prefill; "auto" = power-of-two buckets derived at
+    # resolution time (dropped for recurrent stacks, whose state integrates
+    # padding); a tuple = explicit bucket lengths
+    prefill_buckets: Union[None, str, Tuple[int, ...]] = None
+    # paged mode: admit prompts longer than this in page-aligned chunks
+    prefill_chunk: Optional[int] = None
+    # stack >=2 same-bucket waiting prompts into ONE batched prefill
+    # dispatch (slot mode; paged admissions stay single-file)
+    batched_admission: bool = False
+    # paged mode: compact the pool when fragmentation (1 - used/span)
+    # crosses this threshold; None disables auto-defrag
+    defrag_threshold: Optional[float] = 0.5
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError("SchedulerConfig.n_slots must be >= 1")
+        if self.max_prefills_per_step < 1:
+            raise ValueError("SchedulerConfig.max_prefills_per_step must be >= 1")
+        if isinstance(self.prefill_buckets, str):
+            if self.prefill_buckets != "auto":
+                raise ValueError("prefill_buckets must be None, 'auto' or a "
+                                 f"tuple of lengths, got {self.prefill_buckets!r}")
+        elif self.prefill_buckets is not None:
+            object.__setattr__(self, "prefill_buckets",
+                               tuple(int(b) for b in self.prefill_buckets))
+            if any(b < 1 for b in self.prefill_buckets):
+                raise ValueError("prefill bucket lengths must be >= 1")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError("SchedulerConfig.prefill_chunk must be >= 1")
+        if self.defrag_threshold is not None and not (
+                0.0 <= self.defrag_threshold < 1.0):
+            raise ValueError("SchedulerConfig.defrag_threshold must be in "
+                             "[0, 1) or None")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingDefaults:
+    """Default per-request sampling policy (overridable per call)."""
+
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        # mirror SamplingParams' own validation at config-build time
+        SamplingParams(**dataclasses.asdict(self))
+
+    def to_params(self) -> SamplingParams:
+        return SamplingParams(greedy=self.greedy, temperature=self.temperature,
+                              top_k=self.top_k, seed=self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """The one runtime surface: everything that is not the architecture.
+
+    ``RuntimeConfig`` OWNS the runtime knobs it subsumes — resolution
+    overwrites the corresponding ``ModelConfig`` fields (quant mode, GEMM
+    backend, KV dtype, paged-attention impl), so there is exactly one
+    place a deployment's runtime behaviour is specified.
+    """
+
+    quant: QuantRuntime = dataclasses.field(default_factory=QuantRuntime)
+    kv: KVConfig = dataclasses.field(default_factory=KVConfig)
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    sampling: SamplingDefaults = dataclasses.field(default_factory=SamplingDefaults)
+    # default generation budget for requests that don't specify one
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = None
+    # smoke-size the architecture config (configs.reduced) before use
+    reduced: bool = False
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("RuntimeConfig.max_new_tokens must be >= 1")
+        s, kv = self.scheduler, self.kv
+        if s.prefill_chunk is not None:
+            if kv.mode != "paged":
+                raise ValueError("scheduler.prefill_chunk requires "
+                                 "kv.mode='paged' (chunks live in pages)")
+            if s.prefill_chunk % kv.page_size:
+                raise ValueError(
+                    f"scheduler.prefill_chunk ({s.prefill_chunk}) must be a "
+                    f"multiple of kv.page_size ({kv.page_size})")
+        if s.batched_admission and kv.mode != "slot":
+            raise ValueError(
+                "scheduler.batched_admission requires kv.mode='slot' — paged "
+                "admissions are single-file (per-lane page scatter + the "
+                "reservation capacity gate), so stacking would silently "
+                "never happen")
+        if isinstance(s.prefill_buckets, tuple) and kv.cache_len is not None \
+                and max(s.prefill_buckets) > kv.cache_len:
+            raise ValueError("largest prefill bucket exceeds kv.cache_len")
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain JSON-serializable nested dict (tuples become lists)."""
+        d = dataclasses.asdict(self)
+        b = d["scheduler"]["prefill_buckets"]
+        if isinstance(b, tuple):
+            d["scheduler"]["prefill_buckets"] = list(b)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RuntimeConfig":
+        """Inverse of ``to_dict`` (also accepts partial dicts: missing keys
+        take their defaults, so serialized configs survive field growth)."""
+        d = copy.deepcopy(dict(d))
+        sched = dict(d.pop("scheduler", {}))
+        b = sched.get("prefill_buckets")
+        if b is not None and not isinstance(b, str):
+            sched["prefill_buckets"] = tuple(b)
+        return cls(
+            quant=QuantRuntime(**d.pop("quant", {})),
+            kv=KVConfig(**d.pop("kv", {})),
+            scheduler=SchedulerConfig(**sched),
+            sampling=SamplingDefaults(**d.pop("sampling", {})),
+            **d,
+        )
+
+    # -- resolution --------------------------------------------------------
+    def resolve_model(self, cfg: ModelConfig) -> ModelConfig:
+        """Apply the runtime's model-side overrides.  Returns an ordinary
+        frozen ``ModelConfig`` — the object every jit keys on — so adopting
+        the facade changes nothing about trace caching."""
+        return cfg.with_(
+            quant_mode=self.quant.mode,
+            gemm_backend=self.quant.gemm_backend,
+            kv_cache_dtype=self.kv.dtype,
+            paged_attn_impl=self.kv.paged_attn_impl,
+        )
+
+    def resolve_engine(self, cfg: ModelConfig,
+                       prompt_len: Optional[int] = None,
+                       gen_tokens: Optional[int] = None) -> EngineConfig:
+        """Derive the legacy ``EngineConfig``.  ``prompt_len``/``gen_tokens``
+        are workload hints used when ``kv.cache_len`` is None (sized by the
+        shared ``default_cache_len`` policy) and when buckets are 'auto'."""
+        if self.kv.cache_len is not None:
+            cache_len = self.kv.cache_len
+        elif prompt_len is not None and gen_tokens is not None:
+            cache_len = default_cache_len(prompt_len, gen_tokens)
+        else:
+            raise ValueError(
+                "cannot size the KV cache: set kv.cache_len or pass "
+                "prompt_len/gen_tokens workload hints to resolve_engine")
+        buckets = self.scheduler.prefill_buckets
+        if buckets == "auto":
+            recurrent = bool(RECURRENT_KINDS & set(cfg.block_pattern))
+            buckets = (None if recurrent
+                       else auto_buckets(prompt_len or cache_len))
+        return EngineConfig(
+            n_slots=self.scheduler.n_slots,
+            cache_len=cache_len,
+            max_prefills_per_step=self.scheduler.max_prefills_per_step,
+            prefill_buckets=buckets,
+            eos_token=self.eos_token,
+            cache_mode=self.kv.mode,
+            page_size=self.kv.page_size,
+            n_pages=self.kv.n_pages,
+            prefill_chunk=self.scheduler.prefill_chunk,
+        )
+
+    def resolve(self, cfg: ModelConfig, prompt_len: Optional[int] = None,
+                gen_tokens: Optional[int] = None
+                ) -> tuple[ModelConfig, EngineConfig]:
+        """The single resolution step: (ModelConfig with runtime overrides,
+        EngineConfig) — everything the legacy constructors need."""
+        model_cfg = self.resolve_model(cfg)
+        return model_cfg, self.resolve_engine(model_cfg, prompt_len, gen_tokens)
+
+    def build_policies(self) -> EnginePolicies:
+        """Engine policy objects implied by ``scheduler``: stacked-prefill
+        admission, budget-or-EOS eviction, threshold defrag."""
+        return EnginePolicies(
+            admission=(BucketBatchedAdmission() if self.scheduler.batched_admission
+                       else FIFOAdmission()),
+            eviction=BudgetOrEOSEviction(),
+            defrag=(ThresholdDefrag(self.scheduler.defrag_threshold)
+                    if self.scheduler.defrag_threshold is not None
+                    else NeverDefrag()),
+        )
+
+
+def auto_buckets(prompt_len: int) -> tuple[int, ...]:
+    """Power-of-two buckets covering [1, prompt_len] — bounds the number of
+    prefill traces while padding any prompt by at most 2x."""
+    buckets, b = [], 8
+    while b < prompt_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(prompt_len)
+    return tuple(buckets)

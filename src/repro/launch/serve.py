@@ -1,8 +1,8 @@
-"""Serving CLI — thin wrapper over the continuous-batching engine.
+"""Serving CLI — a thin consumer of the ``repro.api`` facade.
 
-Default path: ``repro.serving.ServingEngine`` (slot-based KV cache,
-interleaved prefill/decode, per-request sampling) fed a synthetic workload
-of mixed-length prompts with staggered arrivals:
+Every flag maps onto one field of the layered ``RuntimeConfig``; the CLI
+builds it, hands it to ``LLM``, and drives the engine with a synthetic
+staggered-arrival workload:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --reduced --requests 8 --slots 4 --prompt-len 32 --gen 16 --stagger 2
@@ -10,11 +10,14 @@ of mixed-length prompts with staggered arrivals:
 ``--cache-mode paged`` serves from the global page pool (block tables,
 optional ``--prefill-chunk`` chunked long-prompt admission, int8 byte-size
 pages via ``--kv-cache-dtype int8``, ``--paged-attn pallas_interpret`` to
-force the Pallas kernel through the interpreter off-TPU).  ``--stream``
-prints every token the moment it reaches the host.
+force the Pallas kernel through the interpreter off-TPU).
+``--batched-admission`` stacks same-bucket prompts into one prefill
+dispatch; ``--defrag-threshold`` tunes (or ``-1`` disables) the pool
+compaction policy; ``--stream`` prints every token the moment it reaches
+the host.
 
 ``--static`` (and enc-dec / frontend archs, which the engine does not
-admit) falls back to the lockstep static-batch baseline ``serve_batch`` —
+admit) falls back to the lockstep baseline ``repro.api.serve_batch`` —
 kept both as the reference implementation the engine is tested against and
 as the baseline ``benchmarks/serve_bench.py`` beats.
 """
@@ -22,45 +25,21 @@ as the baseline ``benchmarks/serve_bench.py`` beats.
 from __future__ import annotations
 
 import argparse
-import functools
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import default_cache_len, get_config, reduced as reduce_config
-from repro.launch.steps import make_prefill_step, make_serve_step
-from repro.models import init_params
+from repro.api import (
+    LLM,
+    KVConfig,
+    QuantRuntime,
+    RuntimeConfig,
+    SamplingDefaults,
+    SchedulerConfig,
+    serve_batch,
+)
+from repro.configs import default_cache_len
 from repro.models.frontends import fake_audio_frames, fake_vision_embeds
-from repro.serving import EngineConfig, SamplingParams, ServingEngine
-
-
-@functools.lru_cache(maxsize=None)
-def _jitted_steps(cfg, cache_len: int):
-    """jit wrappers keyed by (cfg, cache_len) — ``make_*_step`` returns a new
-    closure per call, so without this every ``serve_batch`` call recompiles."""
-    return (jax.jit(make_prefill_step(cfg, cache_len)),
-            jax.jit(make_serve_step(cfg), donate_argnums=(2,)))
-
-
-def serve_batch(cfg, params, batch, *, cache_len: int, gen_tokens: int):
-    """Static-batch lockstep baseline: every sequence prefills together and
-    decodes ``gen_tokens`` steps together (greedy). Returns (B, gen)."""
-    prefill_fn, step_fn = _jitted_steps(cfg, cache_len)
-    t0 = time.time()
-    logits, cache = prefill_fn(params, batch)
-    prefill_s = time.time() - t0
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for _ in range(gen_tokens - 1):
-        logits, cache = step_fn(params, tok, cache)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    decode_s = time.time() - t0
-    return jnp.stack(out, axis=1), {"prefill_s": prefill_s, "decode_s": decode_s}
 
 
 def synthetic_workload(cfg, n_requests: int, prompt_len: int, gen: int,
@@ -77,7 +56,8 @@ def synthetic_workload(cfg, n_requests: int, prompt_len: int, gen: int,
     return arrivals
 
 
-def _static_main(cfg, params, args):
+def _static_main(llm: LLM, args) -> None:
+    cfg, params = llm.config, llm.params
     key = jax.random.PRNGKey(0)
     kt, ke = jax.random.split(key)
     if cfg.is_encoder_decoder:
@@ -99,30 +79,13 @@ def _static_main(cfg, params, args):
     print("[serve] sample:", tokens[0][:12].tolist())
 
 
-def _engine_main(cfg, params, args):
-    from repro.serving.engine import RECURRENT_KINDS
-
-    sampling = SamplingParams(
-        greedy=args.temperature == 0.0,
-        temperature=args.temperature or 1.0,
-        top_k=args.top_k,
-        seed=args.seed,
-    )
-    # recurrent stacks must prefill at exact lengths (padding pollutes state)
-    use_buckets = not args.no_buckets and not (RECURRENT_KINDS & set(cfg.block_pattern))
-    ecfg = EngineConfig.for_workload(
-        args.prompt_len, args.gen,
-        n_slots=args.slots,
-        max_prefills_per_step=args.max_prefills,
-        prefill_buckets=_auto_buckets(args.prompt_len) if use_buckets else None,
-        cache_mode=args.cache_mode,
-        page_size=args.page_size,
-        n_pages=args.pages,
-        prefill_chunk=args.prefill_chunk,
-    )
-    engine = ServingEngine(cfg, params, ecfg)
+def _engine_main(llm: LLM, args) -> None:
+    # workload hints anchor the 'auto' bucket ladder to the nominal prompt
+    # length (auto_buckets(prompt_len), as the pre-facade CLI built it)
+    engine = llm.build_engine(args.prompt_len, args.gen)
+    sampling = llm.runtime.sampling.to_params()
     arrivals = [(s, p, g, sampling)
-                for s, p, g in synthetic_workload(cfg, args.requests,
+                for s, p, g in synthetic_workload(llm.config, args.requests,
                                                   args.prompt_len, args.gen,
                                                   args.stagger, args.seed)]
     on_token = (lambda req, tok: print(f"[stream] req {req.req_id}: {tok}",
@@ -133,20 +96,48 @@ def _engine_main(cfg, params, args):
         m = metrics
         print(f"[engine] paged: peak {m.peak_running} concurrent lanes, "
               f"{m.peak_pages_used}/{m.pages_total} pages "
-              f"(page_size {m.page_size}), {m.chunk_steps} prefill chunks")
+              f"(page_size {m.page_size}), {m.chunk_steps} prefill chunks, "
+              f"{m.defrag_count} defrags")
+    if metrics.stacked_prefills:
+        print(f"[engine] batched admission: {metrics.prefills} prefills in "
+              f"{metrics.prefill_dispatches} dispatches "
+              f"({metrics.stacked_prefills} stacked)")
     if metrics.finished:
         first = min(metrics.finished, key=lambda r: r.req_id)
         print(f"[engine] sample (req {first.req_id}):", first.output_tokens[:12])
 
 
-def _auto_buckets(prompt_len: int):
-    """Power-of-two buckets covering [1, prompt_len] — bounds prefill traces."""
-    buckets, b = [], 8
-    while b < prompt_len:
-        buckets.append(b)
-        b *= 2
-    buckets.append(prompt_len)
-    return tuple(buckets)
+def _runtime_from_args(args) -> RuntimeConfig:
+    """Flags -> the layered RuntimeConfig (the whole point of the facade:
+    this mapping is the CLI's only job)."""
+    return RuntimeConfig(
+        quant=QuantRuntime(mode=args.quant_mode, gemm_backend=args.gemm_backend),
+        kv=KVConfig(
+            mode=args.cache_mode,
+            dtype=args.kv_cache_dtype,
+            cache_len=default_cache_len(args.prompt_len, args.gen),
+            page_size=args.page_size,
+            n_pages=args.pages,
+            paged_attn_impl=args.paged_attn,
+        ),
+        scheduler=SchedulerConfig(
+            n_slots=args.slots,
+            max_prefills_per_step=args.max_prefills,
+            prefill_buckets=None if args.no_buckets else "auto",
+            prefill_chunk=args.prefill_chunk,
+            batched_admission=args.batched_admission,
+            defrag_threshold=(None if args.defrag_threshold < 0
+                              else args.defrag_threshold),
+        ),
+        sampling=SamplingDefaults(
+            greedy=args.temperature == 0.0,
+            temperature=args.temperature or 1.0,
+            top_k=args.top_k,
+            seed=args.seed,
+        ),
+        max_new_tokens=args.gen,
+        reduced=args.reduced,
+    )
 
 
 def main():
@@ -161,9 +152,12 @@ def main():
     ap.add_argument("--stagger", type=int, default=2,
                     help="engine: steps between request arrivals")
     ap.add_argument("--max-prefills", type=int, default=1,
-                    help="engine: admissions interleaved per step")
+                    help="engine: admission dispatches interleaved per step")
     ap.add_argument("--no-buckets", action="store_true",
                     help="engine: exact-length prefill (one trace per length)")
+    ap.add_argument("--batched-admission", action="store_true",
+                    help="engine: stack same-bucket prompts into one prefill "
+                         "dispatch (slot mode)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -184,6 +178,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="paged: admit long prompts in chunks of this many "
                          "tokens (multiple of page-size), interleaved with decode")
+    ap.add_argument("--defrag-threshold", type=float, default=0.5,
+                    help="paged: compact the pool when fragmentation crosses "
+                         "this ratio (-1 disables)")
     ap.add_argument("--paged-attn", default=None,
                     choices=["jnp", "pallas", "pallas_interpret"],
                     help="paged attention impl (default: auto by platform)")
@@ -191,20 +188,15 @@ def main():
                     help="engine: print every token as it reaches the host")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduce_config(cfg)
-    cfg = cfg.with_(quant_mode=args.quant_mode, kv_cache_dtype=args.kv_cache_dtype,
-                    gemm_backend=args.gemm_backend, paged_attn_impl=args.paged_attn)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-
+    llm = LLM(arch=args.arch, runtime=_runtime_from_args(args))
+    cfg = llm.config
     engine_capable = not cfg.is_encoder_decoder and cfg.frontend is None
     if args.static or not engine_capable:
         if not engine_capable and not args.static:
             print(f"[serve] {cfg.name}: enc-dec/frontend arch — static path")
-        _static_main(cfg, params, args)
+        _static_main(llm, args)
     else:
-        _engine_main(cfg, params, args)
+        _engine_main(llm, args)
 
 
 if __name__ == "__main__":

@@ -1,26 +1,50 @@
 """Continuous-batching serving engine (slot- or paged-KV cache, interleaved
-prefill/decode, chunked long-prompt admission, per-lane sampling).
-See ``engine.ServingEngine`` and ``repro.paging``."""
+prefill/decode, chunked long-prompt admission, per-lane sampling, pluggable
+admission/eviction/defrag policies).  See ``engine.ServingEngine``,
+``policies`` and ``repro.paging``; the high-level entry point is the
+``repro.api`` facade."""
 
 from repro.paging import PagedCache, PageManager
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.metrics import EngineMetrics
-from repro.serving.request import Request, RequestState
+from repro.serving.policies import (
+    AdmissionPolicy,
+    BucketBatchedAdmission,
+    BudgetOrEOSEviction,
+    DefragPolicy,
+    EnginePolicies,
+    EvictionPolicy,
+    FIFOAdmission,
+    NeverDefrag,
+    ThresholdDefrag,
+)
+from repro.serving.request import Request, RequestState, default_detokenizer
 from repro.serving.sampling import SamplingParams, request_key, sample_tokens
-from repro.serving.scheduler import FIFOScheduler
+from repro.serving.scheduler import FIFOScheduler, Scheduler
 from repro.serving.slots import SlotCache
 
 __all__ = [
+    "AdmissionPolicy",
+    "BucketBatchedAdmission",
+    "BudgetOrEOSEviction",
+    "DefragPolicy",
     "EngineConfig",
     "EngineMetrics",
+    "EnginePolicies",
+    "EvictionPolicy",
+    "FIFOAdmission",
     "FIFOScheduler",
+    "NeverDefrag",
     "PageManager",
     "PagedCache",
     "Request",
     "RequestState",
     "SamplingParams",
+    "Scheduler",
     "ServingEngine",
     "SlotCache",
+    "ThresholdDefrag",
+    "default_detokenizer",
     "request_key",
     "sample_tokens",
 ]

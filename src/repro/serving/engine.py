@@ -16,6 +16,13 @@ runs an iteration-level loop: every ``step()``
 3. **evicts** finished lanes (length budget or EOS) immediately, so the
    next step can refill them instead of burning compute on dead lanes.
 
+WHICH requests admit, WHEN a lane evicts and WHEN the paged pool compacts
+are pluggable ``policies.EnginePolicies`` (admission / eviction / defrag):
+the defaults reproduce FIFO + budget-or-EOS and add threshold-triggered
+defrag; ``BucketBatchedAdmission`` stacks same-bucket prompts into one
+batched prefill dispatch (slot mode).  New scheduling scenarios are new
+policy classes, not engine surgery.
+
 Two cache modes (``EngineConfig.cache_mode``):
 
 * ``"slot"``  — ``slots.SlotCache``: every lane preallocates ``cache_len``
@@ -71,9 +78,10 @@ from repro.paging import (
     stack_kinds,
 )
 from repro.serving.metrics import EngineMetrics
+from repro.serving.policies import EnginePolicies
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, request_key, sample_tokens
-from repro.serving.scheduler import FIFOScheduler
+from repro.serving.scheduler import Scheduler
 from repro.serving.slots import SlotCache
 
 RECURRENT_KINDS = frozenset({"rglru", "mlstm", "slstm"})
@@ -109,6 +117,27 @@ def _jitted_admit(cfg: ModelConfig, cache_len: int):
         logits, single = prefill(params, {"tokens": tokens}, lengths)
         tok = sample_tokens(logits, temp, topk, greedy, key)
         return tok, scatter_lane(pool, single, slot, axes_flat)
+
+    return jax.jit(admit, donate_argnums=(0,), static_argnums=(9,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_admit_group(cfg: ModelConfig, cache_len: int, k: int):
+    """Stacked admission (slot mode): ``k`` same-bucket prompts prefill as
+    ONE batch=``k`` dispatch — prefill + per-lane first-token sample + lane
+    scatter fused, amortizing the per-admission dispatch cost that
+    ``BucketBatchedAdmission`` targets under bursty arrivals.  Prefill is
+    batch-parallel (rows attend only within themselves; padding is masked
+    by ``lengths``), so the stacked tokens are bitwise the k solo ones."""
+    from repro.serving.slots import scatter_lanes
+
+    prefill = make_prefill_step(cfg, cache_len, with_lengths=True)
+
+    def admit(pool, params, tokens, lengths, slots, temps, topk, greedy,
+              keys, axes_flat):
+        logits, multi = prefill(params, {"tokens": tokens}, lengths)
+        toks = sample_tokens(logits, temps, topk, greedy, keys)
+        return toks, scatter_lanes(pool, multi, slots, axes_flat, k)
 
     return jax.jit(admit, donate_argnums=(0,), static_argnums=(9,))
 
@@ -197,7 +226,8 @@ class EngineConfig:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig):
+    def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
+                 policies: Optional[EnginePolicies] = None):
         if cfg.is_encoder_decoder or cfg.frontend is not None:
             raise ValueError(
                 "ServingEngine handles decoder-only token-input models; "
@@ -219,8 +249,11 @@ class ServingEngine:
         self.buckets = buckets
         self.paged = engine_cfg.cache_mode == "paged"
 
+        self.policies = policies if policies is not None else EnginePolicies()
+
         n = engine_cfg.n_slots
-        self.scheduler = FIFOScheduler(n, engine_cfg.max_prefills_per_step)
+        self.scheduler = Scheduler(n, engine_cfg.max_prefills_per_step,
+                                   admission=self.policies.admission)
         self.metrics = EngineMetrics()
 
         # whole-stack effective kinds (lead + periods + tail) from the one
@@ -284,7 +317,7 @@ class ServingEngine:
     def add_request(self, prompt: Sequence[int], max_new_tokens: int,
                     sampling: Optional[SamplingParams] = None,
                     eos_token: Optional[int] = None,
-                    on_token=None) -> Request:
+                    on_token=None, on_text=None, detokenizer=None) -> Request:
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -315,6 +348,8 @@ class ServingEngine:
             sampling=sampling or SamplingParams(),
             eos_token=self.engine_cfg.eos_token if eos_token is None else eos_token,
             on_token=on_token,
+            on_text=on_text,
+            detokenizer=detokenizer,
             submit_time=time.perf_counter(),
         )
         self._next_id += 1
@@ -364,7 +399,37 @@ class ServingEngine:
                 np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
                 *common, self.store._axes_flat,
             )
+        self.metrics.prefill_dispatches += 1
         self._arm_lane(req, slot, int(np.asarray(tok_dev)[0]))
+
+    def _admit_group(self, group: list[tuple[Request, int]]) -> None:
+        """Stacked admission: same-bucket requests prefill as one batch=k
+        dispatch (slot mode only; the admission policy can only form >1
+        groups when the engine offers them — see ``step``)."""
+        k = len(group)
+        padded_len = self._bucket_len(group[0][0].prompt_len)
+        tokens = np.zeros((k, padded_len), np.int32)
+        lengths = np.zeros((k,), np.int32)
+        temps = np.ones((k,), np.float32)
+        topk = np.zeros((k,), np.int32)
+        greedy = np.ones((k,), bool)
+        keys = np.zeros((k, 2), np.uint32)
+        for i, (req, _) in enumerate(group):
+            tokens[i, :req.prompt_len] = req.prompt
+            lengths[i] = req.prompt_len
+            s = req.sampling
+            temps[i], topk[i], greedy[i] = s.temperature, s.top_k, s.greedy
+            keys[i] = self._lane_key(req)
+        slots = np.asarray([slot for _, slot in group], np.int32)
+        admit_fn = _jitted_admit_group(self.cfg, self.engine_cfg.cache_len, k)
+        toks_dev, self.store.cache = admit_fn(
+            self.store.cache, self.params, tokens, lengths, slots,
+            temps, topk, greedy, keys, self.store._axes_flat)
+        self.metrics.prefill_dispatches += 1
+        self.metrics.stacked_prefills += k
+        toks = np.asarray(toks_dev)
+        for i, (req, slot) in enumerate(group):
+            self._arm_lane(req, slot, int(toks[i]))
 
     # -- paged admission ------------------------------------------------
     def _single_len(self, padded_len: int) -> int:
@@ -449,6 +514,7 @@ class ServingEngine:
             np.asarray([start], np.int32), np.asarray([n], np.int32))
         req.prefill_done = start + n
         self.metrics.chunk_steps += 1
+        self.metrics.prefill_dispatches += 1
         if req.prefill_done >= req.prompt_len:
             s = req.sampling
             tok_dev = _sample_jit(
@@ -458,7 +524,7 @@ class ServingEngine:
             mgr.set_length(slot, req.prompt_len)
             self.scheduler.promote(slot)
             self._arm_lane(req, slot, int(np.asarray(tok_dev)[0]))
-            if req.done:  # max_new_tokens == 1 (or instant EOS)
+            if self._should_evict(req):  # max_new_tokens == 1 (or instant EOS)
                 self._evict(slot, finished)
 
     # ------------------------------------------------------------------
@@ -484,22 +550,33 @@ class ServingEngine:
             budget -= 1
             did_prefill = True
 
-        # admit one at a time: each admission takes its page reservation
-        # before the next one's capacity gate runs, so two jointly-unfittable
-        # requests can never both pass against the same pool snapshot
+        # admit one *dispatch* at a time: each admission takes its page
+        # reservation before the next one's capacity gate runs, so two
+        # jointly-unfittable requests can never both pass against the same
+        # pool snapshot.  In slot mode the admission policy may stack
+        # several same-bucket requests into one dispatch (paged admissions
+        # stay single-file: per-lane page scatter + the reservation gate).
         while budget > 0:
-            admitted = self.scheduler.schedule(limit=1,
-                                               admit_ok=self._can_admit)
-            if not admitted:
+            group = self.scheduler.schedule_group(
+                admit_ok=self._can_admit,
+                bucket_of=lambda r: self._bucket_len(r.prompt_len),
+                max_group=1 if self.paged else self.scheduler.free_slots)
+            if not group:
                 break
-            req, slot = admitted[0]
             budget -= 1
             did_prefill = True
+            if len(group) > 1:
+                self._admit_group(group)
+                for req, slot in group:
+                    if self._should_evict(req):
+                        self._evict(slot, finished)
+                continue
+            req, slot = group[0]
             if self._should_chunk(req):
                 self._begin_chunked(req, slot, finished)
             else:
                 self._admit(req, slot)
-                if req.done:  # max_new_tokens == 1 (or instant EOS)
+                if self._should_evict(req):  # max_new_tokens == 1 / instant EOS
                     self._evict(slot, finished)
         if did_prefill:
             jax.block_until_ready(self.store.cache["pos"])
@@ -535,21 +612,37 @@ class ServingEngine:
             if self._needs_sync():
                 self._flush(finished)
             self.metrics.decode_s += time.perf_counter() - t0
+
+        # policy-triggered pool compaction: evictions above may have left
+        # holes; compacting now keeps the free list contiguous for the next
+        # admissions (ROADMAP PR 3 follow-up: defrag existed, untriggered)
+        if (self.paged and self._has_paged_kinds
+                and self.policies.defrag.should_defrag(self.store.manager)):
+            moved = self.store.defrag()
+            if moved:
+                self.metrics.defrag_count += 1
+                self.metrics.defrag_pages_moved += moved
         return finished
+
+    def _should_evict(self, req: Request) -> bool:
+        return self.policies.eviction.should_evict(req)
 
     def _needs_sync(self) -> bool:
         """Must the pending token arrays reach the host NOW?  Yes iff some
         running lane's next scheduling decision depends on token values
         (EOS armed), its PRNG key must advance (stochastic sampling), it
-        streams tokens to a callback, or it reaches its length budget at
-        this step (eviction due)."""
+        streams tokens or text to a callback, or it reaches its length
+        budget at this step (eviction due).  An eviction policy that
+        inspects token values asks for per-step syncs wholesale."""
+        if getattr(self.policies.eviction, "wants_step_sync", False):
+            return True
         counts: dict[int, int] = {}
         for _, mapping in self._pending:
             for req in mapping.values():
                 counts[req.req_id] = counts.get(req.req_id, 0) + 1
         for req in self.scheduler.running.values():
             if (req.eos_token is not None or not req.sampling.greedy
-                    or req.on_token is not None):
+                    or req.on_token is not None or req.on_text is not None):
                 return True
             if len(req.output_tokens) + counts.get(req.req_id, 0) >= req.max_new_tokens:
                 return True
@@ -564,7 +657,7 @@ class ServingEngine:
         self._pending.clear()
         for slot, req in list(self.scheduler.running.items()):
             self._keys[slot] = self._lane_key(req)
-            if req.done:
+            if self._should_evict(req):
                 self._evict(slot, finished)
 
     def _evict(self, slot: int, finished: list[Request]) -> None:

@@ -21,6 +21,13 @@ class EngineMetrics:
     end_time: float = 0.0
     steps: int = 0
     prefills: int = 0
+    # prefill *dispatches*: a stacked (same-bucket) admission counts once
+    # here but once per request in ``prefills`` — the gap is what batched
+    # admission amortizes.  Chunked admissions count one dispatch per
+    # chunk (they can exceed ``prefills``), so the amortization ratio is
+    # only meaningful for unchunked (slot-mode) serving.
+    prefill_dispatches: int = 0
+    stacked_prefills: int = 0   # requests admitted via a >=2-wide stack
     decode_steps: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
@@ -34,6 +41,9 @@ class EngineMetrics:
     pages_total: int = 0
     page_size: int = 0
     peak_pages_used: int = 0
+    # pool compactions triggered by the engine's DefragPolicy
+    defrag_count: int = 0
+    defrag_pages_moved: int = 0
 
     def begin(self) -> None:
         if not self.start_time:
@@ -65,6 +75,8 @@ class EngineMetrics:
             "tokens_per_s": round(self.generated_tokens / self.wall_s, 2),
             "steps": self.steps,
             "prefills": self.prefills,
+            "prefill_dispatches": self.prefill_dispatches,
+            "stacked_prefills": self.stacked_prefills,
             "decode_steps": self.decode_steps,
             "prefill_s": round(self.prefill_s, 4),
             "decode_s": round(self.decode_s, 4),
@@ -78,6 +90,8 @@ class EngineMetrics:
             "pages_total": self.pages_total,
             "page_size": self.page_size,
             "peak_pages_used": self.peak_pages_used,
+            "defrag_count": self.defrag_count,
+            "defrag_pages_moved": self.defrag_pages_moved,
         }
 
     def format_report(self) -> str:

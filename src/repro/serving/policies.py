@@ -1,0 +1,173 @@
+"""Pluggable engine policies: admission, eviction, defrag.
+
+The engine used to hard-code its scheduling decisions — FIFO head-of-line
+admission in ``scheduler.py``, ``req.done`` eviction checks and (since the
+paged cache landed) *no* defrag trigger at all in ``engine.py``.  Every new
+serving scenario (priority tiers, preemption, prefix sharing, latency-SLO
+eviction) meant engine surgery.  This module turns each decision into a
+small policy object behind a ``Protocol``, so scenario growth is a new
+policy class:
+
+* ``AdmissionPolicy`` — which waiting requests become the next prefill
+  *dispatch*.  The default ``FIFOAdmission`` admits the FIFO head, one
+  request per dispatch (exactly the old behaviour).
+  ``BucketBatchedAdmission`` stacks same-bucket prompts into ONE batched
+  prefill dispatch, amortizing admission cost under bursty arrivals.
+* ``EvictionPolicy`` — when a running request leaves its lane.  The
+  default ``BudgetOrEOSEviction`` evicts on length budget or EOS
+  (``Request.done``).
+* ``DefragPolicy`` — when the paged engine compacts its page pool.
+  ``PagedCache.defrag()`` existed with nothing triggering it; the default
+  ``ThresholdDefrag`` fires when the pool's fragmentation ratio crosses a
+  threshold, and the engine reports a ``defrag_count`` metric.
+
+Policies are *output-invisible* by construction where the exact-match
+serving tests demand it: admission stacking only changes how prefills are
+dispatched (prefill is batch-parallel), eviction defaults reproduce
+``req.done``, and defrag only moves pages (the block tables are remapped
+in the same step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Protocol, Sequence, runtime_checkable
+
+from repro.serving.request import Request
+
+
+@runtime_checkable
+class AdmissionPolicy(Protocol):
+    def next_group(self, waiting: Sequence[Request], max_group: int,
+                   admit_ok: Callable[[Request], bool],
+                   bucket_of: Callable[[Request], int]) -> list[int]:
+        """Indices into ``waiting`` forming the next admission *dispatch*.
+
+        ``max_group`` is the engine's hard cap (free slots; 1 when the
+        cache mode cannot stack).  ``admit_ok`` is the capacity gate
+        (paged reservations).  ``bucket_of`` maps a request to its padded
+        prefill length — only same-bucket requests can share a dispatch.
+        Return ``[]`` to admit nothing this step.
+        """
+        ...
+
+
+@runtime_checkable
+class EvictionPolicy(Protocol):
+    # Policies that decide on *token values* (not just counts) must set
+    # this True so the engine syncs pending device tokens every step
+    # instead of at its lazy sync points.
+    wants_step_sync: bool
+
+    def should_evict(self, req: Request) -> bool:
+        """True when a running request must leave its lane now."""
+        ...
+
+
+@runtime_checkable
+class DefragPolicy(Protocol):
+    def should_defrag(self, manager) -> bool:
+        """True when the paged pool should compact (``manager`` is the
+        engine's ``paging.PageManager``)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Default implementations
+# ---------------------------------------------------------------------------
+
+class FIFOAdmission:
+    """Head-of-line FIFO, one request per prefill dispatch (the engine's
+    historical behaviour).  A vetoed head blocks later arrivals on purpose:
+    skipping ahead to smaller requests would starve large ones forever."""
+
+    def next_group(self, waiting, max_group, admit_ok, bucket_of):
+        if waiting and admit_ok(waiting[0]):
+            return [0]
+        return []
+
+
+class BucketBatchedAdmission:
+    """FIFO head plus any later waiting requests that round to the SAME
+    prefill bucket, stacked into one batched prefill dispatch.
+
+    Prefill is batch-parallel (each row attends only within itself, and
+    right-padding is masked by per-sequence lengths), so stacking changes
+    dispatch count, not outputs.  Head-of-line fairness is preserved: the
+    head always admits first, and only its bucket-mates jump the queue —
+    they would have padded to the identical shape anyway, so admitting
+    them now amortizes the dispatch instead of re-paying it next step.
+
+    ``max_group`` caps the stack (None = whatever the engine allows, i.e.
+    the free-slot count).
+    """
+
+    def __init__(self, max_group: Optional[int] = None):
+        if max_group is not None and max_group < 1:
+            raise ValueError("max_group must be >= 1")
+        self.max_group = max_group
+
+    def next_group(self, waiting, max_group, admit_ok, bucket_of):
+        if not waiting or not admit_ok(waiting[0]):
+            return []
+        cap = max_group if self.max_group is None else min(max_group,
+                                                           self.max_group)
+        head_bucket = bucket_of(waiting[0])
+        group = [0]
+        for i in range(1, len(waiting)):
+            if len(group) >= cap:
+                break
+            if bucket_of(waiting[i]) == head_bucket and admit_ok(waiting[i]):
+                group.append(i)
+        return group
+
+
+class BudgetOrEOSEviction:
+    """Evict when the request hits its token budget or emits EOS — the
+    ``Request.done`` rule the engine always applied."""
+
+    wants_step_sync = False
+
+    def should_evict(self, req: Request) -> bool:
+        return req.done
+
+
+class NeverDefrag:
+    """Disable automatic compaction (the pre-policy behaviour)."""
+
+    def should_defrag(self, manager) -> bool:
+        return False
+
+
+class ThresholdDefrag:
+    """Compact when the pool's fragmentation ratio crosses ``threshold``.
+
+    Fragmentation is ``1 - pages_in_use / span`` where ``span`` is the
+    highest allocated physical page index: a freshly compacted pool (used
+    set exactly ``[1, pages_in_use]``) scores 0.0, and holes left by
+    evictions push the ratio toward 1.  ``min_pages`` avoids churning a
+    nearly-empty pool where compaction buys nothing.
+    """
+
+    def __init__(self, threshold: float = 0.5, min_pages: int = 2):
+        if not 0.0 <= threshold < 1.0:
+            raise ValueError("threshold must be in [0, 1)")
+        self.threshold = threshold
+        self.min_pages = min_pages
+
+    def should_defrag(self, manager) -> bool:
+        used = manager.pages_in_use
+        if used < self.min_pages:
+            return False
+        span = max(p for pages in manager.lane_pages for p in pages)
+        return (1.0 - used / span) > self.threshold
+
+
+@dataclasses.dataclass
+class EnginePolicies:
+    """The engine's pluggable decision points, with defaults reproducing
+    (and, for defrag, completing) the historical behaviour."""
+
+    admission: AdmissionPolicy = dataclasses.field(default_factory=FIFOAdmission)
+    eviction: EvictionPolicy = dataclasses.field(default_factory=BudgetOrEOSEviction)
+    defrag: DefragPolicy = dataclasses.field(default_factory=ThresholdDefrag)

@@ -14,9 +14,17 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 from repro.serving.sampling import SamplingParams
+
+
+def default_detokenizer(token_ids: Sequence[int]) -> str:
+    """Fallback detokenizer: renders each token id as ``<id>``.  The repo
+    carries no vocabulary, so this keeps the text-streaming path (and the
+    ``detokenize=True`` API surface) fully exercisable; real deployments
+    pass their tokenizer's ``decode`` callable instead."""
+    return "".join(f"<{int(t)}>" for t in token_ids)
 
 
 class RequestState(enum.Enum):
@@ -41,10 +49,24 @@ class Request:
     # callback trades a little decode-dispatch overlap for latency.
     on_token: Optional[Callable[[int], None]] = dataclasses.field(
         default=None, repr=False)
+    # Text-streaming hook: called with each NEW text fragment whenever a
+    # token reaches the host.  Deltas are computed by re-decoding the whole
+    # output through ``detokenizer`` (incremental-safe for tokenizers whose
+    # decode of a prefix is a prefix of the decode — e.g. BPE byte-level),
+    # so multi-token characters surface only once complete.  Forces eager
+    # host pulls exactly like ``on_token``.
+    on_text: Optional[Callable[[str], None]] = dataclasses.field(
+        default=None, repr=False)
+    # Pluggable ``decode(token_ids) -> str`` used by ``on_text`` / ``text``;
+    # defaults to the vocabulary-free ``default_detokenizer``.
+    detokenizer: Optional[Callable[[Sequence[int]], str]] = dataclasses.field(
+        default=None, repr=False)
 
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
     output_tokens: list[int] = dataclasses.field(default_factory=list)
+    # text already emitted through ``on_text`` (delta bookkeeping)
+    emitted_text: str = dataclasses.field(default="", repr=False)
     # chunked admission progress: prompt tokens already prefilled
     prefill_done: int = 0
 
@@ -70,6 +92,17 @@ class Request:
         self.output_tokens.append(tok)
         if self.on_token is not None:
             self.on_token(tok)
+        if self.on_text is not None:
+            full = self.decode_text()
+            delta = full[len(self.emitted_text):]
+            if delta:
+                self.on_text(delta)
+            self.emitted_text = full
+
+    def decode_text(self) -> str:
+        """The output so far through the request's detokenizer."""
+        detok = self.detokenizer or default_detokenizer
+        return detok(self.output_tokens)
 
     @property
     def ttft_s(self) -> Optional[float]:

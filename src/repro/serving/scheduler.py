@@ -1,12 +1,16 @@
-"""Iteration-level FIFO scheduler (Orca-style continuous batching).
+"""Iteration-level scheduler (Orca-style continuous batching).
 
-Each engine step asks ``schedule()`` which waiting requests to prefill into
+Each engine step asks the scheduler which waiting requests to prefill into
 free slots *this* iteration; everything already in a slot takes one batched
-decode step.  Admission is FIFO and bounded by ``max_prefills_per_step`` so
-a burst of arrivals cannot starve in-flight decodes (prefill is the
-expensive phase; interleaving it one-or-few at a time keeps decode lanes
-hot — the dataflow-utilization argument the SPOGA/SCONNA accelerators make
-at the GEMM level, applied at the batch level).
+decode step.  WHICH requests admit — and whether several share one stacked
+prefill dispatch — is delegated to an ``policies.AdmissionPolicy``; the
+scheduler itself only owns the mechanical state (queue, slot pool, the
+running / chunking maps).  The default policy is head-of-line FIFO bounded
+by ``max_prefills_per_step`` so a burst of arrivals cannot starve in-flight
+decodes (prefill is the expensive phase; interleaving it one-or-few at a
+time keeps decode lanes hot — the dataflow-utilization argument the
+SPOGA/SCONNA accelerators make at the GEMM level, applied at the batch
+level).
 
 Two extensions for the paged engine:
 
@@ -27,18 +31,22 @@ serving tests rely on.
 from __future__ import annotations
 
 import heapq
+import warnings
 from collections import deque
 from typing import Callable, Optional
 
+from repro.serving.policies import AdmissionPolicy, FIFOAdmission
 from repro.serving.request import Request, RequestState
 
 
-class FIFOScheduler:
-    def __init__(self, n_slots: int, max_prefills_per_step: int = 1):
+class Scheduler:
+    def __init__(self, n_slots: int, max_prefills_per_step: int = 1,
+                 admission: Optional[AdmissionPolicy] = None):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
         self.max_prefills_per_step = max(1, max_prefills_per_step)
+        self.admission = admission if admission is not None else FIFOAdmission()
         self.waiting: deque[Request] = deque()
         self._free: list[int] = list(range(n_slots))
         heapq.heapify(self._free)
@@ -51,25 +59,49 @@ class FIFOScheduler:
         self.waiting.append(req)
 
     # -- per-step decisions ------------------------------------------------
-    def schedule(self, limit: Optional[int] = None,
-                 admit_ok: Optional[Callable[[Request], bool]] = None
-                 ) -> list[tuple[Request, int]]:
-        """Admit up to ``limit`` (default ``max_prefills_per_step``) waiting
-        requests into free slots. Returns (request, slot) pairs to prefill
-        this iteration. ``admit_ok`` vetoes the FIFO head (capacity gate);
-        a vetoed head stays queued and blocks later arrivals."""
-        limit = self.max_prefills_per_step if limit is None else limit
-        admitted = []
-        while self.waiting and self._free and len(admitted) < limit:
-            req = self.waiting[0]
-            if admit_ok is not None and not admit_ok(req):
-                break
-            self.waiting.popleft()
+    def schedule_group(self, admit_ok: Optional[Callable[[Request], bool]] = None,
+                       bucket_of: Optional[Callable[[Request], int]] = None,
+                       max_group: int = 1) -> list[tuple[Request, int]]:
+        """Ask the admission policy for the next prefill *dispatch*: one or
+        more waiting requests (same bucket when stacked) admitted into free
+        slots together.  ``admit_ok`` is the capacity gate; ``bucket_of``
+        maps a request to its padded prefill length.  Returns (request,
+        slot) pairs, FIFO-ordered, lowest free slot first."""
+        if not self.waiting or not self._free:
+            return []
+        idxs = self.admission.next_group(
+            self.waiting, max(1, min(max_group, len(self._free))),
+            admit_ok or (lambda r: True),
+            bucket_of or (lambda r: r.prompt_len))
+        if not idxs:
+            return []
+        idxs = sorted(set(idxs))
+        reqs = [self.waiting[i] for i in idxs]
+        for i in reversed(idxs):
+            del self.waiting[i]
+        out = []
+        for req in reqs:
             slot = heapq.heappop(self._free)
             req.state = RequestState.RUNNING
             req.slot = slot
             self.running[slot] = req
-            admitted.append((req, slot))
+            out.append((req, slot))
+        return out
+
+    def schedule(self, limit: Optional[int] = None,
+                 admit_ok: Optional[Callable[[Request], bool]] = None
+                 ) -> list[tuple[Request, int]]:
+        """Legacy single-request admission loop: up to ``limit`` (default
+        ``max_prefills_per_step``) FIFO heads into free slots, one per
+        entry.  The engine now drives ``schedule_group``; this stays for
+        callers and tests of the pre-policy surface."""
+        limit = self.max_prefills_per_step if limit is None else limit
+        admitted: list[tuple[Request, int]] = []
+        while len(admitted) < limit:
+            group = self.schedule_group(admit_ok=admit_ok, max_group=1)
+            if not group:
+                break
+            admitted.extend(group)
         return admitted
 
     def begin_chunked(self, slot: int) -> Request:
@@ -105,3 +137,16 @@ class FIFOScheduler:
 
     def request_in(self, slot: int) -> Optional[Request]:
         return self.running.get(slot) or self.chunking.get(slot)
+
+
+class FIFOScheduler(Scheduler):
+    """Deprecated name for ``Scheduler`` with the default FIFO admission
+    policy — kept so pre-``repro.api`` callers keep working unchanged."""
+
+    def __init__(self, n_slots: int, max_prefills_per_step: int = 1):
+        warnings.warn(
+            "FIFOScheduler is deprecated; use Scheduler (optionally with an "
+            "explicit policies.AdmissionPolicy)", DeprecationWarning,
+            stacklevel=2)
+        super().__init__(n_slots, max_prefills_per_step,
+                         admission=FIFOAdmission())

@@ -72,6 +72,30 @@ def scatter_lane(cache, single, slot, axes_flat):
 _scatter_lane = jax.jit(scatter_lane, donate_argnums=(0,), static_argnums=(3,))
 
 
+def scatter_lanes(cache, multi, slots, axes_flat, k: int):
+    """Write rows ``0..k`` of the batch=``k`` ``multi`` tree into lanes
+    ``slots[i]`` of ``cache`` — the stacked-admission counterpart of
+    ``scatter_lane`` (``k`` ``dynamic_update_slice``s per leaf; ``k`` is
+    static, so each stack width traces once per cache shape).  Traceable:
+    the engine fuses it into its batched admission dispatch."""
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    multi_leaves = treedef.flatten_up_to(multi)
+
+    def one(full, part, ax):
+        for i in range(k):
+            row = jax.lax.dynamic_slice_in_dim(part, i, 1, axis=ax)
+            starts = tuple(
+                jnp.asarray(slots[i], jnp.int32) if j == ax else 0
+                for j in range(full.ndim)
+            )
+            full = jax.lax.dynamic_update_slice(full, row.astype(full.dtype),
+                                                starts)
+        return full
+
+    return treedef.unflatten(
+        [one(c, s, ax) for c, s, ax in zip(leaves, multi_leaves, axes_flat)])
+
+
 class SlotCache:
     """Engine-owned cache pool: ``n_slots`` lanes of length ``cache_len``."""
 

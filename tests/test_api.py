@@ -1,0 +1,401 @@
+"""The ``repro.api`` facade: layered RuntimeConfig (validation, dict
+round-trip, resolution), the LLM entrypoint (bitwise-exact vs the solo
+``serve_batch`` baseline across cache modes), engine policies (stacked
+admission, threshold defrag), detokenization hooks, and the deprecation
+shims that keep the pre-facade surface importable and behavior-equal.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    LLM,
+    BucketBatchedAdmission,
+    FIFOAdmission,
+    KVConfig,
+    QuantRuntime,
+    RequestOutput,
+    RuntimeConfig,
+    SamplingDefaults,
+    SamplingParams,
+    SchedulerConfig,
+    ThresholdDefrag,
+    serve_batch,
+)
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.policies import NeverDefrag
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig: validation + serialization + resolution
+# ---------------------------------------------------------------------------
+
+def test_runtime_config_roundtrip_default_and_custom():
+    for rc in (
+        RuntimeConfig(),
+        RuntimeConfig(
+            quant=QuantRuntime(mode="w4a8", gemm_backend="pallas_interpret"),
+            kv=KVConfig(mode="paged", dtype="int8", cache_len=64, page_size=8,
+                        n_pages=11, paged_attn_impl="pallas_interpret"),
+            scheduler=SchedulerConfig(n_slots=3, max_prefills_per_step=2,
+                                      prefill_buckets=(8, 16),
+                                      prefill_chunk=8,
+                                      defrag_threshold=0.25),
+            sampling=SamplingDefaults(greedy=False, temperature=0.7, top_k=40,
+                                      seed=7),
+            max_new_tokens=32,
+            eos_token=2,
+            reduced=True,
+        ),
+        RuntimeConfig(scheduler=SchedulerConfig(prefill_buckets="auto",
+                                                defrag_threshold=None)),
+    ):
+        blob = json.dumps(rc.to_dict())  # must be plain JSON
+        assert RuntimeConfig.from_dict(json.loads(blob)) == rc
+
+
+def test_runtime_config_from_partial_dict():
+    # missing keys take defaults, so serialized configs survive field growth
+    rc = RuntimeConfig.from_dict({"kv": {"mode": "paged"}, "max_new_tokens": 4})
+    assert rc.kv.mode == "paged" and rc.kv.dtype == "bf16"
+    assert rc.max_new_tokens == 4 and rc.scheduler == SchedulerConfig()
+
+
+@pytest.mark.parametrize("bad", [
+    dict(quant=dict(mode="w3a9z")),
+    dict(kv=dict(mode="virtual")),
+    dict(kv=dict(dtype="fp8")),
+    dict(kv=dict(cache_len=0)),
+    dict(kv=dict(n_pages=8)),                      # n_pages without paged
+    dict(kv=dict(mode="paged", n_pages=1)),        # trash page needs >= 2
+    dict(kv=dict(paged_attn_impl="triton")),
+    dict(scheduler=dict(n_slots=0)),
+    dict(scheduler=dict(prefill_buckets="buckets")),
+    dict(scheduler=dict(defrag_threshold=1.5)),
+    dict(scheduler=dict(prefill_chunk=8)),         # chunking without paged
+    dict(max_new_tokens=0),
+])
+def test_runtime_config_validation_errors(bad):
+    def build(cls, kw):
+        return cls(**kw) if kw else cls()
+
+    with pytest.raises((ValueError, KeyError)):
+        RuntimeConfig(
+            quant=build(QuantRuntime, bad.get("quant")),
+            kv=build(KVConfig, bad.get("kv")),
+            scheduler=build(SchedulerConfig, bad.get("scheduler")),
+            max_new_tokens=bad.get("max_new_tokens", 16),
+        )
+
+
+def test_runtime_config_cross_validation():
+    with pytest.raises(ValueError, match="multiple of"):
+        RuntimeConfig(kv=KVConfig(mode="paged", page_size=8),
+                      scheduler=SchedulerConfig(prefill_chunk=12))
+    with pytest.raises(ValueError, match="bucket"):
+        RuntimeConfig(kv=KVConfig(cache_len=16),
+                      scheduler=SchedulerConfig(prefill_buckets=(8, 32)))
+    # paged admissions are single-file; a silently-ignored stacking flag
+    # must be rejected, not accepted
+    with pytest.raises(ValueError, match="batched_admission"):
+        RuntimeConfig(kv=KVConfig(mode="paged"),
+                      scheduler=SchedulerConfig(batched_admission=True))
+
+
+def test_runtime_config_resolution():
+    base = reduced(get_config("llama3.2-1b")).with_(remat=False)
+    rc = RuntimeConfig(
+        quant=QuantRuntime(mode="int8_spoga"),
+        kv=KVConfig(mode="paged", dtype="int8", cache_len=48, page_size=8),
+        scheduler=SchedulerConfig(n_slots=3, prefill_chunk=8),
+        eos_token=5,
+    )
+    model_cfg, ecfg = rc.resolve(base)
+    # model side: ordinary frozen ModelConfig (jit-hash behaviour unchanged)
+    assert type(model_cfg) is type(base) and hash(model_cfg) is not None
+    assert model_cfg.quant_mode == "int8_spoga"
+    assert model_cfg.kv_cache_dtype == "int8"
+    assert model_cfg.scan_layers == base.scan_layers  # untouched fields survive
+    # engine side: the legacy EngineConfig, fully derived
+    assert ecfg == EngineConfig(n_slots=3, cache_len=48, prefill_buckets=None,
+                                eos_token=5, cache_mode="paged", page_size=8,
+                                prefill_chunk=8)
+    # workload-derived sizing + auto buckets
+    rc2 = RuntimeConfig(scheduler=SchedulerConfig(prefill_buckets="auto"))
+    ecfg2 = rc2.resolve_engine(base, prompt_len=32, gen_tokens=16)
+    assert ecfg2.cache_len == 32 + 16 + 8  # default_cache_len policy
+    assert ecfg2.prefill_buckets == (8, 16, 32)
+    with pytest.raises(ValueError, match="cache"):
+        rc2.resolve_engine(base)  # no cache_len, no hints
+    # auto buckets are dropped for recurrent stacks (padding pollutes state)
+    xl = reduced(get_config("xlstm-125m"))
+    assert rc2.resolve_engine(xl, prompt_len=32, gen_tokens=8).prefill_buckets is None
+
+
+def test_build_policies_mapping():
+    p = RuntimeConfig().build_policies()
+    assert isinstance(p.admission, FIFOAdmission)
+    assert isinstance(p.defrag, ThresholdDefrag)
+    p2 = RuntimeConfig(scheduler=SchedulerConfig(
+        batched_admission=True, defrag_threshold=None)).build_policies()
+    assert isinstance(p2.admission, BucketBatchedAdmission)
+    assert isinstance(p2.defrag, NeverDefrag)
+
+
+# ---------------------------------------------------------------------------
+# LLM.generate: bitwise-exact vs the solo serve_batch baseline
+# ---------------------------------------------------------------------------
+
+def _solo(llm, prompt, gen):
+    out, _ = serve_batch(llm.config, llm.params,
+                         {"tokens": jnp.asarray([prompt], jnp.int32)},
+                         cache_len=llm.engine.engine_cfg.cache_len,
+                         gen_tokens=gen)
+    return np.asarray(out)[0].tolist()
+
+
+LLM_CASES = [
+    ("slot-bf16", KVConfig()),
+    ("paged-bf16", KVConfig(mode="paged", page_size=8)),
+    ("paged-int8", KVConfig(mode="paged", dtype="int8", page_size=8)),
+]
+
+
+@pytest.mark.parametrize("name,kv", LLM_CASES, ids=[c[0] for c in LLM_CASES])
+def test_llm_generate_matches_solo(name, kv):
+    """Acceptance: LLM.generate greedy tokens are bitwise the solo
+    serve_batch stream in slot and paged modes, including int8 KV."""
+    llm = LLM(arch="llama3.2-1b",
+              runtime=RuntimeConfig(reduced=True, kv=kv,
+                                    scheduler=SchedulerConfig(n_slots=2)))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, llm.config.vocab_size, n).tolist()
+               for n in (5, 13, 3)]
+    outs = llm.generate(prompts, max_new_tokens=5)
+    assert [o.request_id for o in outs] == [0, 1, 2]
+    for out, prompt in zip(outs, prompts):
+        assert out.token_ids == _solo(llm, prompt, 5), name
+        assert out.finish_reason == "length"
+        assert out.prompt_token_ids == list(prompt)
+        assert out.ttft_s > 0 and out.latency_s > 0
+
+
+def test_llm_generate_single_prompt_and_eos():
+    llm = LLM(arch="llama3.2-1b", runtime=RuntimeConfig(reduced=True))
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, llm.config.vocab_size, 6).tolist()
+    out, = llm.generate(prompt, max_new_tokens=4)   # flat list = one prompt
+    ref = _solo(llm, prompt, 4)
+    assert out.token_ids == ref
+    # eos on the stream's own repeated token -> early stop + "stop" reason
+    eos_llm = LLM(arch="llama3.2-1b", runtime=dataclasses.replace(
+        RuntimeConfig(reduced=True), eos_token=ref[0]))
+    out2, = eos_llm.generate(prompt, max_new_tokens=4)
+    assert out2.finish_reason == "stop" and out2.token_ids == ref[:1]
+
+
+def test_build_engine_anchors_auto_buckets_to_prompt_len():
+    """The CLI path: with 'auto' buckets, build_engine's workload hints
+    must anchor the ladder at the nominal prompt length (the pre-facade
+    behaviour), not at cache_len."""
+    from repro.api import auto_buckets
+
+    rc = RuntimeConfig(reduced=True,
+                       kv=KVConfig(cache_len=48),
+                       scheduler=SchedulerConfig(prefill_buckets="auto"))
+    llm = LLM(arch="llama3.2-1b", runtime=rc)
+    engine = llm.build_engine(24, 16)
+    assert engine.buckets == auto_buckets(24) == (8, 16, 24)
+    assert engine.engine_cfg.cache_len == 48
+
+
+def test_llm_engine_grows_between_calls():
+    llm = LLM(arch="llama3.2-1b", runtime=RuntimeConfig(reduced=True))
+    rng = np.random.default_rng(2)
+    llm.generate(rng.integers(0, llm.config.vocab_size, 4).tolist(),
+                 max_new_tokens=2)
+    small = llm.engine.engine_cfg.cache_len
+    held = llm.metrics
+    llm.generate(rng.integers(0, llm.config.vocab_size, 40).tolist(),
+                 max_new_tokens=8)
+    assert llm.engine.engine_cfg.cache_len > small
+    # metrics accumulate across the rebuild (held references stay live)
+    assert llm.metrics is held
+    assert llm.metrics.prefills == 2 and len(llm.metrics.finished) == 2
+    with pytest.raises(RuntimeError, match="engine not built"):
+        LLM(arch="llama3.2-1b", runtime=RuntimeConfig(reduced=True)).engine
+
+
+# ---------------------------------------------------------------------------
+# Policies: stacked admission + threshold defrag (through the facade)
+# ---------------------------------------------------------------------------
+
+def test_batched_admission_stacks_and_matches_solo():
+    """Satellite: >=2 same-bucket queued prompts admit as ONE stacked
+    prefill dispatch — fewer dispatches, bitwise-identical tokens."""
+    rc = RuntimeConfig(reduced=True, scheduler=SchedulerConfig(
+        n_slots=4, batched_admission=True, prefill_buckets=(8, 16)))
+    llm = LLM(arch="llama3.2-1b", runtime=rc)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, llm.config.vocab_size, n).tolist()
+               for n in (5, 7, 12, 6)]
+    outs = llm.generate(prompts, max_new_tokens=6)
+    m = llm.metrics
+    assert m.prefills == 4
+    assert m.prefill_dispatches < m.prefills   # bucket-8 prompts stacked
+    assert m.stacked_prefills >= 2
+    for out, prompt in zip(outs, prompts):
+        assert out.token_ids == _solo(llm, prompt, 6)
+
+
+def test_batched_admission_respects_slot_limit():
+    # 2 slots, 3 same-bucket prompts: the stack is capped by free lanes
+    rc = RuntimeConfig(reduced=True, scheduler=SchedulerConfig(
+        n_slots=2, batched_admission=True, prefill_buckets=(8,)))
+    llm = LLM(arch="llama3.2-1b", runtime=rc)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, llm.config.vocab_size, 5).tolist()
+               for _ in range(3)]
+    outs = llm.generate(prompts, max_new_tokens=3)
+    assert len(outs) == 3
+    for out, prompt in zip(outs, prompts):
+        assert out.token_ids == _solo(llm, prompt, 3)
+
+
+def test_defrag_policy_triggers_and_is_output_invisible():
+    """Satellite: the engine loop now drives PagedCache.defrag() through a
+    fragmentation-threshold policy and reports defrag_count — and the
+    compaction never changes tokens."""
+    def run(threshold):
+        rc = RuntimeConfig(
+            reduced=True,
+            kv=KVConfig(mode="paged", page_size=8, cache_len=32),
+            scheduler=SchedulerConfig(n_slots=3, defrag_threshold=threshold))
+        llm = LLM(arch="llama3.2-1b", runtime=rc)
+        rng = np.random.default_rng(0)
+        # short request finishes early, freeing LOW pages while later lanes
+        # still hold HIGH ones -> holes -> fragmentation
+        arrivals = [(0, rng.integers(0, llm.config.vocab_size, 14).tolist(), 2),
+                    (0, rng.integers(0, llm.config.vocab_size, 12).tolist(), 10),
+                    (1, rng.integers(0, llm.config.vocab_size, 9).tolist(), 8)]
+        llm.engine.run(arrivals)
+        return llm, {r.req_id: r.output_tokens for r in llm.metrics.finished}
+
+    llm_on, toks_on = run(threshold=0.05)
+    llm_off, toks_off = run(threshold=None)
+    assert llm_on.metrics.defrag_count >= 1
+    assert llm_on.metrics.defrag_pages_moved >= 1
+    assert llm_off.metrics.defrag_count == 0
+    assert toks_on == toks_off  # compaction is output-invisible
+
+
+def test_threshold_defrag_unit():
+    from repro.paging import PageManager
+
+    mgr = PageManager(n_pages=9, page_size=4, n_lanes=2, max_pages_per_lane=4)
+    mgr.admit(0, 8), mgr.alloc(0, 2)       # pages 1, 2
+    mgr.admit(1, 8), mgr.alloc(1, 2)       # pages 3, 4
+    pol = ThresholdDefrag(threshold=0.3)
+    assert not pol.should_defrag(mgr)      # contiguous: frag = 0
+    mgr.free_lane(0)                       # holes at 1, 2; span 4, used 2
+    assert pol.should_defrag(mgr)          # frag = 0.5 > 0.3
+    assert not ThresholdDefrag(threshold=0.6).should_defrag(mgr)
+    mgr.defrag()
+    assert not pol.should_defrag(mgr)      # compacted back to frag = 0
+
+
+# ---------------------------------------------------------------------------
+# Detokenization hooks / streaming text
+# ---------------------------------------------------------------------------
+
+def test_llm_stream_detokenize():
+    """Satellite: Request.on_text + pluggable tokenizer surfaced as
+    LLM.stream(..., detokenize=True); fragments concatenate to the full
+    decode and match the token stream one-to-one here (each id maps to one
+    fragment under the default detokenizer)."""
+    llm = LLM(arch="llama3.2-1b", runtime=RuntimeConfig(reduced=True))
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, llm.config.vocab_size, 6).tolist()
+    toks = list(llm.stream(prompt, max_new_tokens=4))
+    pieces = list(llm.stream(prompt, max_new_tokens=4, detokenize=True))
+    assert toks == _solo(llm, prompt, 4)
+    assert pieces == [f"<{t}>" for t in toks]
+
+    # pluggable tokenizer: a custom decode drives both stream + outputs
+    vocab_llm = LLM(arch="llama3.2-1b", runtime=RuntimeConfig(reduced=True),
+                    tokenizer=lambda ids: " ".join(f"w{t}" for t in ids))
+    text = "".join(vocab_llm.stream(prompt, max_new_tokens=4, detokenize=True))
+    assert text == " ".join(f"w{t}" for t in toks)
+    out, = vocab_llm.generate(prompt, max_new_tokens=4, detokenize=True)
+    assert out.text == text and out.token_ids == toks
+
+
+def test_on_text_hook_direct():
+    from repro.serving.request import Request
+
+    got = []
+    req = Request(req_id=0, prompt=[1], max_new_tokens=3,
+                  on_text=got.append,
+                  detokenizer=lambda ids: "".join(f"[{t}]" for t in ids))
+    for t in (7, 8, 9):
+        req.append_token(t)
+    assert got == ["[7]", "[8]", "[9]"]
+    assert req.decode_text() == "[7][8][9]"
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: importable and behavior-equal
+# ---------------------------------------------------------------------------
+
+def test_serve_batch_shim_from_launch():
+    from repro.launch.serve import serve_batch as legacy
+
+    assert legacy is serve_batch  # same object: behavior-equal by identity
+
+
+def test_fifo_scheduler_shim():
+    from repro.serving import FIFOScheduler, Request, Scheduler
+
+    with pytest.warns(DeprecationWarning):
+        sched = FIFOScheduler(n_slots=2, max_prefills_per_step=1)
+    assert isinstance(sched, Scheduler)
+    reqs = [Request(req_id=i, prompt=[1], max_new_tokens=1) for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    # the legacy schedule() surface behaves exactly as before
+    assert [(r.req_id, s) for r, s in sched.schedule()] == [(0, 0)]
+    assert [(r.req_id, s) for r, s in sched.schedule()] == [(1, 1)]
+    assert sched.schedule() == []
+
+
+def test_engine_legacy_constructor():
+    # the pre-facade 3-arg constructor (no policies) still works and still
+    # produces solo-exact streams
+    cfg = reduced(get_config("llama3.2-1b")).with_(remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, EngineConfig(n_slots=2, cache_len=32))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 5).tolist()
+    metrics = engine.run([(0, prompt, 4)])
+    solo, _ = serve_batch(cfg, params,
+                          {"tokens": jnp.asarray([prompt], jnp.int32)},
+                          cache_len=32, gen_tokens=4)
+    assert metrics.finished[0].output_tokens == np.asarray(solo)[0].tolist()
+
+
+def test_request_output_fields():
+    from repro.serving.request import Request
+
+    req = Request(req_id=3, prompt=[1, 2], max_new_tokens=2, eos_token=9)
+    req.append_token(4), req.append_token(9)
+    out = RequestOutput.from_request(req, detokenizer=lambda ids: str(list(ids)))
+    assert out.finish_reason == "stop"
+    assert out.text == "[4, 9]"
+    assert out.token_ids == [4, 9] and out.prompt_token_ids == [1, 2]
