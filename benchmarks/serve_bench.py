@@ -22,9 +22,14 @@ static baseline is not charged for the padded garbage it produces — the
 gap measured is pure scheduling, the batch-level analogue of the dataflow
 utilization SPOGA argues for at the GEMM level.
 
+``--prefix`` switches to the shared-prefix sweep: every request carries
+the same system prompt plus a unique tail, served twice from the same
+paged pool — ``KVConfig(prefix_cache=True)`` vs cold — to measure what
+the radix-tree prefix cache (``repro/prefix/``) buys in tok/s and TTFT.
+
 Appends a stamped run (git SHA + date) to ``BENCH_serve.json``:
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--out PATH]
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--prefix] [--out PATH]
 """
 
 from __future__ import annotations
@@ -111,20 +116,102 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
 
 def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
                stagger: int = 0, quant_mode: str = "bf16",
-               kv_dtype: str = "bf16", **kv_kw):
+               kv_dtype: str = "bf16", prefill_chunk=None, **kv_kw):
     """One facade cell: the RuntimeConfig IS the cell description."""
     runtime = RuntimeConfig(
         quant=QuantRuntime(mode=quant_mode),
         kv=KVConfig(dtype=kv_dtype, cache_len=cache_len, **kv_kw),
-        scheduler=SchedulerConfig(n_slots=slots, prefill_buckets=buckets),
+        scheduler=SchedulerConfig(n_slots=slots, prefill_buckets=buckets,
+                                  prefill_chunk=prefill_chunk),
     )
     llm = LLM(config=cfg, params=params, runtime=runtime)
     arrivals = [(i * stagger, p, b) for i, (p, b) in enumerate(workload)]
     metrics = llm.engine.run(arrivals)
     rep = metrics.report()
-    rep["mode"] = "paged" if kv_kw.get("mode") == "paged" else "engine"
+    if kv_kw.get("prefix_cache"):
+        rep["mode"] = "paged+prefix"
+    elif kv_kw.get("mode") == "paged":
+        rep["mode"] = "paged"
+    else:
+        rep["mode"] = "engine"
     rep["stagger"] = stagger
     return rep
+
+
+def make_prefix_workload(cfg, n_requests: int, shared_len: int, tail_len: int,
+                         gen: int, seed: int = 0):
+    """Every request = one shared system prompt + a unique tail — the
+    production shape (few-shot templates, system prompts) the prefix cache
+    targets.  Budgets stay bimodal like the main workload."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, shared_len).tolist()
+    reqs = []
+    for i in range(n_requests):
+        tlen = int(rng.integers(max(1, tail_len // 2), tail_len + 1))
+        budget = int(gen if i % 2 == 0 else max(1, gen // 4))
+        reqs.append((prefix + rng.integers(0, cfg.vocab_size, tlen).tolist(),
+                     budget))
+    return reqs
+
+
+def prefix_sweep(cfg, params, args, out_path: str) -> None:
+    """Shared-prefix workload, cached vs cold at the SAME page budget: both
+    cells serve the identical requests from the identical paged pool with
+    chunked admission; the only difference is ``KVConfig.prefix_cache``.
+    The cached cell skips every shared page's prefill after the first
+    request, so it wins tok/s and (especially) TTFT."""
+    shared_len = args.shared_prefix
+    prompt_len = shared_len + args.prompt_len
+    cache_len = default_cache_len(prompt_len, args.gen)
+    slots = 2 if args.quick else max(int(s) for s in args.slots.split(","))
+    kw = dict(
+        quant_mode=args.quant_mode, kv_dtype=args.kv_cache_dtype,
+        prefill_chunk=PAGE_SIZE, mode="paged", page_size=PAGE_SIZE,
+        n_pages=default_page_count(slots, cache_len, PAGE_SIZE),
+    )
+    workload = make_prefix_workload(cfg, args.requests, shared_len,
+                                    args.prompt_len, args.gen)
+    print(f"=== prefix sweep: {cfg.name} | {args.requests} requests, "
+          f"{shared_len}-token shared prefix + tails<={args.prompt_len}, "
+          f"{slots} lanes, kv={args.kv_cache_dtype} ===")
+    records = []
+    warm = [(p, 2) for p, _ in workload[:slots]]
+    for prefix_on in (False, True):
+        run_engine(cfg, params, warm, slots, cache_len, None,
+                   prefix_cache=prefix_on, **kw)
+        rec = max((run_engine(cfg, params, workload, slots, cache_len, None,
+                              prefix_cache=prefix_on, **kw)
+                   for _ in range(args.repeats)),
+                  key=lambda r: r["tokens_per_s"])
+        rec["slots"] = slots
+        records.append(rec)
+        tag = "cached" if prefix_on else "cold"
+        print(f"{tag:>8s} {rec['tokens_per_s']:8.1f} tok/s | "
+              f"TTFT mean {rec['ttft_mean_s']*1e3:7.1f}ms "
+              f"max {rec['ttft_max_s']*1e3:7.1f}ms | "
+              f"{rec['prefix_hits']} hits, {rec['prefix_hit_tokens']} prompt "
+              f"tokens reused, {rec['prefix_cow_forks']} forks")
+    cold, cached = records
+    run = {
+        "arch": cfg.name,
+        "config": {
+            "requests": args.requests, "shared_prefix": shared_len,
+            "tail_len": args.prompt_len, "gen": args.gen, "lanes": slots,
+            "kv_cache_dtype": args.kv_cache_dtype,
+            "quant_mode": args.quant_mode, "reduced": not args.full,
+        },
+        "speedup_vs_cold": round(cached["tokens_per_s"]
+                                 / max(cold["tokens_per_s"], 1e-9), 3),
+        "ttft_ratio_vs_cold": round(cached["ttft_mean_s"]
+                                    / max(cold["ttft_mean_s"], 1e-9), 3),
+        "records": records,
+    }
+    print(f"prefix cache: {run['speedup_vs_cold']:.2f}x tok/s, "
+          f"TTFT {run['ttft_ratio_vs_cold']:.2f}x vs cold at the same "
+          f"page budget")
+    stamped = append_run(out_path, "serve_bench_prefix", run)
+    print(f"appended run to {out_path} (sha {stamped['git_sha']}, "
+          f"{stamped['date']})")
 
 
 def paged_kw(slots: int, cache_len: int, n_requests: int):
@@ -160,6 +247,12 @@ def main():
                     help="best-of-N per cell (robust to background load)")
     ap.add_argument("--quick", action="store_true",
                     help="single cell, small workload (CI-friendly)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="shared-prefix sweep instead: cached vs cold paged "
+                         "serving of a common-system-prompt workload")
+    ap.add_argument("--shared-prefix", type=int, default=48,
+                    help="prefix sweep: shared system-prompt length "
+                         "(prompt-len becomes the unique tail length)")
     ap.add_argument("--out", default=str(default_out))
     args = ap.parse_args()
 
@@ -174,6 +267,15 @@ def main():
         kv=KVConfig(dtype=args.kv_cache_dtype),
     ).resolve_model(cfg)
     params = init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.prefix:
+        if args.quick:
+            args.requests = min(args.requests, 6)
+            args.repeats = min(args.repeats, 2)
+            args.shared_prefix = min(args.shared_prefix, 32)
+        prefix_sweep(cfg, params, args, args.out)
+        return
+
     cache_len = default_cache_len(args.prompt_len, args.gen)
     buckets = (args.prompt_len,)  # one prefill trace; static pads to the same
     cell_kw = dict(quant_mode=args.quant_mode, kv_dtype=args.kv_cache_dtype)

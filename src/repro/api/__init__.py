@@ -61,6 +61,10 @@ from repro.api.config import (
     SamplingDefaults,
     SchedulerConfig,
     auto_buckets,
+    get_preset,
+    list_presets,
+    load_runtime,
+    register_preset,
 )
 from repro.api.llm import LLM
 from repro.api.outputs import RequestOutput
@@ -73,6 +77,10 @@ from repro.serving.policies import (
     EvictionPolicy,
     FIFOAdmission,
     NeverDefrag,
+    PrefixPolicy,
+    PriorityAdmission,
+    NoPrefixReuse,
+    SharedPrefix,
     ThresholdDefrag,
 )
 from repro.serving.sampling import SamplingParams
@@ -88,13 +96,21 @@ __all__ = [
     "KVConfig",
     "LLM",
     "NeverDefrag",
+    "NoPrefixReuse",
+    "PrefixPolicy",
+    "PriorityAdmission",
     "QuantRuntime",
     "RequestOutput",
     "RuntimeConfig",
     "SamplingDefaults",
     "SamplingParams",
     "SchedulerConfig",
+    "SharedPrefix",
     "ThresholdDefrag",
     "auto_buckets",
+    "get_preset",
+    "list_presets",
+    "load_runtime",
+    "register_preset",
     "serve_batch",
 ]

@@ -41,6 +41,8 @@ from repro.serving.policies import (
     EnginePolicies,
     FIFOAdmission,
     NeverDefrag,
+    PriorityAdmission,
+    SharedPrefix,
     ThresholdDefrag,
 )
 from repro.serving.sampling import SamplingParams
@@ -91,6 +93,12 @@ class KVConfig:
     n_pages: Optional[int] = None
     # paged-attention impl: None (auto) | "jnp" | "pallas" | "pallas_interpret"
     paged_attn_impl: Optional[str] = None
+    # shared-prefix KV cache (repro/prefix/): admissions alias the longest
+    # page-aligned cached prefix and prefill only the uncached suffix.
+    # Paged mode only; needs a chunkable (attn/MLA/dense) stack.
+    prefix_cache: bool = False
+    # skip matches shorter than this many pages (1 = adopt any full page)
+    prefix_min_pages: int = 1
 
     def __post_init__(self):
         if self.mode not in ("slot", "paged"):
@@ -113,6 +121,11 @@ class KVConfig:
             raise ValueError(
                 f"KVConfig.paged_attn_impl must be one of {_PAGED_ATTN_IMPLS}, "
                 f"got {self.paged_attn_impl!r}")
+        if self.prefix_cache and self.mode != "paged":
+            raise ValueError("KVConfig.prefix_cache requires mode='paged' "
+                             "(shared pages live in the page pool)")
+        if self.prefix_min_pages < 1:
+            raise ValueError("KVConfig.prefix_min_pages must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,8 +141,12 @@ class SchedulerConfig:
     # paged mode: admit prompts longer than this in page-aligned chunks
     prefill_chunk: Optional[int] = None
     # stack >=2 same-bucket waiting prompts into ONE batched prefill
-    # dispatch (slot mode; paged admissions stay single-file)
+    # dispatch (slot AND paged modes; paged groups scatter per-lane pages,
+    # chunked/prefix-seeded admissions stay single-file)
     batched_admission: bool = False
+    # admission ordering: "fifo" (head-of-line) | "priority"
+    # (Request.priority with starvation-free aging)
+    admission: str = "fifo"
     # paged mode: compact the pool when fragmentation (1 - used/span)
     # crosses this threshold; None disables auto-defrag
     defrag_threshold: Optional[float] = 0.5
@@ -139,6 +156,12 @@ class SchedulerConfig:
             raise ValueError("SchedulerConfig.n_slots must be >= 1")
         if self.max_prefills_per_step < 1:
             raise ValueError("SchedulerConfig.max_prefills_per_step must be >= 1")
+        if self.admission not in ("fifo", "priority"):
+            raise ValueError("SchedulerConfig.admission must be 'fifo' or "
+                             f"'priority', got {self.admission!r}")
+        if self.admission == "priority" and self.batched_admission:
+            raise ValueError("batched_admission stacks FIFO bucket-mates; "
+                             "combine it with admission='fifo'")
         if isinstance(self.prefill_buckets, str):
             if self.prefill_buckets != "auto":
                 raise ValueError("prefill_buckets must be None, 'auto' or a "
@@ -206,12 +229,6 @@ class RuntimeConfig:
                 raise ValueError(
                     f"scheduler.prefill_chunk ({s.prefill_chunk}) must be a "
                     f"multiple of kv.page_size ({kv.page_size})")
-        if s.batched_admission and kv.mode != "slot":
-            raise ValueError(
-                "scheduler.batched_admission requires kv.mode='slot' — paged "
-                "admissions are single-file (per-lane page scatter + the "
-                "reservation capacity gate), so stacking would silently "
-                "never happen")
         if isinstance(s.prefill_buckets, tuple) and kv.cache_len is not None \
                 and max(s.prefill_buckets) > kv.cache_len:
             raise ValueError("largest prefill bucket exceeds kv.cache_len")
@@ -283,6 +300,7 @@ class RuntimeConfig:
             page_size=self.kv.page_size,
             n_pages=self.kv.n_pages,
             prefill_chunk=self.scheduler.prefill_chunk,
+            prefix_cache=self.kv.prefix_cache,
         )
 
     def resolve(self, cfg: ModelConfig, prompt_len: Optional[int] = None,
@@ -294,15 +312,22 @@ class RuntimeConfig:
         return model_cfg, self.resolve_engine(model_cfg, prompt_len, gen_tokens)
 
     def build_policies(self) -> EnginePolicies:
-        """Engine policy objects implied by ``scheduler``: stacked-prefill
-        admission, budget-or-EOS eviction, threshold defrag."""
+        """Engine policy objects implied by the config: FIFO / priority /
+        stacked-prefill admission, budget-or-EOS eviction, threshold
+        defrag, and the shared-prefix matching policy."""
+        if self.scheduler.admission == "priority":
+            admission = PriorityAdmission()
+        elif self.scheduler.batched_admission:
+            admission = BucketBatchedAdmission()
+        else:
+            admission = FIFOAdmission()
         return EnginePolicies(
-            admission=(BucketBatchedAdmission() if self.scheduler.batched_admission
-                       else FIFOAdmission()),
+            admission=admission,
             eviction=BudgetOrEOSEviction(),
             defrag=(ThresholdDefrag(self.scheduler.defrag_threshold)
                     if self.scheduler.defrag_threshold is not None
                     else NeverDefrag()),
+            prefix=SharedPrefix(self.kv.prefix_min_pages),
         )
 
 
@@ -315,3 +340,79 @@ def auto_buckets(prompt_len: int) -> tuple[int, ...]:
         b *= 2
     buckets.append(prompt_len)
     return tuple(buckets)
+
+
+# ---------------------------------------------------------------------------
+# Preset registry: named deployment profiles
+# ---------------------------------------------------------------------------
+
+_PRESETS: dict[str, RuntimeConfig] = {}
+
+
+def register_preset(name: str, runtime: RuntimeConfig,
+                    overwrite: bool = False) -> None:
+    """Register a named deployment profile.  Presets are ordinary
+    ``RuntimeConfig``s — validated at registration, JSON round-trippable,
+    resolvable like any hand-built config."""
+    if not isinstance(runtime, RuntimeConfig):
+        raise TypeError(f"preset {name!r} must be a RuntimeConfig")
+    if name in _PRESETS and not overwrite:
+        raise ValueError(f"preset {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _PRESETS[name] = runtime
+
+
+def get_preset(name: str) -> RuntimeConfig:
+    try:
+        return _PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown runtime preset {name!r}; known: "
+                       f"{list_presets()}") from None
+
+
+def list_presets() -> list[str]:
+    return sorted(_PRESETS)
+
+
+def load_runtime(spec: str) -> RuntimeConfig:
+    """Resolve a CLI ``--runtime`` spec: a JSON file path (loaded through
+    ``RuntimeConfig.from_dict``) or a registered preset name."""
+    import json
+    import os
+
+    if os.path.isfile(spec):
+        with open(spec) as f:
+            return RuntimeConfig.from_dict(json.load(f))
+    if spec in _PRESETS:
+        return _PRESETS[spec]
+    raise ValueError(f"--runtime {spec!r} is neither a JSON file nor a "
+                     f"registered preset (known: {list_presets()})")
+
+
+# Built-in profiles.  None pins cache_len: presets stay workload-sized, so
+# one profile serves smoke tests and real prompt lengths alike.
+register_preset("slot-throughput", RuntimeConfig(
+    kv=KVConfig(mode="slot"),
+    scheduler=SchedulerConfig(prefill_buckets="auto", batched_admission=True),
+))
+register_preset("paged-server", RuntimeConfig(
+    kv=KVConfig(mode="paged", page_size=DEFAULT_PAGE_SIZE),
+    scheduler=SchedulerConfig(prefill_chunk=2 * DEFAULT_PAGE_SIZE,
+                              defrag_threshold=0.5),
+))
+register_preset("prefix-interactive", RuntimeConfig(
+    kv=KVConfig(mode="paged", page_size=DEFAULT_PAGE_SIZE, prefix_cache=True),
+    scheduler=SchedulerConfig(prefill_chunk=DEFAULT_PAGE_SIZE,
+                              defrag_threshold=0.5),
+))
+register_preset("int8-byte-serving", RuntimeConfig(
+    quant=QuantRuntime(mode="int8_spoga"),
+    kv=KVConfig(mode="paged", dtype="int8", page_size=DEFAULT_PAGE_SIZE,
+                prefix_cache=True),
+    scheduler=SchedulerConfig(prefill_chunk=DEFAULT_PAGE_SIZE,
+                              defrag_threshold=0.5),
+))
+register_preset("priority-slot", RuntimeConfig(
+    kv=KVConfig(mode="slot"),
+    scheduler=SchedulerConfig(prefill_buckets="auto", admission="priority"),
+))

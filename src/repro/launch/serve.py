@@ -11,10 +11,21 @@ staggered-arrival workload:
 optional ``--prefill-chunk`` chunked long-prompt admission, int8 byte-size
 pages via ``--kv-cache-dtype int8``, ``--paged-attn pallas_interpret`` to
 force the Pallas kernel through the interpreter off-TPU).
-``--batched-admission`` stacks same-bucket prompts into one prefill
-dispatch; ``--defrag-threshold`` tunes (or ``-1`` disables) the pool
-compaction policy; ``--stream`` prints every token the moment it reaches
-the host.
+``--prefix-cache`` turns on the shared-prefix KV cache (``repro/prefix/``:
+admissions alias cached prompt-prefix pages and prefill only the suffix —
+pair it with ``--shared-prefix N`` to give the synthetic workload an
+N-token common system prompt).  ``--batched-admission`` stacks same-bucket
+prompts into one prefill dispatch (slot and paged modes);
+``--admission priority`` ranks the queue by ``Request.priority`` with
+starvation-free aging; ``--defrag-threshold`` tunes (or ``-1`` disables)
+the pool compaction policy; ``--stream`` prints every token the moment it
+reaches the host.
+
+``--runtime SPEC`` sidesteps the per-knob flags entirely: SPEC is a JSON
+file (``RuntimeConfig.from_dict``) or a registered preset name
+(``repro.api.list_presets()``), and the quant/KV/scheduler flags are
+ignored in its favour — only workload flags (``--requests``/
+``--prompt-len``/``--gen``/...) still apply.
 
 ``--static`` (and enc-dec / frontend archs, which the engine does not
 admit) falls back to the lockstep baseline ``repro.api.serve_batch`` —
@@ -36,6 +47,8 @@ from repro.api import (
     RuntimeConfig,
     SamplingDefaults,
     SchedulerConfig,
+    list_presets,
+    load_runtime,
     serve_batch,
 )
 from repro.configs import default_cache_len
@@ -43,15 +56,18 @@ from repro.models.frontends import fake_audio_frames, fake_vision_embeds
 
 
 def synthetic_workload(cfg, n_requests: int, prompt_len: int, gen: int,
-                       stagger: int, seed: int = 0):
+                       stagger: int, seed: int = 0, shared_prefix: int = 0):
     """Mixed-length prompts/budgets around the nominal sizes, arriving every
-    ``stagger`` engine steps — a deterministic stand-in for live traffic."""
+    ``stagger`` engine steps — a deterministic stand-in for live traffic.
+    ``shared_prefix`` prepends a common system prompt of that many tokens
+    to every request (the workload the prefix cache accelerates)."""
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, shared_prefix).tolist()
     arrivals = []
     for i in range(n_requests):
         plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
         budget = int(rng.integers(max(1, gen // 2), gen + 1))
-        prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
+        prompt = prefix + rng.integers(0, cfg.vocab_size, plen).tolist()
         arrivals.append((i * stagger, prompt, budget))
     return arrivals
 
@@ -82,12 +98,13 @@ def _static_main(llm: LLM, args) -> None:
 def _engine_main(llm: LLM, args) -> None:
     # workload hints anchor the 'auto' bucket ladder to the nominal prompt
     # length (auto_buckets(prompt_len), as the pre-facade CLI built it)
-    engine = llm.build_engine(args.prompt_len, args.gen)
+    engine = llm.build_engine(args.prompt_len + args.shared_prefix, args.gen)
     sampling = llm.runtime.sampling.to_params()
     arrivals = [(s, p, g, sampling)
                 for s, p, g in synthetic_workload(llm.config, args.requests,
                                                   args.prompt_len, args.gen,
-                                                  args.stagger, args.seed)]
+                                                  args.stagger, args.seed,
+                                                  args.shared_prefix)]
     on_token = (lambda req, tok: print(f"[stream] req {req.req_id}: {tok}",
                                        flush=True)) if args.stream else None
     metrics = engine.run(arrivals, on_token=on_token)
@@ -98,6 +115,13 @@ def _engine_main(llm: LLM, args) -> None:
               f"{m.peak_pages_used}/{m.pages_total} pages "
               f"(page_size {m.page_size}), {m.chunk_steps} prefill chunks, "
               f"{m.defrag_count} defrags")
+    if engine.prefix is not None:
+        m = metrics
+        print(f"[engine] prefix cache: {m.prefix_hits} hits / "
+              f"{m.prefix_misses} misses, {m.prefix_hit_tokens} prompt "
+              f"tokens reused, {m.prefix_cow_forks} CoW forks, "
+              f"{m.prefix_evicted_pages} pages evicted, "
+              f"{m.prefix_tree_pages} pages cached")
     if metrics.stacked_prefills:
         print(f"[engine] batched admission: {metrics.prefills} prefills in "
               f"{metrics.prefill_dispatches} dispatches "
@@ -115,10 +139,12 @@ def _runtime_from_args(args) -> RuntimeConfig:
         kv=KVConfig(
             mode=args.cache_mode,
             dtype=args.kv_cache_dtype,
-            cache_len=default_cache_len(args.prompt_len, args.gen),
+            cache_len=default_cache_len(args.prompt_len + args.shared_prefix,
+                                        args.gen),
             page_size=args.page_size,
             n_pages=args.pages,
             paged_attn_impl=args.paged_attn,
+            prefix_cache=args.prefix_cache,
         ),
         scheduler=SchedulerConfig(
             n_slots=args.slots,
@@ -126,6 +152,7 @@ def _runtime_from_args(args) -> RuntimeConfig:
             prefill_buckets=None if args.no_buckets else "auto",
             prefill_chunk=args.prefill_chunk,
             batched_admission=args.batched_admission,
+            admission=args.admission,
             defrag_threshold=(None if args.defrag_threshold < 0
                               else args.defrag_threshold),
         ),
@@ -157,7 +184,14 @@ def main():
                     help="engine: exact-length prefill (one trace per length)")
     ap.add_argument("--batched-admission", action="store_true",
                     help="engine: stack same-bucket prompts into one prefill "
-                         "dispatch (slot mode)")
+                         "dispatch (slot and paged modes)")
+    ap.add_argument("--admission", default="fifo", choices=["fifo", "priority"],
+                    help="engine: admission ordering (priority = "
+                         "Request.priority with starvation-free aging)")
+    ap.add_argument("--runtime", default=None,
+                    help="RuntimeConfig source: a JSON file (from_dict) or a "
+                         f"preset name {list_presets()}; overrides the "
+                         "quant/KV/scheduler flags")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -178,6 +212,12 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="paged: admit long prompts in chunks of this many "
                          "tokens (multiple of page-size), interleaved with decode")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged: shared-prefix KV cache (radix tree + "
+                         "copy-on-write pages; repro/prefix/)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="workload: prepend a common system prompt of this "
+                         "many tokens to every request")
     ap.add_argument("--defrag-threshold", type=float, default=0.5,
                     help="paged: compact the pool when fragmentation crosses "
                          "this ratio (-1 disables)")
@@ -188,7 +228,12 @@ def main():
                     help="engine: print every token as it reaches the host")
     args = ap.parse_args()
 
-    llm = LLM(arch=args.arch, runtime=_runtime_from_args(args))
+    runtime = (load_runtime(args.runtime) if args.runtime
+               else _runtime_from_args(args))
+    if args.runtime and args.reduced:
+        import dataclasses as _dc
+        runtime = _dc.replace(runtime, reduced=True)
+    llm = LLM(arch=args.arch, runtime=runtime)
     cfg = llm.config
     engine_capable = not cfg.is_encoder_decoder and cfg.frontend is None
     if args.static or not engine_capable:

@@ -15,7 +15,7 @@ Attention itself lives where the rest of the model math lives:
 in ``models/transformer.apply_block_decode``.
 """
 
-from repro.paging.cache import PagedCache, paged_insert
+from repro.paging.cache import PagedCache, paged_insert, paged_insert_many
 from repro.paging.manager import PageManager
 from repro.paging.prefill import (
     CHUNKABLE_KINDS,
@@ -31,5 +31,6 @@ __all__ = [
     "chunkable",
     "make_chunk_step",
     "paged_insert",
+    "paged_insert_many",
     "stack_kinds",
 ]

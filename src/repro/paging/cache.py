@@ -41,22 +41,31 @@ def _lane_update(full, part, lane, axis):
     return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), starts)
 
 
-def _scatter_block(pool_blk, single_blk, lane, page_ids, stacked: bool):
+def _batch_row(part, row: int, axis: int):
+    """Row ``row`` of a batch=k leaf, keeping a size-1 batch axis."""
+    idx = [slice(None)] * part.ndim
+    idx[axis] = slice(row, row + 1)
+    return part[tuple(idx)]
+
+
+def _scatter_block(pool_blk, single_blk, lane, page_ids, stacked: bool,
+                   src_row: int = 0):
     """Insert one layer(-stack)'s prefill cache: paged dicts scatter whole
     pages, per-lane dicts scatter the lane row.  ``stacked`` marks leaves
-    with a leading scanned-period axis."""
+    with a leading scanned-period axis; ``src_row`` picks the batch row of
+    a batch=k prefill cache (stacked admissions scatter one row per lane)."""
     if any(k in pool_blk for k in ("kp", "ckvp")):
         out = {}
         for pk, leaf in pool_blk.items():
             src = single_blk[_POOL_KEY_MAP[pk]]
             if stacked:
-                rows = src[:, 0]                      # (periods, S, ...)
+                rows = src[:, src_row]                # (periods, S, ...)
                 ps = leaf.shape[2]
                 rows = rows.reshape(
                     (rows.shape[0], rows.shape[1] // ps, ps) + rows.shape[2:])
                 out[pk] = leaf.at[:, page_ids].set(rows.astype(leaf.dtype))
             else:
-                rows = src[0]                         # (S, ...)
+                rows = src[src_row]                   # (S, ...)
                 ps = leaf.shape[1]
                 rows = rows.reshape(
                     (rows.shape[0] // ps, ps) + rows.shape[1:])
@@ -64,7 +73,8 @@ def _scatter_block(pool_blk, single_blk, lane, page_ids, stacked: bool):
         return out
     axis = 1 if stacked else 0
     return jax.tree_util.tree_map(
-        lambda full, part: _lane_update(full, part, lane, axis),
+        lambda full, part: _lane_update(full, _batch_row(part, src_row, axis),
+                                        lane, axis),
         pool_blk, single_blk)
 
 
@@ -91,6 +101,40 @@ def paged_insert(cache, single, lane, page_ids, table_row, new_len):
         _scatter_block(pb, sb, lane, page_ids, stacked=False)
         for pb, sb in zip(cache["tail_blocks"], single["tail_blocks"])
     ]
+    return new
+
+
+def paged_insert_many(cache, multi, lanes, page_ids, table_rows, new_lens,
+                      k: int):
+    """Scatter a batch=``k`` prefill cache into ``k`` lanes' pages — the
+    stacked-admission counterpart of :func:`paged_insert` (same-bucket
+    prompts share ONE prefill dispatch; each batch row lands in its own
+    lane's pages).  ``page_ids``: (k, n_pages_per_lane); ``table_rows``:
+    (k, max_pages); ``new_lens``: (k,).  ``k`` is static (trace key), so
+    the loop unrolls.  Traceable — the engine fuses it into its batched
+    paged admission."""
+    new = dict(cache)
+    pos, tables = cache["pos"], cache["block_tables"]
+    for i in range(k):
+        pos = pos.at[lanes[i]].set(new_lens[i].astype(jnp.int32))
+        tables = tables.at[lanes[i]].set(table_rows[i])
+    new["pos"], new["block_tables"] = pos, tables
+
+    def scatter_group(pool_blocks, multi_blocks, stacked):
+        out = []
+        for pb, mb in zip(pool_blocks, multi_blocks):
+            for i in range(k):
+                pb = _scatter_block(pb, mb, lanes[i], page_ids[i], stacked,
+                                    src_row=i)
+            out.append(pb)
+        return out
+
+    new["head_blocks"] = scatter_group(cache["head_blocks"],
+                                       multi["head_blocks"], stacked=False)
+    new["blocks"] = tuple(scatter_group(cache["blocks"], multi["blocks"],
+                                        stacked=True))
+    new["tail_blocks"] = scatter_group(cache["tail_blocks"],
+                                       multi["tail_blocks"], stacked=False)
     return new
 
 
@@ -160,6 +204,15 @@ class PagedCache:
         """Release a lane's pages back to the pool (same step)."""
         n = self.manager.free_lane(lane)
         return n
+
+    def copy_pages(self, src, dst) -> None:
+        """Duplicate pool pages ``src -> dst`` in every layer (CoW fork:
+        the source keeps its bytes for the other holders; the destination
+        becomes the forking lane's private copy).  Reuses the defrag move
+        kernel — a move IS a copy that leaves the source untouched."""
+        self.cache = _move_pages_jit(
+            self.cache, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32))
+        self.sync_tables()
 
     def defrag(self) -> int:
         """Compact the pool; returns the number of pages moved."""

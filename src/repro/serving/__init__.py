@@ -5,6 +5,7 @@ admission/eviction/defrag policies).  See ``engine.ServingEngine``,
 ``repro.api`` facade."""
 
 from repro.paging import PagedCache, PageManager
+from repro.prefix import PrefixCache, PrefixTree
 from repro.serving.engine import EngineConfig, ServingEngine
 from repro.serving.metrics import EngineMetrics
 from repro.serving.policies import (
@@ -16,6 +17,10 @@ from repro.serving.policies import (
     EvictionPolicy,
     FIFOAdmission,
     NeverDefrag,
+    NoPrefixReuse,
+    PrefixPolicy,
+    PriorityAdmission,
+    SharedPrefix,
     ThresholdDefrag,
 )
 from repro.serving.request import Request, RequestState, default_detokenizer
@@ -35,13 +40,19 @@ __all__ = [
     "FIFOAdmission",
     "FIFOScheduler",
     "NeverDefrag",
+    "NoPrefixReuse",
     "PageManager",
     "PagedCache",
+    "PrefixCache",
+    "PrefixPolicy",
+    "PrefixTree",
+    "PriorityAdmission",
     "Request",
     "RequestState",
     "SamplingParams",
     "Scheduler",
     "ServingEngine",
+    "SharedPrefix",
     "SlotCache",
     "ThresholdDefrag",
     "default_detokenizer",

@@ -16,12 +16,25 @@ runs an iteration-level loop: every ``step()``
 3. **evicts** finished lanes (length budget or EOS) immediately, so the
    next step can refill them instead of burning compute on dead lanes.
 
-WHICH requests admit, WHEN a lane evicts and WHEN the paged pool compacts
-are pluggable ``policies.EnginePolicies`` (admission / eviction / defrag):
+WHICH requests admit, WHEN a lane evicts, WHEN the paged pool compacts
+and HOW cached prefixes are reused are pluggable
+``policies.EnginePolicies`` (admission / eviction / defrag / prefix):
 the defaults reproduce FIFO + budget-or-EOS and add threshold-triggered
 defrag; ``BucketBatchedAdmission`` stacks same-bucket prompts into one
-batched prefill dispatch (slot mode).  New scheduling scenarios are new
-policy classes, not engine surgery.
+batched prefill dispatch (slot AND paged modes — paged groups scatter
+per-lane pages); ``PriorityAdmission`` ranks by ``Request.priority`` with
+starvation-free aging.  New scheduling scenarios are new policy classes,
+not engine surgery.
+
+With ``EngineConfig.prefix_cache`` (paged, chunkable stacks) admissions
+consult the shared-prefix radix tree (``repro/prefix/``): the longest
+page-aligned cached prefix is aliased into the lane's block table
+(refcounted pages, copy-on-write on the boundary page for full-prompt
+hits) and only the uncached suffix runs through the chunk step; completed
+prefills publish their full pages back, and the tree LRU-evicts under
+pool pressure inside the admission gate.  Scheduling stays
+output-invisible: greedy tokens with the cache ON are bitwise the cache-
+OFF (and solo ``serve_batch``) streams.
 
 Two cache modes (``EngineConfig.cache_mode``):
 
@@ -75,8 +88,10 @@ from repro.paging import (
     chunkable,
     make_chunk_step,
     paged_insert,
+    paged_insert_many,
     stack_kinds,
 )
+from repro.prefix import PrefixCache
 from repro.serving.metrics import EngineMetrics
 from repro.serving.policies import EnginePolicies
 from repro.serving.request import Request, RequestState
@@ -162,6 +177,27 @@ def _jitted_admit_paged(cfg: ModelConfig, single_len: int):
 
 
 @functools.lru_cache(maxsize=None)
+def _jitted_admit_paged_group(cfg: ModelConfig, single_len: int, k: int):
+    """Stacked admission (paged mode): ``k`` same-bucket prompts prefill as
+    ONE batch=``k`` dispatch whose cache rows scatter into each lane's own
+    pages (``paged_insert_many``), with every block-table row written in
+    the same dispatch.  Prefill is batch-parallel and the per-lane scatter
+    is the same graph as ``k`` solo inserts, so the stacked tokens are
+    bitwise the k solo ones — the PR 4 slot-mode argument, carried to
+    pages."""
+    prefill = make_prefill_step(cfg, single_len, with_lengths=True)
+
+    def admit(pool, params, tokens, lengths, lanes, page_ids, table_rows,
+              temps, topk, greedy, keys):
+        logits, multi = prefill(params, {"tokens": tokens}, lengths)
+        toks = sample_tokens(logits, temps, topk, greedy, keys)
+        return toks, paged_insert_many(pool, multi, lanes, page_ids,
+                                       table_rows, lengths, k)
+
+    return jax.jit(admit, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
 def _jitted_decode_sample(cfg: ModelConfig):
     """Fused decode+sample: one jit dispatch per engine step.
 
@@ -213,6 +249,11 @@ class EngineConfig:
     # this many tokens, interleaved with decode steps. None = one-shot
     # admission. Must be a multiple of page_size.
     prefill_chunk: Optional[int] = None
+    # paged mode: shared-prefix KV cache (repro/prefix/) — admissions look
+    # up the longest page-aligned cached prefix, alias its pages and
+    # prefill only the uncached suffix.  Requires a chunkable stack
+    # (attn/MLA/dense): the suffix resumes through the chunk step.
+    prefix_cache: bool = False
 
     @staticmethod
     def for_workload(prompt_len: int, gen_tokens: int, n_slots: int = 4,
@@ -285,13 +326,44 @@ class ServingEngine:
                                     engine_cfg.n_pages)
             self.metrics.pages_total = self.store.n_pages
             self.metrics.page_size = ps
+            # chunk length for BOTH long-prompt chunking and shared-prefix
+            # suffix prefill; the prefix cache falls back to one page per
+            # chunk (trivially page-aligned) when prefill_chunk is unset
+            self._chunk_len = engine_cfg.prefill_chunk
+            if engine_cfg.prefix_cache:
+                if not self._has_paged_kinds:
+                    raise ValueError(
+                        f"{cfg.name}: prefix_cache needs attention-family KV "
+                        "pages to share; this stack keeps all state per-lane")
+                if not chunkable(cfg):
+                    raise ValueError(
+                        f"{cfg.name}: prefix_cache resumes the uncached "
+                        "suffix through the chunked-prefill step, which "
+                        "needs a strictly row-independent stack "
+                        "(attn/MLA/dense); "
+                        f"got {sorted(stack_kinds(cfg))}")
+                self._chunk_len = engine_cfg.prefill_chunk or ps
+                # int8 pools: the full-prompt CoW-fork shortcut would change
+                # the suffix chunk's dequantized-prefix attention split vs a
+                # cold chunked prefill — cap matches a page short instead,
+                # keeping warm bitwise-equal to cold (cache.py rationale)
+                self.prefix: Optional[PrefixCache] = PrefixCache(
+                    self.store.manager, ps,
+                    allow_fork=cfg.kv_cache_dtype != "int8")
+            else:
+                self.prefix = None
             self._chunk_fn = (
-                _jitted_chunk_step(cfg, engine_cfg.prefill_chunk)
-                if engine_cfg.prefill_chunk is not None else None)
+                _jitted_chunk_step(cfg, self._chunk_len)
+                if self._chunk_len is not None else None)
         else:
             if engine_cfg.prefill_chunk is not None:
                 raise ValueError("chunked prefill requires cache_mode='paged'")
+            if engine_cfg.prefix_cache:
+                raise ValueError("prefix_cache requires cache_mode='paged' "
+                                 "(shared pages live in the page pool)")
             self.store = SlotCache(cfg, n, engine_cfg.cache_len)
+            self.prefix = None
+            self._chunk_len = None
 
         self._admit_fn = (None if self.paged
                           else _jitted_admit(cfg, engine_cfg.cache_len))
@@ -308,6 +380,8 @@ class ServingEngine:
         # decode steps whose tokens haven't been pulled to host yet:
         # (device (n,) tokens, {slot: request} snapshot at that step)
         self._pending: list = []
+        # per-request memoized prefix plans: req_id -> (tree epoch, plan)
+        self._plan_cache: dict[int, tuple] = {}
         self._next_id = 0
         self._step_idx = 0
 
@@ -317,7 +391,8 @@ class ServingEngine:
     def add_request(self, prompt: Sequence[int], max_new_tokens: int,
                     sampling: Optional[SamplingParams] = None,
                     eos_token: Optional[int] = None,
-                    on_token=None, on_text=None, detokenizer=None) -> Request:
+                    on_token=None, on_text=None, detokenizer=None,
+                    priority: int = 0) -> Request:
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -350,6 +425,7 @@ class ServingEngine:
             on_token=on_token,
             on_text=on_text,
             detokenizer=detokenizer,
+            priority=priority,
             submit_time=time.perf_counter(),
         )
         self._next_id += 1
@@ -371,6 +447,7 @@ class ServingEngine:
     def _arm_lane(self, req: Request, slot: int, tok: int) -> None:
         """First token sampled: point the lane's decode inputs at it."""
         s = req.sampling
+        self._plan_cache.pop(req.req_id, None)  # admitted: plan consumed
         req.append_token(tok)  # stamps TTFT
         self.metrics.prefills += 1
         self._tokens = jnp.asarray(self._tokens).at[slot].set(tok)
@@ -393,6 +470,8 @@ class ServingEngine:
         if self.paged:
             tok_dev, self.store.cache = self._paged_admit(
                 req, slot, tokens, padded_len, common)
+            self._record_miss(req)
+            self._maybe_publish(req, slot)
         else:
             tok_dev, self.store.cache = self._admit_fn(
                 self.store.cache, self.params, tokens,
@@ -431,6 +510,52 @@ class ServingEngine:
         for i, (req, slot) in enumerate(group):
             self._arm_lane(req, slot, int(toks[i]))
 
+    def _admit_group_paged(self, group: list[tuple[Request, int]]) -> None:
+        """Stacked paged admission: same-bucket requests prefill as one
+        batch=k dispatch whose rows scatter into per-lane pages.  Every
+        member already passed the tallied reservation gate against one
+        pool snapshot, so the sequential reservations below cannot
+        overcommit.  Chunked / prefix-seeded admissions never reach here
+        (sentinel buckets keep them single-file)."""
+        mgr = self.store.manager
+        k = len(group)
+        padded_len = self._bucket_len(group[0][0].prompt_len)
+        single_len = self._single_len(padded_len)
+        npg = (single_len // self.engine_cfg.page_size
+               if self._has_paged_kinds else 0)
+        tokens = np.zeros((k, padded_len), np.int32)
+        lengths = np.zeros((k,), np.int32)
+        temps = np.ones((k,), np.float32)
+        topk = np.zeros((k,), np.int32)
+        greedy = np.ones((k,), bool)
+        keys = np.zeros((k, 2), np.uint32)
+        page_ids = np.zeros((k, npg), np.int32)
+        table_rows = np.zeros((k, self.store.max_pages), np.int32)
+        for i, (req, slot) in enumerate(group):
+            mgr.admit(slot, self._reserve_tokens(req)
+                      if self._has_paged_kinds else 0)
+            if npg:
+                page_ids[i] = mgr.alloc(slot, npg)
+            mgr.set_length(slot, req.prompt_len)
+            tokens[i, :req.prompt_len] = req.prompt
+            lengths[i] = req.prompt_len
+            s = req.sampling
+            temps[i], topk[i], greedy[i] = s.temperature, s.top_k, s.greedy
+            keys[i] = self._lane_key(req)
+            table_rows[i] = mgr.block_tables[slot]
+        lanes = np.asarray([slot for _, slot in group], np.int32)
+        admit_fn = _jitted_admit_paged_group(self.cfg, single_len, k)
+        toks_dev, self.store.cache = admit_fn(
+            self.store.cache, self.params, tokens, lengths, lanes,
+            page_ids, table_rows, temps, topk, greedy, keys)
+        self.metrics.prefill_dispatches += 1
+        self.metrics.stacked_prefills += k
+        toks = np.asarray(toks_dev)
+        for i, (req, slot) in enumerate(group):
+            self._record_miss(req)
+            self._maybe_publish(req, slot)
+            self._arm_lane(req, slot, int(toks[i]))
+
     # -- paged admission ------------------------------------------------
     def _single_len(self, padded_len: int) -> int:
         """Cache rows the batch=1 admission prefill allocates: the bucket
@@ -467,10 +592,90 @@ class ServingEngine:
     def _reserve_tokens(self, req: Request) -> int:
         return self._worst_case_rows(req.prompt_len, req.max_new_tokens)
 
-    def _can_admit(self, req: Request) -> bool:
+    # -- shared-prefix planning -----------------------------------------
+    def _prefix_rows(self, req: Request, plan) -> int:
+        """Rows a prefix-seeded lane reserves: the suffix-chunk footprint
+        (resume + whole chunks, incl. the padded tail) or prompt +
+        generation budget, whichever is larger."""
+        c = self._chunk_len
+        suffix = plan.resume + _roundup(req.prompt_len - plan.resume, c)
+        return max(suffix, req.prompt_len + req.max_new_tokens)
+
+    def _prefix_plan(self, req: Request):
+        """The admission's prefix decision (None = admit cold).  Plans
+        whose reservation could never fit a lane's block table fall back
+        to the cold path, which ``add_request`` already validated.
+
+        Memoized per (request, tree epoch): bucket_of, the capacity gate
+        and the dispatch itself all consult the SAME plan object for one
+        scheduling round, and the tree is only re-walked after a
+        structural change (publish / evict / remap)."""
+        if self.prefix is None:
+            return None
+        hit = self._plan_cache.get(req.req_id)
+        if hit is not None and hit[0] == self.prefix.epoch:
+            return hit[1]
+        plan = self.policies.prefix.plan(self.prefix, req)
+        if plan is not None:
+            pages = pages_for(self._prefix_rows(req, plan),
+                              self.engine_cfg.page_size)
+            if pages > self.store.max_pages or pages > self.store.n_pages - 1:
+                plan = None
+        self._plan_cache[req.req_id] = (self.prefix.epoch, plan)
+        return plan
+
+    def _prefix_draw(self, req: Request, plan) -> int:
+        """Pages a prefix-seeded admission draws from the free pool."""
+        pages = pages_for(self._prefix_rows(req, plan),
+                          self.engine_cfg.page_size)
+        return pages - len(plan.pages) + (1 if plan.fork_index is not None else 0)
+
+    def _admit_gate(self):
+        """Capacity gate for one admission *dispatch*: stateful so a
+        stacked group's reservations are tallied against a single pool
+        snapshot (two jointly-unfittable requests can never both pass),
+        and prefix-aware — a cached prefix discounts the draw, and under
+        pressure the prefix tree LRU-evicts pages no lane is using (never
+        pages a candidate in this very dispatch is about to adopt)."""
         if not (self.paged and self._has_paged_kinds):
-            return True
-        return self.store.manager.can_admit(self._reserve_tokens(req))
+            return lambda req: True
+        tally = [0]
+        protected: list = []
+
+        def gate(req: Request) -> bool:
+            mgr = self.store.manager
+            plan = self._prefix_plan(req)
+            if plan is None:
+                need = mgr.pages_for(self._reserve_tokens(req))
+            else:
+                need = self._prefix_draw(req, plan)
+                protected.extend(plan.nodes)
+            deficit = need - (mgr.available - tally[0])
+            # evict only when it can actually close the gap — a request the
+            # pool cannot fit even with an empty tree must not drain the
+            # cache for nothing while it waits head-of-line
+            if (deficit > 0 and self.prefix is not None
+                    and deficit <= self.prefix.evictable_pages):
+                freed = self.prefix.evict_for(deficit, protect=protected)
+                if freed:
+                    self.metrics.prefix_evicted_pages += freed
+                    self.metrics.prefix_tree_pages = self.prefix.cached_pages
+            if need <= mgr.available - tally[0]:
+                tally[0] += need
+                return True
+            return False
+
+        return gate
+
+    def _admit_bucket(self, req: Request) -> int:
+        """Bucket key for stacked admission grouping.  Chunked and
+        prefix-seeded admissions are single-file (per-lane chunk streams /
+        adopted tables don't stack), so they get a unique sentinel bucket
+        no other request can match."""
+        if self.paged and (self._should_chunk(req)
+                           or self._prefix_plan(req) is not None):
+            return -(req.req_id + 1)
+        return self._bucket_len(req.prompt_len)
 
     def _paged_admit(self, req: Request, slot: int, tokens, padded_len, common):
         mgr = self.store.manager
@@ -488,6 +693,26 @@ class ServingEngine:
             *common,
         )
 
+    # -- shared-prefix bookkeeping ---------------------------------------
+    def _record_miss(self, req: Request) -> None:
+        if self.prefix is not None:
+            self.metrics.prefix_misses += 1
+
+    def _maybe_publish(self, req: Request, slot: int) -> None:
+        """After a prefill completes, enter the prompt's full pages into
+        the prefix tree so later prompts can alias them.  Only
+        prefill-written rows publish — never decode-written ones, whose
+        dispatch graph differs (the bitwise cold-vs-warm contract)."""
+        if self.prefix is None or not self.policies.prefix.should_publish(req):
+            return
+        self.prefix.publish(req.prompt, self.store.manager.lane_pages[slot])
+        self.metrics.prefix_tree_pages = self.prefix.cached_pages
+
+    def _cow(self, slot: int, move) -> None:
+        """Apply a copy-on-write fork on device (``move`` = (src, dst))."""
+        self.store.copy_pages([move[0]], [move[1]])
+        self.metrics.prefix_cow_forks += 1
+
     # -- chunked prefill -------------------------------------------------
     def _begin_chunked(self, req: Request, slot: int,
                        finished: list[Request]) -> None:
@@ -495,16 +720,45 @@ class ServingEngine:
         mgr.admit(slot, self._reserve_tokens(req))
         self.scheduler.begin_chunked(slot)
         req.prefill_done = 0
+        self._record_miss(req)
+        self._process_chunk(req, slot, finished)
+
+    def _begin_prefix(self, req: Request, slot: int, plan,
+                      finished: list[Request]) -> None:
+        """Prefix-seeded admission: alias the cached pages into the lane's
+        block table, CoW-fork the boundary page if the plan resumes inside
+        one (full-prompt hit), then stream ONLY the uncached suffix through
+        the chunk step — a fully-cached prompt recomputes a single token."""
+        mgr = self.store.manager
+        mgr.admit(slot, self._prefix_rows(req, plan),
+                  adopt_pages=plan.pages,
+                  forks=0 if plan.fork_index is None else 1)
+        if plan.fork_index is not None:
+            self._cow(slot, mgr.cow_fork(slot, plan.fork_index))
+        self.prefix.tree.touch(plan.nodes)
+        self.metrics.prefix_hits += 1
+        self.metrics.prefix_hit_tokens += plan.resume
+        self.scheduler.begin_chunked(slot)
+        req.prefill_done = plan.resume
         self._process_chunk(req, slot, finished)
 
     def _process_chunk(self, req: Request, slot: int,
                        finished: list[Request]) -> None:
-        """Feed one page-aligned prompt chunk; the final chunk samples the
-        first token and promotes the lane into the decode batch."""
+        """Feed one prompt chunk; the final chunk samples the first token
+        and promotes the lane into the decode batch.  Chunks are
+        page-aligned except a prefix plan's first (resume) chunk, which may
+        start mid-page right after a CoW fork."""
         mgr = self.store.manager
-        c = self.engine_cfg.prefill_chunk
+        c = self._chunk_len
         start = req.prefill_done
         n = min(c, req.prompt_len - start)
+        if self.prefix is not None:
+            # CoW guard: the write range must never touch a shared page
+            # (structurally only possible at `start`, and the planned fork
+            # already privatized it — this keeps the invariant literal)
+            move = mgr.ensure_writable(slot, start)
+            if move is not None:
+                self._cow(slot, move)
         mgr.ensure(slot, start + c)  # the padded tail also lands in pages
         self.store.sync_tables()
         tokens = np.zeros((1, c), np.int32)
@@ -523,6 +777,7 @@ class ServingEngine:
                 self._lane_key(req)[None])
             mgr.set_length(slot, req.prompt_len)
             self.scheduler.promote(slot)
+            self._maybe_publish(req, slot)
             self._arm_lane(req, slot, int(np.asarray(tok_dev)[0]))
             if self._should_evict(req):  # max_new_tokens == 1 (or instant EOS)
                 self._evict(slot, finished)
@@ -550,29 +805,36 @@ class ServingEngine:
             budget -= 1
             did_prefill = True
 
-        # admit one *dispatch* at a time: each admission takes its page
-        # reservation before the next one's capacity gate runs, so two
-        # jointly-unfittable requests can never both pass against the same
-        # pool snapshot.  In slot mode the admission policy may stack
-        # several same-bucket requests into one dispatch (paged admissions
-        # stay single-file: per-lane page scatter + the reservation gate).
+        # admit one *dispatch* at a time: the per-dispatch capacity gate
+        # tallies every member's page reservation against one pool
+        # snapshot, so two jointly-unfittable requests can never both
+        # pass.  The admission policy may stack several same-bucket
+        # requests into one dispatch in BOTH cache modes (paged groups
+        # scatter per-lane pages); chunked and prefix-seeded admissions
+        # stay single-file via sentinel buckets.
         while budget > 0:
             group = self.scheduler.schedule_group(
-                admit_ok=self._can_admit,
-                bucket_of=lambda r: self._bucket_len(r.prompt_len),
-                max_group=1 if self.paged else self.scheduler.free_slots)
+                admit_ok=self._admit_gate(),
+                bucket_of=self._admit_bucket,
+                max_group=self.scheduler.free_slots)
             if not group:
                 break
             budget -= 1
             did_prefill = True
             if len(group) > 1:
-                self._admit_group(group)
+                if self.paged:
+                    self._admit_group_paged(group)
+                else:
+                    self._admit_group(group)
                 for req, slot in group:
                     if self._should_evict(req):
                         self._evict(slot, finished)
                 continue
             req, slot = group[0]
-            if self._should_chunk(req):
+            plan = self._prefix_plan(req) if self.paged else None
+            if plan is not None:
+                self._begin_prefix(req, slot, plan, finished)
+            elif self._should_chunk(req):
                 self._begin_chunked(req, slot, finished)
             else:
                 self._admit(req, slot)
@@ -591,7 +853,15 @@ class ServingEngine:
             if self.paged and self._has_paged_kinds:
                 mgr = self.store.manager
                 for slot in running:
-                    mgr.ensure(slot, int(mgr.lengths[slot]) + 1)
+                    row = int(mgr.lengths[slot])
+                    if self.prefix is not None:
+                        # a lane's first write into a shared page forks it
+                        # (structurally the admission fork already covers
+                        # this; the guard keeps the invariant unconditional)
+                        move = mgr.ensure_writable(slot, row)
+                        if move is not None:
+                            self._cow(slot, move)
+                    mgr.ensure(slot, row + 1)
                 self.store.sync_tables()
                 self.metrics.peak_pages_used = max(
                     self.metrics.peak_pages_used, mgr.pages_in_use)

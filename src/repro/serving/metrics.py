@@ -44,6 +44,16 @@ class EngineMetrics:
     # pool compactions triggered by the engine's DefragPolicy
     defrag_count: int = 0
     defrag_pages_moved: int = 0
+    # shared-prefix cache (repro/prefix/; all 0 when the cache is off):
+    # admissions that adopted cached pages / admitted cold, prompt tokens
+    # whose prefill was skipped, CoW page forks, pages LRU-evicted from the
+    # tree under pool pressure, and the tree's current page footprint
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_cow_forks: int = 0
+    prefix_evicted_pages: int = 0
+    prefix_tree_pages: int = 0
 
     def begin(self) -> None:
         if not self.start_time:
@@ -92,6 +102,12 @@ class EngineMetrics:
             "peak_pages_used": self.peak_pages_used,
             "defrag_count": self.defrag_count,
             "defrag_pages_moved": self.defrag_pages_moved,
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_cow_forks": self.prefix_cow_forks,
+            "prefix_evicted_pages": self.prefix_evicted_pages,
+            "prefix_tree_pages": self.prefix_tree_pages,
         }
 
     def format_report(self) -> str:

@@ -20,6 +20,11 @@ policy class:
   ``PagedCache.defrag()`` existed with nothing triggering it; the default
   ``ThresholdDefrag`` fires when the pool's fragmentation ratio crosses a
   threshold, and the engine reports a ``defrag_count`` metric.
+* ``PrefixPolicy`` — how the shared-prefix cache (``repro/prefix/``)
+  participates in admission: whether a prompt's cached prefix is adopted
+  and whether a finished prefill publishes its pages.  The default
+  ``SharedPrefix`` matches and publishes everything; ``NoPrefixReuse``
+  keeps the subsystem inert.
 
 Policies are *output-invisible* by construction where the exact-match
 serving tests demand it: admission stacking only changes how prefills are
@@ -69,6 +74,20 @@ class DefragPolicy(Protocol):
     def should_defrag(self, manager) -> bool:
         """True when the paged pool should compact (``manager`` is the
         engine's ``paging.PageManager``)."""
+        ...
+
+
+@runtime_checkable
+class PrefixPolicy(Protocol):
+    def plan(self, cache, req: Request):
+        """The prefix-cache decision for an admission: a
+        ``prefix.PrefixPlan`` to adopt, or None to admit cold.  ``cache``
+        is the engine's ``prefix.PrefixCache``."""
+        ...
+
+    def should_publish(self, req: Request) -> bool:
+        """Should this request's prompt pages enter the tree after its
+        prefill completes?"""
         ...
 
 
@@ -122,6 +141,46 @@ class BucketBatchedAdmission:
         return group
 
 
+class PriorityAdmission:
+    """Highest effective priority first, starvation-free through aging.
+
+    Each request carries a ``Request.priority`` (higher = sooner); its
+    *effective* priority grows by one level every ``aging_steps`` scheduler
+    polls it spends waiting, so a low-priority request can be delayed but
+    never starved — eventually it outranks fresh high-priority arrivals.
+    The chosen head is then head-of-line for the capacity gate exactly
+    like FIFO: if the pool cannot reserve it, nothing skips past it (a
+    skip-ahead would re-starve large requests, the failure FIFO's gate
+    already guards against).  Ties break by queue order (FIFO within a
+    priority level).  One request per dispatch.
+    """
+
+    def __init__(self, aging_steps: int = 8):
+        if aging_steps < 1:
+            raise ValueError("aging_steps must be >= 1")
+        self.aging_steps = aging_steps
+        self._poll = 0
+        self._first_poll: dict[int, int] = {}
+
+    def _effective(self, req: Request) -> int:
+        waited = self._poll - self._first_poll[req.req_id]
+        return req.priority + waited // self.aging_steps
+
+    def next_group(self, waiting, max_group, admit_ok, bucket_of):
+        if not waiting:
+            return []
+        self._poll += 1
+        live = set()
+        for r in waiting:
+            self._first_poll.setdefault(r.req_id, self._poll)
+            live.add(r.req_id)
+        for rid in [r for r in self._first_poll if r not in live]:
+            del self._first_poll[rid]
+        head = min(range(len(waiting)),
+                   key=lambda i: (-self._effective(waiting[i]), i))
+        return [head] if admit_ok(waiting[head]) else []
+
+
 class BudgetOrEOSEviction:
     """Evict when the request hits its token budget or emits EOS — the
     ``Request.done`` rule the engine always applied."""
@@ -146,7 +205,9 @@ class ThresholdDefrag:
     highest allocated physical page index: a freshly compacted pool (used
     set exactly ``[1, pages_in_use]``) scores 0.0, and holes left by
     evictions push the ratio toward 1.  ``min_pages`` avoids churning a
-    nearly-empty pool where compaction buys nothing.
+    nearly-empty pool where compaction buys nothing.  Both counts come
+    from page refcounts, so prefix-tree-held pages (referenced by no lane)
+    are neither skipped by compaction nor misread as holes.
     """
 
     def __init__(self, threshold: float = 0.5, min_pages: int = 2):
@@ -159,15 +220,51 @@ class ThresholdDefrag:
         used = manager.pages_in_use
         if used < self.min_pages:
             return False
-        span = max(p for pages in manager.lane_pages for p in pages)
+        span = manager.span
+        if span <= 0:
+            return False
         return (1.0 - used / span) > self.threshold
+
+
+class SharedPrefix:
+    """Default prefix policy: adopt any cached prefix of at least
+    ``min_pages`` pages, publish every completed prefill.  A higher
+    ``min_pages`` skips marginal one-page matches whose adoption
+    bookkeeping outweighs the recompute they save."""
+
+    def __init__(self, min_pages: int = 1):
+        if min_pages < 1:
+            raise ValueError("min_pages must be >= 1")
+        self.min_pages = min_pages
+
+    def plan(self, cache, req: Request):
+        plan = cache.plan(req.prompt)
+        if plan is not None and len(plan.pages) >= self.min_pages:
+            return plan
+        return None
+
+    def should_publish(self, req: Request) -> bool:
+        return True
+
+
+class NoPrefixReuse:
+    """Prefix subsystem present but inert: match nothing, publish nothing
+    (e.g. to A/B the cache's overhead on a workload with no sharing)."""
+
+    def plan(self, cache, req: Request):
+        return None
+
+    def should_publish(self, req: Request) -> bool:
+        return False
 
 
 @dataclasses.dataclass
 class EnginePolicies:
     """The engine's pluggable decision points, with defaults reproducing
-    (and, for defrag, completing) the historical behaviour."""
+    (and, for defrag, completing) the historical behaviour.  ``prefix``
+    only engages when the engine is built with ``prefix_cache=True``."""
 
     admission: AdmissionPolicy = dataclasses.field(default_factory=FIFOAdmission)
     eviction: EvictionPolicy = dataclasses.field(default_factory=BudgetOrEOSEviction)
     defrag: DefragPolicy = dataclasses.field(default_factory=ThresholdDefrag)
+    prefix: PrefixPolicy = dataclasses.field(default_factory=SharedPrefix)

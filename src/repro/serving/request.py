@@ -43,6 +43,9 @@ class Request:
     max_new_tokens: int
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     eos_token: Optional[int] = None
+    # Admission rank for priority-aware policies (higher = sooner); the
+    # default FIFO admission ignores it.  See ``policies.PriorityAdmission``.
+    priority: int = 0
     # Streaming hook: called with each sampled token as it reaches the
     # host.  The engine's lazy pulls are forced eager for streaming
     # requests (tokens surface every step instead of at sync points), so a

@@ -102,11 +102,20 @@ def test_runtime_config_cross_validation():
     with pytest.raises(ValueError, match="bucket"):
         RuntimeConfig(kv=KVConfig(cache_len=16),
                       scheduler=SchedulerConfig(prefill_buckets=(8, 32)))
-    # paged admissions are single-file; a silently-ignored stacking flag
-    # must be rejected, not accepted
+    # stacked admission now works in BOTH cache modes (paged groups
+    # scatter per-lane pages) — the old paged rejection is gone
+    RuntimeConfig(kv=KVConfig(mode="paged"),
+                  scheduler=SchedulerConfig(batched_admission=True))
+    # the prefix cache lives in the page pool
+    with pytest.raises(ValueError, match="prefix_cache"):
+        KVConfig(mode="slot", prefix_cache=True)
+    with pytest.raises(ValueError, match="prefix_min_pages"):
+        KVConfig(mode="paged", prefix_cache=True, prefix_min_pages=0)
+    # priority ordering and FIFO bucket-stacking are mutually exclusive
     with pytest.raises(ValueError, match="batched_admission"):
-        RuntimeConfig(kv=KVConfig(mode="paged"),
-                      scheduler=SchedulerConfig(batched_admission=True))
+        SchedulerConfig(admission="priority", batched_admission=True)
+    with pytest.raises(ValueError, match="admission"):
+        SchedulerConfig(admission="sjf")
 
 
 def test_runtime_config_resolution():
@@ -140,13 +149,74 @@ def test_runtime_config_resolution():
 
 
 def test_build_policies_mapping():
+    from repro.api import PriorityAdmission, SharedPrefix
+
     p = RuntimeConfig().build_policies()
     assert isinstance(p.admission, FIFOAdmission)
     assert isinstance(p.defrag, ThresholdDefrag)
+    assert isinstance(p.prefix, SharedPrefix)
     p2 = RuntimeConfig(scheduler=SchedulerConfig(
         batched_admission=True, defrag_threshold=None)).build_policies()
     assert isinstance(p2.admission, BucketBatchedAdmission)
     assert isinstance(p2.defrag, NeverDefrag)
+    p3 = RuntimeConfig(scheduler=SchedulerConfig(
+        admission="priority")).build_policies()
+    assert isinstance(p3.admission, PriorityAdmission)
+    p4 = RuntimeConfig(kv=KVConfig(mode="paged", prefix_cache=True,
+                                   prefix_min_pages=3)).build_policies()
+    assert p4.prefix.min_pages == 3
+
+
+# ---------------------------------------------------------------------------
+# Preset registry + --runtime loading (PR 4 follow-up)
+# ---------------------------------------------------------------------------
+
+def test_presets_roundtrip_and_resolve():
+    from repro.api import get_preset, list_presets
+
+    base = reduced(get_config("llama3.2-1b")).with_(remat=False)
+    assert "prefix-interactive" in list_presets()
+    for name in list_presets():
+        rt = get_preset(name)
+        # every built-in preset is JSON round-trippable and resolvable
+        assert RuntimeConfig.from_dict(
+            json.loads(json.dumps(rt.to_dict()))) == rt
+        model_cfg, ecfg = rt.resolve(base, prompt_len=16, gen_tokens=8)
+        assert ecfg.cache_len >= 24
+    assert get_preset("prefix-interactive").kv.prefix_cache
+    with pytest.raises(KeyError, match="unknown runtime preset"):
+        get_preset("nope")
+
+
+def test_register_preset_guard():
+    from repro.api import get_preset, register_preset
+
+    register_preset("test-tmp", RuntimeConfig(max_new_tokens=3))
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_preset("test-tmp", RuntimeConfig())
+        register_preset("test-tmp", RuntimeConfig(max_new_tokens=4),
+                        overwrite=True)
+        assert get_preset("test-tmp").max_new_tokens == 4
+        with pytest.raises(TypeError):
+            register_preset("test-bad", {"max_new_tokens": 4})
+    finally:
+        from repro.api.config import _PRESETS
+        _PRESETS.pop("test-tmp", None)
+
+
+def test_load_runtime_from_file_and_preset(tmp_path):
+    from repro.api import get_preset, load_runtime
+
+    rt = RuntimeConfig(kv=KVConfig(mode="paged", page_size=8,
+                                   prefix_cache=True),
+                       max_new_tokens=5)
+    path = tmp_path / "runtime.json"
+    path.write_text(json.dumps(rt.to_dict()))
+    assert load_runtime(str(path)) == rt
+    assert load_runtime("paged-server") is get_preset("paged-server")
+    with pytest.raises(ValueError, match="neither"):
+        load_runtime("definitely-not-a-preset")
 
 
 # ---------------------------------------------------------------------------
