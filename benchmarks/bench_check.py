@@ -1,0 +1,108 @@
+"""Benchmark regression gate over the ``BENCH_*.json`` trajectories.
+
+``bench_record.append_run`` accumulates every benchmark run across PRs —
+different sweeps (engine-vs-static, prefix, spec) append into the SAME
+file, so a trajectory interleaves run kinds.  This script turns it into a
+CI gate: for each *headline metric*, compare the newest run carrying that
+metric against the trailing median of the prior runs carrying it, and
+fail (exit 1) when it regresses by more than ``--threshold`` (default
+15%).
+
+Only *machine-independent ratio* metrics gate — each sweep's headline
+speedup (engine-vs-static, spec-vs-plain, cached-vs-cold), never raw
+tok/s, whose absolute value depends on the host CI happens to land on.
+Runs are additionally filtered to the newest run's platform (cpu / tpu
+...), so a trajectory spanning machines still compares like with like.
+With fewer than ``--min-priors`` comparable prior runs a metric passes
+trivially — a fresh trajectory can't regress against itself.
+
+    PYTHONPATH=src python benchmarks/bench_check.py [files...] \
+        [--threshold 0.15] [--min-priors 2]
+
+With no files, checks every ``BENCH_serve*.json`` next to this script.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import sys
+
+# the machine-independent headline ratios (higher is better), one per
+# sweep kind: continuous-vs-static, spec-on-vs-off, prefix-cached-vs-cold
+GATED_METRICS = (
+    "speedup_vs_static",
+    "speedup_vs_plain",
+    "speedup_vs_cold",
+)
+
+
+def check_metric(path: pathlib.Path, runs: list, metric: str,
+                 threshold: float, min_priors: int) -> bool:
+    """Gate one headline metric's trajectory.  True = pass."""
+    series = [r for r in runs if r.get(metric) is not None]
+    if not series:
+        return True
+    newest = series[-1]
+    value = newest[metric]
+    priors = [r[metric] for r in series[:-1]
+              if r.get("platform") == newest.get("platform")]
+    if len(priors) < min_priors:
+        print(f"[bench_check] {path.name}: {metric}={value:.3f}, only "
+              f"{len(priors)} comparable prior run(s) (< {min_priors}) "
+              f"-- pass (building trajectory)")
+        return True
+    baseline = statistics.median(priors)
+    floor = baseline * (1.0 - threshold)
+    ok = value >= floor
+    verdict = "pass" if ok else "FAIL"
+    print(f"[bench_check] {path.name}: {metric}={value:.3f} vs trailing "
+          f"median {baseline:.3f} over {len(priors)} runs "
+          f"(floor {floor:.3f}) -- {verdict}")
+    return ok
+
+
+def check_file(path: pathlib.Path, threshold: float, min_priors: int) -> bool:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[bench_check] {path.name}: unreadable ({e}) -- FAIL")
+        return False
+    runs = doc.get("runs") or []
+    if not runs:
+        print(f"[bench_check] {path.name}: no runs -- skipped")
+        return True
+    results = [check_metric(path, runs, m, threshold, min_priors)
+               for m in GATED_METRICS]
+    return all(results)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json trajectories (default: "
+                         "BENCH_serve*.json beside this script)")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated fractional regression vs the "
+                         "trailing median (default 0.15)")
+    ap.add_argument("--min-priors", type=int, default=2,
+                    help="comparable prior runs required before the gate "
+                         "engages (default 2)")
+    args = ap.parse_args()
+    if not 0.0 < args.threshold < 1.0:
+        ap.error("--threshold must be in (0, 1)")
+
+    here = pathlib.Path(__file__).parent
+    files = ([pathlib.Path(f) for f in args.files] if args.files
+             else sorted(here.glob("BENCH_serve*.json")))
+    if not files:
+        print("[bench_check] no trajectory files found -- nothing to gate")
+        return 0
+    ok = all([check_file(f, args.threshold, args.min_priors) for f in files])
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

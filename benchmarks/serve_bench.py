@@ -27,9 +27,14 @@ the same system prompt plus a unique tail, served twice from the same
 paged pool — ``KVConfig(prefix_cache=True)`` vs cold — to measure what
 the radix-tree prefix cache (``repro/prefix/``) buys in tok/s and TTFT.
 
+``--spec`` switches to the speculative-decoding sweep: a repetitive
+(draftable) workload served spec-on vs spec-off from the same paged pool,
+measuring the tok/s win and draft acceptance rate of the prompt-lookup
+draft-verify loop (``repro/spec/``).
+
 Appends a stamped run (git SHA + date) to ``BENCH_serve.json``:
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--prefix] [--out PATH]
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--prefix|--spec] [--out PATH]
 """
 
 from __future__ import annotations
@@ -52,6 +57,7 @@ from repro.api import (
     QuantRuntime,
     RuntimeConfig,
     SchedulerConfig,
+    SpecConfig,
     serve_batch,
 )
 from repro.configs import (
@@ -116,19 +122,23 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
 
 def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
                stagger: int = 0, quant_mode: str = "bf16",
-               kv_dtype: str = "bf16", prefill_chunk=None, **kv_kw):
+               kv_dtype: str = "bf16", prefill_chunk=None, spec=None,
+               **kv_kw):
     """One facade cell: the RuntimeConfig IS the cell description."""
     runtime = RuntimeConfig(
         quant=QuantRuntime(mode=quant_mode),
         kv=KVConfig(dtype=kv_dtype, cache_len=cache_len, **kv_kw),
         scheduler=SchedulerConfig(n_slots=slots, prefill_buckets=buckets,
                                   prefill_chunk=prefill_chunk),
+        spec=spec if spec is not None else SpecConfig(),
     )
     llm = LLM(config=cfg, params=params, runtime=runtime)
     arrivals = [(i * stagger, p, b) for i, (p, b) in enumerate(workload)]
     metrics = llm.engine.run(arrivals)
     rep = metrics.report()
-    if kv_kw.get("prefix_cache"):
+    if spec is not None and spec.enabled:
+        rep["mode"] = "paged+spec"
+    elif kv_kw.get("prefix_cache"):
         rep["mode"] = "paged+prefix"
     elif kv_kw.get("mode") == "paged":
         rep["mode"] = "paged"
@@ -214,6 +224,87 @@ def prefix_sweep(cfg, params, args, out_path: str) -> None:
           f"{stamped['date']})")
 
 
+def make_repetitive_workload(cfg, n_requests: int, prompt_len: int, gen: int,
+                             seed: int = 0, period: int = 8):
+    """Prompts that are a short random pattern tiled to ``prompt_len`` —
+    the structured-text shape (templated output, code, extraction) where
+    prompt-lookup drafting shines: the continuation keeps reciting n-grams
+    already present in the context."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        pattern = rng.integers(0, cfg.vocab_size, period).tolist()
+        plen = int(rng.integers(max(period + 1, prompt_len // 2),
+                                prompt_len + 1))
+        reps = -(-plen // period)
+        budget = int(gen if i % 2 == 0 else max(1, gen // 4))
+        reqs.append(((pattern * reps)[:plen], budget))
+    return reqs
+
+
+def spec_sweep(cfg, params, args, out_path: str) -> None:
+    """Speculative decoding on the paged engine, spec-on vs spec-off at the
+    SAME pool budget on a repetitive (draftable) workload.  The spec cell
+    drafts ``k`` tokens per lane with the model-free prompt-lookup n-gram
+    drafter and verifies them in ONE batched dispatch; the win is decode
+    dispatches shrinking by ~(1 + acceptance * k) while greedy outputs stay
+    bitwise identical (the engine's exactness tests pin that separately)."""
+    cache_len = default_cache_len(args.prompt_len, args.gen)
+    # speculation attacks per-step dispatch overhead, which dominates at
+    # LOW concurrency (wide batches amortize it away) — sweep the smallest
+    # configured lane count, the regime the feature is for
+    slots = 2 if args.quick else min(int(s) for s in args.slots.split(","))
+    kw = dict(
+        quant_mode=args.quant_mode, kv_dtype=args.kv_cache_dtype,
+        prefill_chunk=PAGE_SIZE, mode="paged", page_size=PAGE_SIZE,
+        n_pages=default_page_count(slots, cache_len, PAGE_SIZE),
+    )
+    spec = SpecConfig(enabled=True, k=args.spec_k, drafter="ngram")
+    workload = make_repetitive_workload(cfg, args.requests, args.prompt_len,
+                                        args.gen)
+    print(f"=== spec sweep: {cfg.name} | {args.requests} requests, "
+          f"repetitive prompts<={args.prompt_len}, k={args.spec_k}, "
+          f"{slots} lanes, kv={args.kv_cache_dtype} ===")
+    records = []
+    warm = [(p, 2) for p, _ in workload[:slots]]
+    for cell_spec in (None, spec):
+        run_engine(cfg, params, warm, slots, cache_len, None,
+                   spec=cell_spec, **kw)
+        rec = max((run_engine(cfg, params, workload, slots, cache_len, None,
+                              spec=cell_spec, **kw)
+                   for _ in range(args.repeats)),
+                  key=lambda r: r["tokens_per_s"])
+        rec["slots"] = slots
+        records.append(rec)
+        tag = "spec" if cell_spec is not None else "plain"
+        print(f"{tag:>8s} {rec['tokens_per_s']:8.1f} tok/s | "
+              f"{rec['decode_steps']:4d} decode dispatches | "
+              f"accept {rec['spec_accepted']}/{rec['spec_proposed']} "
+              f"(rate {rec['acceptance_rate']:.2f})")
+    plain, spec_rec = records
+    run = {
+        "arch": cfg.name,
+        "config": {
+            "requests": args.requests, "prompt_len": args.prompt_len,
+            "gen": args.gen, "lanes": slots, "k": args.spec_k,
+            "drafter": "ngram", "kv_cache_dtype": args.kv_cache_dtype,
+            "quant_mode": args.quant_mode, "reduced": not args.full,
+        },
+        "speedup_vs_plain": round(spec_rec["tokens_per_s"]
+                                  / max(plain["tokens_per_s"], 1e-9), 3),
+        "acceptance_rate": spec_rec["acceptance_rate"],
+        "dispatch_ratio": round(plain["decode_steps"]
+                                / max(spec_rec["decode_steps"], 1), 3),
+        "records": records,
+    }
+    print(f"speculative decoding: {run['speedup_vs_plain']:.2f}x tok/s at "
+          f"acceptance {run['acceptance_rate']:.2f} "
+          f"({run['dispatch_ratio']:.1f}x fewer decode dispatches)")
+    stamped = append_run(out_path, "serve_bench_spec", run)
+    print(f"appended run to {out_path} (sha {stamped['git_sha']}, "
+          f"{stamped['date']})")
+
+
 def paged_kw(slots: int, cache_len: int, n_requests: int):
     """Paged engine at the *slot pool's* KV budget: same page count the
     slot cache would pin (``slots`` worst-case lanes), but lane count
@@ -250,6 +341,11 @@ def main():
     ap.add_argument("--prefix", action="store_true",
                     help="shared-prefix sweep instead: cached vs cold paged "
                          "serving of a common-system-prompt workload")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decoding sweep instead: spec-on vs "
+                         "spec-off paged serving of a repetitive workload")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="spec sweep: drafted tokens per verify dispatch")
     ap.add_argument("--shared-prefix", type=int, default=48,
                     help="prefix sweep: shared system-prompt length "
                          "(prompt-len becomes the unique tail length)")
@@ -274,6 +370,13 @@ def main():
             args.repeats = min(args.repeats, 2)
             args.shared_prefix = min(args.shared_prefix, 32)
         prefix_sweep(cfg, params, args, args.out)
+        return
+
+    if args.spec:
+        if args.quick:
+            args.requests = min(args.requests, 6)
+            args.repeats = min(args.repeats, 2)
+        spec_sweep(cfg, params, args, args.out)
         return
 
     cache_len = default_cache_len(args.prompt_len, args.gen)

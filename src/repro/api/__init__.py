@@ -22,6 +22,8 @@ Map of the package
     * ``SchedulerConfig``  — slots, buckets, chunking, batched admission,
                              defrag threshold
     * ``SamplingDefaults`` — default per-request sampling policy
+    * ``SpecConfig``       — speculative decoding (draft-verify greedy
+                             decode; ``repro/spec/``)
 
     Frozen + validated; ``to_dict``/``from_dict`` round-trip; one
     ``resolve(cfg)`` step derives the legacy ``ModelConfig`` overrides and
@@ -77,6 +79,7 @@ from repro.serving.policies import (
     EvictionPolicy,
     FIFOAdmission,
     NeverDefrag,
+    PrefixAwareAdmission,
     PrefixPolicy,
     PriorityAdmission,
     NoPrefixReuse,
@@ -84,6 +87,7 @@ from repro.serving.policies import (
     ThresholdDefrag,
 )
 from repro.serving.sampling import SamplingParams
+from repro.spec.config import SpecConfig
 
 __all__ = [
     "AdmissionPolicy",
@@ -97,6 +101,7 @@ __all__ = [
     "LLM",
     "NeverDefrag",
     "NoPrefixReuse",
+    "PrefixAwareAdmission",
     "PrefixPolicy",
     "PriorityAdmission",
     "QuantRuntime",
@@ -106,6 +111,7 @@ __all__ = [
     "SamplingParams",
     "SchedulerConfig",
     "SharedPrefix",
+    "SpecConfig",
     "ThresholdDefrag",
     "auto_buckets",
     "get_preset",

@@ -41,11 +41,13 @@ from repro.serving.policies import (
     EnginePolicies,
     FIFOAdmission,
     NeverDefrag,
+    PrefixAwareAdmission,
     PriorityAdmission,
     SharedPrefix,
     ThresholdDefrag,
 )
 from repro.serving.sampling import SamplingParams
+from repro.spec.config import SpecConfig
 
 _PAGED_ATTN_IMPLS = (None, "jnp", "pallas", "pallas_interpret")
 
@@ -145,7 +147,8 @@ class SchedulerConfig:
     # chunked/prefix-seeded admissions stay single-file)
     batched_admission: bool = False
     # admission ordering: "fifo" (head-of-line) | "priority"
-    # (Request.priority with starvation-free aging)
+    # (Request.priority with starvation-free aging) | "prefix-aware"
+    # (requests sharing a hot cached prefix admit back-to-back)
     admission: str = "fifo"
     # paged mode: compact the pool when fragmentation (1 - used/span)
     # crosses this threshold; None disables auto-defrag
@@ -156,10 +159,11 @@ class SchedulerConfig:
             raise ValueError("SchedulerConfig.n_slots must be >= 1")
         if self.max_prefills_per_step < 1:
             raise ValueError("SchedulerConfig.max_prefills_per_step must be >= 1")
-        if self.admission not in ("fifo", "priority"):
-            raise ValueError("SchedulerConfig.admission must be 'fifo' or "
-                             f"'priority', got {self.admission!r}")
-        if self.admission == "priority" and self.batched_admission:
+        if self.admission not in ("fifo", "priority", "prefix-aware"):
+            raise ValueError("SchedulerConfig.admission must be 'fifo', "
+                             f"'priority' or 'prefix-aware', got "
+                             f"{self.admission!r}")
+        if self.admission != "fifo" and self.batched_admission:
             raise ValueError("batched_admission stacks FIFO bucket-mates; "
                              "combine it with admission='fifo'")
         if isinstance(self.prefill_buckets, str):
@@ -211,6 +215,10 @@ class RuntimeConfig:
     kv: KVConfig = dataclasses.field(default_factory=KVConfig)
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     sampling: SamplingDefaults = dataclasses.field(default_factory=SamplingDefaults)
+    # speculative decoding (repro/spec/): draft-verify greedy decode.
+    # Disabled by default (SpecConfig.enabled=False); needs a chunkable
+    # (attn/MLA/dense) stack — the engine validates at construction.
+    spec: SpecConfig = dataclasses.field(default_factory=SpecConfig)
     # default generation budget for requests that don't specify one
     max_new_tokens: int = 16
     eos_token: Optional[int] = None
@@ -256,6 +264,7 @@ class RuntimeConfig:
             kv=KVConfig(**d.pop("kv", {})),
             scheduler=SchedulerConfig(**sched),
             sampling=SamplingDefaults(**d.pop("sampling", {})),
+            spec=SpecConfig(**d.pop("spec", {})),
             **d,
         )
 
@@ -301,6 +310,7 @@ class RuntimeConfig:
             n_pages=self.kv.n_pages,
             prefill_chunk=self.scheduler.prefill_chunk,
             prefix_cache=self.kv.prefix_cache,
+            spec=self.spec if self.spec.enabled else None,
         )
 
     def resolve(self, cfg: ModelConfig, prompt_len: Optional[int] = None,
@@ -317,6 +327,8 @@ class RuntimeConfig:
         defrag, and the shared-prefix matching policy."""
         if self.scheduler.admission == "priority":
             admission = PriorityAdmission()
+        elif self.scheduler.admission == "prefix-aware":
+            admission = PrefixAwareAdmission()
         elif self.scheduler.batched_admission:
             admission = BucketBatchedAdmission()
         else:

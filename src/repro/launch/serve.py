@@ -17,9 +17,11 @@ pair it with ``--shared-prefix N`` to give the synthetic workload an
 N-token common system prompt).  ``--batched-admission`` stacks same-bucket
 prompts into one prefill dispatch (slot and paged modes);
 ``--admission priority`` ranks the queue by ``Request.priority`` with
-starvation-free aging; ``--defrag-threshold`` tunes (or ``-1`` disables)
-the pool compaction policy; ``--stream`` prints every token the moment it
-reaches the host.
+starvation-free aging (``prefix-aware`` admits hot-prefix requests
+back-to-back); ``--defrag-threshold`` tunes (or ``-1`` disables) the pool
+compaction policy; ``--spec K`` turns on speculative decoding (K drafted
+tokens per verify dispatch, ``--draft ngram|model``); ``--stream`` prints
+every token the moment it reaches the host.
 
 ``--runtime SPEC`` sidesteps the per-knob flags entirely: SPEC is a JSON
 file (``RuntimeConfig.from_dict``) or a registered preset name
@@ -47,6 +49,7 @@ from repro.api import (
     RuntimeConfig,
     SamplingDefaults,
     SchedulerConfig,
+    SpecConfig,
     list_presets,
     load_runtime,
     serve_batch,
@@ -122,6 +125,12 @@ def _engine_main(llm: LLM, args) -> None:
               f"tokens reused, {m.prefix_cow_forks} CoW forks, "
               f"{m.prefix_evicted_pages} pages evicted, "
               f"{m.prefix_tree_pages} pages cached")
+    if metrics.verify_dispatches:
+        r = metrics.report()
+        print(f"[engine] spec decode: {metrics.spec_accepted}/"
+              f"{metrics.spec_proposed} drafts accepted "
+              f"(rate {r['acceptance_rate']:.2f}) across "
+              f"{metrics.verify_dispatches} verify dispatches")
     if metrics.stacked_prefills:
         print(f"[engine] batched admission: {metrics.prefills} prefills in "
               f"{metrics.prefill_dispatches} dispatches "
@@ -162,6 +171,12 @@ def _runtime_from_args(args) -> RuntimeConfig:
             top_k=args.top_k,
             seed=args.seed,
         ),
+        spec=SpecConfig(
+            enabled=args.spec > 0,
+            k=args.spec or 4,
+            drafter=args.draft,
+            draft_arch=args.draft_arch,
+        ),
         max_new_tokens=args.gen,
         reduced=args.reduced,
     )
@@ -185,9 +200,21 @@ def main():
     ap.add_argument("--batched-admission", action="store_true",
                     help="engine: stack same-bucket prompts into one prefill "
                          "dispatch (slot and paged modes)")
-    ap.add_argument("--admission", default="fifo", choices=["fifo", "priority"],
+    ap.add_argument("--admission", default="fifo",
+                    choices=["fifo", "priority", "prefix-aware"],
                     help="engine: admission ordering (priority = "
-                         "Request.priority with starvation-free aging)")
+                         "Request.priority with starvation-free aging; "
+                         "prefix-aware = requests sharing a hot cached "
+                         "prefix admit back-to-back)")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="engine: speculative decoding with K drafted tokens "
+                         "per verify dispatch (0 = off; greedy lanes only)")
+    ap.add_argument("--draft", default="ngram", choices=["ngram", "model"],
+                    help="spec drafter: model-free prompt-lookup n-grams or "
+                         "a small draft model (repro/spec/)")
+    ap.add_argument("--draft-arch", default=None,
+                    help="spec: draft model architecture (default: a "
+                         "truncated copy of the target)")
     ap.add_argument("--runtime", default=None,
                     help="RuntimeConfig source: a JSON file (from_dict) or a "
                          f"preset name {list_presets()}; overrides the "

@@ -178,12 +178,37 @@ def _decode_qkv(x_t, p, cfg: ModelConfig, pos):
     return q, k, v
 
 
+def _verify_qkv(x, p, cfg: ModelConfig, pos):
+    """W-row verify-window projections + RoPE. x: (B, W, d); pos: (B,) is
+    the window's first absolute position. Returns q, k, v (B, W, H, D)."""
+    b, w, _ = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    q = linear(x, p["wq"], qm, be).reshape(b, w, hq, hd)
+    k = linear(x, p["wk"], qm, be).reshape(b, w, hkv, hd)
+    v = linear(x, p["wv"], qm, be).reshape(b, w, hkv, hd)
+    positions = pos[:, None] + jnp.arange(w)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _verify_valid(pos, w, smax):
+    """(B, W, S) causal mask for the verify window: query row c of lane b
+    sits at absolute position pos[b] + c and may attend kpos <= pos[b] + c
+    — causal within the window, full paged/slot history before it."""
+    row_pos = pos[:, None] + jnp.arange(w)[None, :]
+    return jnp.arange(smax)[None, None, :] <= row_pos[:, :, None]
+
+
 def _decode_attend(qg, k_cache, v_cache, k_scale, v_scale, valid):
     """Single-token attention math over a logically-contiguous KV view.
 
-    qg: (B, 1, G, Hkv, D); k_cache/v_cache: (B, S, Hkv, D) payloads
-    (int8 when scales are given); valid: (B, S) bool.  Shared by the slot
-    path and the paged jnp twin so the two lower to the same graph — that
+    qg: (B, C, G, Hkv, D); k_cache/v_cache: (B, S, Hkv, D) payloads
+    (int8 when scales are given); valid: (B, S) bool, or (B, C, S) for a
+    per-query-row mask (the speculative verify window, where row c may
+    attend one position more than row c-1).  Shared by the slot path and
+    the paged jnp twin so the two lower to the same graph — that
     structural identity is what makes paged serving bitwise
     output-invisible when the gathered view matches the slot cache_len.
     """
@@ -196,7 +221,10 @@ def _decode_attend(qg, k_cache, v_cache, k_scale, v_scale, valid):
                         preferred_element_type=jnp.float32) * (hd ** -0.5)
     if int8_cache:
         scores = scores * k_scale.transpose(0, 2, 1)[:, None, None, :, :]
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    if valid.ndim == 2:
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    else:
+        scores = jnp.where(valid[:, :, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     if int8_cache:
         probs = probs * v_scale.transpose(0, 2, 1)[:, None, None, :, :]
@@ -252,6 +280,55 @@ def attention_decode(x_t, p, cfg: ModelConfig, cache, pos, *, window=None):
         valid = kpos <= pos[:, None]
     out = _decode_attend(qg, k_cache, v_cache, k_scale, v_scale, valid)
     out = out.astype(x_t.dtype).reshape(b, 1, hq * hd)
+    return linear(out, p["wo"], qm, be), new_cache
+
+
+def attention_verify(x, p, cfg: ModelConfig, cache, pos):
+    """W-token speculative verify over a slot cache.
+
+    x: (B, W, d) — the last accepted token plus the drafted window; pos:
+    (B,) absolute position of the window's first row.  Writes all W K/V
+    rows at pos..pos+W-1 (rows past the eventually-accepted prefix are
+    garbage, but the next verify/decode step overwrites them before any
+    query can attend them — the same argument that keeps chunked-prefill
+    padding output-invisible), then attends the slot history under the
+    per-row causal mask.  Row-for-row this lowers to the same dot products
+    as W sequential :func:`attention_decode` calls, which is what makes
+    greedy speculative output bitwise identical to plain decode.
+    Windowed (ring-buffer) local caches are unsupported here — the spec
+    stack gates on ``chunkable(cfg)``.
+    """
+    b, w, _ = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    int8_cache = cfg.kv_cache_dtype == "int8"
+    q, k, v = _verify_qkv(x, p, cfg, pos)
+
+    k_cache, v_cache = cache["k"], cache["v"]
+    smax = k_cache.shape[1]
+
+    def upd(c, t, i):
+        return jax.vmap(
+            lambda cc, tt, ii: jax.lax.dynamic_update_slice_in_dim(cc, tt, ii, axis=0)
+        )(c, t, i)
+
+    new_cache = dict(cache)
+    k_scale = v_scale = None
+    if int8_cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache, v_cache = upd(k_cache, kq, pos), upd(v_cache, vq, pos)
+        k_scale = upd(cache["k_scale"], ks, pos)
+        v_scale = upd(cache["v_scale"], vs, pos)
+        new_cache.update(k_scale=k_scale, v_scale=v_scale)
+    else:
+        k_cache, v_cache = upd(k_cache, k, pos), upd(v_cache, v, pos)
+    new_cache.update(k=k_cache, v=v_cache)
+
+    qg = q.reshape(b, w, hq // hkv, hkv, hd)
+    valid = _verify_valid(pos, w, smax)
+    out = _decode_attend(qg, k_cache, v_cache, k_scale, v_scale, valid)
+    out = out.astype(x.dtype).reshape(b, w, hq * hd)
     return linear(out, p["wo"], qm, be), new_cache
 
 
@@ -348,6 +425,65 @@ def paged_attention_decode(x_t, p, cfg: ModelConfig, cache, pos, tables, *,
         )
         out = out.transpose(0, 2, 1, 3)[:, None]  # (B, 1, G, Hkv, D)
     out = out.astype(x_t.dtype).reshape(b, 1, hq * hd)
+    return linear(out, p["wo"], qm, be), new_cache
+
+
+def _write_pages(tables, pos, w, page_size, active):
+    """Multi-row variant of :func:`_write_page`: (B, W) page/offset pairs
+    for the verify-window rows ``pos + [0, w)``.  Inactive lanes redirect
+    to the reserved trash page 0 for the same pool-safety reason."""
+    idx = pos[:, None] + jnp.arange(w)[None, :]                # (B, W)
+    pg = jnp.take_along_axis(tables, idx // page_size, axis=1, mode="clip")
+    off = idx % page_size
+    if active is not None:
+        pg = jnp.where(active[:, None], pg, 0)
+        off = jnp.where(active[:, None], off, 0)
+    return pg, off
+
+
+def paged_attention_verify(x, p, cfg: ModelConfig, cache, pos, tables, *,
+                           active=None):
+    """W-token speculative verify over this layer's page pools.
+
+    The paged twin of :func:`attention_verify`: scatters the window's W
+    K/V rows through the block table (engine capacity checks reserve the
+    overshoot pages up front) and attends the gathered logical view under
+    the per-row causal mask.  Always the jnp gather twin — the Pallas
+    decode kernel is single-query, and the bitwise greedy contract is
+    anchored to the gather path.
+    """
+    b, w, _ = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    int8_cache = "kp_scale" in cache
+    q, k, v = _verify_qkv(x, p, cfg, pos)
+
+    kp, vp = cache["kp"], cache["vp"]
+    page_size = kp.shape[1]
+    pg, off = _write_pages(tables, pos, w, page_size, active)
+
+    new_cache = dict(cache)
+    kps = vps = None
+    if int8_cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        kp, vp = kp.at[pg, off].set(kq), vp.at[pg, off].set(vq)
+        kps = cache["kp_scale"].at[pg, off].set(ks)
+        vps = cache["vp_scale"].at[pg, off].set(vs)
+        new_cache.update(kp_scale=kps, vp_scale=vps)
+    else:
+        kp = kp.at[pg, off].set(k.astype(kp.dtype))
+        vp = vp.at[pg, off].set(v.astype(vp.dtype))
+    new_cache.update(kp=kp, vp=vp)
+
+    qg = q.reshape(b, w, hq // hkv, hkv, hd)
+    smax = tables.shape[1] * page_size
+    k_all, v_all = _gather_pages(kp, tables), _gather_pages(vp, tables)
+    ks_all = _gather_pages(kps, tables) if int8_cache else None
+    vs_all = _gather_pages(vps, tables) if int8_cache else None
+    valid = _verify_valid(pos, w, smax)
+    out = _decode_attend(qg, k_all, v_all, ks_all, vs_all, valid)
+    out = out.astype(x.dtype).reshape(b, w, hq * hd)
     return linear(out, p["wo"], qm, be), new_cache
 
 
@@ -497,7 +633,9 @@ def _mla_attend(q_nope, q_rope, ckv_view, kr_view, pos, p, cfg: ModelConfig):
 
     ckv_view: (B, S, kv_lora_rank); kr_view: (B, S, rope_dim).  Shared by
     the slot path and the paged gather twin (same structural-identity
-    argument as ``_decode_attend``). Returns (B, 1, H * v_head_dim).
+    argument as ``_decode_attend``).  q_nope/q_rope may carry C > 1 query
+    rows (the speculative verify window); row c then attends positions
+    <= pos + c. Returns (B, C, H * v_head_dim).
     """
     m, h = cfg.mla, cfg.n_heads
     b = q_nope.shape[0]
@@ -511,14 +649,20 @@ def _mla_attend(q_nope, q_rope, ckv_view, kr_view, pos, p, cfg: ModelConfig):
                          preferred_element_type=jnp.float32)
     scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     smax = ckv_view.shape[1]
-    valid = jnp.arange(smax)[None, :] <= pos[:, None]
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    c = q_nope.shape[1]
+    if c == 1:
+        valid = jnp.arange(smax)[None, :] <= pos[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    else:
+        row_pos = pos[:, None] + jnp.arange(c)[None, :]
+        valid = jnp.arange(smax)[None, None, :] <= row_pos[:, :, None]
+        scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bchs,bsl->bchl", probs.astype(ckv_view.dtype), ckv_view,
                          preferred_element_type=jnp.float32)
     w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
     out = jnp.einsum("bchl,lhv->bchv", out_lat, w_uv.astype(jnp.float32))
-    return out.reshape(b, 1, h * m.v_head_dim)
+    return out.reshape(b, c, h * m.v_head_dim)
 
 
 def mla_decode(x_t, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
@@ -538,6 +682,28 @@ def mla_decode(x_t, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
 
     out = _mla_attend(q_nope, q_rope, ckv_cache, krope_cache, pos, p, cfg)
     out = out.astype(x_t.dtype)
+    return linear(out, p["wo"], qm, be), (ckv_cache, krope_cache)
+
+
+def mla_verify(x, p, cfg: ModelConfig, ckv_cache, krope_cache, pos):
+    """W-token speculative verify over the slot latent caches (the MLA
+    twin of :func:`attention_verify`; same garbage-row-overwrite and
+    row-for-row bitwise arguments)."""
+    m = cfg.mla
+    b, w, _ = x.shape
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    positions = pos[:, None] + jnp.arange(w)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(x, p, cfg, positions)
+
+    ckv_cache = jax.vmap(
+        lambda c, t, i: jax.lax.dynamic_update_slice_in_dim(c, t, i, axis=0)
+    )(ckv_cache, c_kv, pos)
+    krope_cache = jax.vmap(
+        lambda c, t, i: jax.lax.dynamic_update_slice_in_dim(c, t, i, axis=0)
+    )(krope_cache, k_rope.reshape(b, w, m.qk_rope_head_dim), pos)
+
+    out = _mla_attend(q_nope, q_rope, ckv_cache, krope_cache, pos, p, cfg)
+    out = out.astype(x.dtype)
     return linear(out, p["wo"], qm, be), (ckv_cache, krope_cache)
 
 
@@ -566,6 +732,31 @@ def mla_paged_decode(x_t, p, cfg: ModelConfig, cache, pos, tables, *,
     kr_view = _gather_pages(krp, tables)
     out = _mla_attend(q_nope, q_rope, ckv_view, kr_view, pos, p, cfg)
     out = out.astype(x_t.dtype)
+    return linear(out, p["wo"], qm, be), new_cache
+
+
+def mla_paged_verify(x, p, cfg: ModelConfig, cache, pos, tables, *,
+                     active=None):
+    """W-token speculative verify over the latent page pools (the paged
+    twin of :func:`mla_verify`; gather path only, like
+    :func:`mla_paged_decode`)."""
+    m = cfg.mla
+    b, w, _ = x.shape
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    positions = pos[:, None] + jnp.arange(w)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(x, p, cfg, positions)
+
+    ckvp, krp = cache["ckvp"], cache["krp"]
+    pg, off = _write_pages(tables, pos, w, ckvp.shape[1], active)
+    ckvp = ckvp.at[pg, off].set(c_kv.astype(ckvp.dtype))
+    krp = krp.at[pg, off].set(
+        k_rope.reshape(b, w, m.qk_rope_head_dim).astype(krp.dtype))
+    new_cache = dict(cache, ckvp=ckvp, krp=krp)
+
+    ckv_view = _gather_pages(ckvp, tables)
+    kr_view = _gather_pages(krp, tables)
+    out = _mla_attend(q_nope, q_rope, ckv_view, kr_view, pos, p, cfg)
+    out = out.astype(x.dtype)
     return linear(out, p["wo"], qm, be), new_cache
 
 

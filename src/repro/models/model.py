@@ -469,6 +469,49 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, active=None):
     return logits, new_cache
 
 
+def verify_step(params, cfg: ModelConfig, tokens, cache, active=None):
+    """W tokens for every sequence in one dispatch (speculative verify).
+
+    tokens: (B, W) int32 — the last accepted token followed by W-1 drafted
+    tokens; row c is processed at absolute position ``pos + c`` (causal
+    within the window, attending the full slot/paged history before it).
+    All W K/V rows are written; the caller is responsible for treating
+    rows past the accepted prefix as garbage (they are overwritten before
+    any later query attends them).
+
+    Unlike :func:`decode_step`, ``cache["pos"]`` is returned UNCHANGED —
+    the accept length is only known after comparing logits, so the
+    speculative wrapper advances pos by ``accepted + 1`` itself.
+
+    Only ``chunkable(cfg)`` stacks are supported (attn / MLA / dense FFN;
+    no MoE, recurrent, local-attn, or encoder-decoder blocks).
+
+    Returns (logits (B, W, V), new cache with pos unchanged)."""
+    pos = cache["pos"]
+    tables = cache.get("block_tables")
+    x = embed(tokens, params["embed"])
+
+    new_cache = dict(cache)
+    for i, p in enumerate(params.get("head_blocks", [])):
+        x, c = tfm.apply_block_verify(x, p, "dense_ffn_layer", cfg, cache["head_blocks"][i], pos,
+                                      tables=tables, active=active)
+        new_cache["head_blocks"] = list(new_cache.get("head_blocks", []))
+        new_cache["head_blocks"][i] = c
+    if params.get("blocks", ()):
+        x, nb = tfm.scan_periods_verify(x, params["blocks"], cache["blocks"], cfg, pos,
+                                        tables=tables, active=active)
+        new_cache["blocks"] = nb
+    lead, n_periods, tail_kinds = tfm.layer_layout(cfg)
+    for i, p in enumerate(params.get("tail_blocks", [])):
+        x, c = tfm.apply_block_verify(x, p, tail_kinds[i], cfg, cache["tail_blocks"][i], pos,
+                                      tables=tables, active=active)
+        new_cache["tail_blocks"] = list(new_cache.get("tail_blocks", []))
+        new_cache["tail_blocks"][i] = c
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(h, _head_table(params, cfg))
+    return logits, new_cache
+
+
 def _decode_with_cross(x_t, params, cfg, cache, pos):
     pattern = cfg.block_pattern
 

@@ -226,6 +226,61 @@ def apply_block_decode(x_t, p, kind: str, cfg: ModelConfig, cache, pos,
     return x_t, cache
 
 
+def apply_block_verify(x, p, kind: str, cfg: ModelConfig, cache, pos,
+                       tables=None, active=None):
+    """W-token speculative verify through one block.
+
+    The verify twin of :func:`apply_block_decode`, restricted to the
+    row-independent kinds (``chunkable(cfg)``: attn / mla / dense FFN) —
+    MoE is excluded because expert capacity depends on dispatch width, so
+    a (B, W) routed FFN could drop different tokens than W sequential
+    (B, 1) decodes; recurrent and windowed kinds carry per-step state.
+    """
+    kind = effective_kind(kind, cfg)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind in ("attn", "dense_ffn_layer"):
+        if "kp" in cache:
+            a, cache = attn.paged_attention_verify(h, p["attn"], cfg, cache, pos,
+                                                   tables, active=active)
+        else:
+            a, cache = attn.attention_verify(h, p["attn"], cfg, cache, pos)
+        x = x + a
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
+    elif kind == "mla":
+        if "ckvp" in cache:
+            a, cache = attn.mla_paged_verify(h, p["attn"], cfg, cache, pos,
+                                             tables, active=active)
+        else:
+            a, (ckv, kr) = attn.mla_verify(h, p["attn"], cfg, cache["ckv"], cache["kr"], pos)
+            cache = {**cache, "ckv": ckv, "kr": kr}
+        x = x + a
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)
+    else:
+        raise ValueError(f"speculative verify unsupported for block kind {kind!r}")
+    return x, cache
+
+
+def scan_periods_verify(x, stacked_params, stacked_cache, cfg: ModelConfig, pos,
+                        tables=None, active=None):
+    pattern = cfg.block_pattern
+
+    def period_fn(carry, xs):
+        h = carry
+        slot_params, slot_cache = xs
+        new_cache = []
+        for s, kind in enumerate(pattern):
+            h, c = apply_block_verify(h, slot_params[s], kind, cfg, slot_cache[s], pos,
+                                      tables=tables, active=active)
+            new_cache.append(c)
+        return h, tuple(new_cache)
+
+    x, new_cache = jax.lax.scan(period_fn, x, (stacked_params, stacked_cache),
+                                unroll=cfg.scan_unroll)
+    return x, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Layer layout: periods + tail
 # ---------------------------------------------------------------------------

@@ -199,6 +199,23 @@ class PageManager:
             return None
         return self.cow_fork(lane, idx)
 
+    def ensure_writable_range(self, lane: int, start: int, n: int
+                              ) -> "list[tuple[int, int]]":
+        """CoW guard before a lane writes rows ``start .. start + n - 1``
+        (the speculative verify window): fork every shared page the range
+        covers.  Returns the ``(src, dst)`` copies the caller must apply
+        on device (empty in the common all-private case)."""
+        if n <= 0:
+            return []
+        held = self.lane_pages[lane]
+        moves = []
+        first = start // self.page_size
+        last = (start + n - 1) // self.page_size
+        for idx in range(first, min(last + 1, len(held))):
+            if self.refcount[held[idx]] > 1:
+                moves.append(self.cow_fork(lane, idx))
+        return moves
+
     def set_length(self, lane: int, tokens: int) -> None:
         self.lengths[lane] = tokens
 

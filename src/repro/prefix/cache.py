@@ -21,12 +21,16 @@ Exactness contract (what keeps warm == cold bitwise): shared pages hold
 rows written by (chunked) prefill, which this repo already pins down as
 bitwise-equal to one-shot prefill; adopting them and resuming the suffix
 through the same chunk step therefore reproduces the cold computation
-exactly.  For int8 pools the suffix chunk *attends dequantized pages*, so
-the fork shortcut (recompute just the final token of a fully-cached
-prompt) would change the attention split versus a cold chunked prefill —
-``allow_fork=False`` caps int8 matches one page short of a full-prompt hit
-instead, trading at most ``page_size`` recomputed tokens for bitwise
-parity.
+exactly.  int8 pools need one extra structural condition: the chunk step
+*attends dequantized pages* while one-shot prefill attends raw bf16 K/V,
+so cold and warm admissions must take the SAME path for their graphs to
+match.  The engine guarantees this by forcing every admission on an
+int8 + prefix pool through the chunk step (any prompt length; see
+``ServingEngine._should_chunk_len``), which lifts the old one-page cap:
+full-prompt hits CoW-fork the boundary page and resume at the final
+prompt token (``allow_fork=True``).  The re-prefilled boundary row
+quantizes to the same bytes a cold chunked prefill wrote (row-independent
+projections + deterministic quantize), so warm stays bitwise cold.
 """
 
 from __future__ import annotations

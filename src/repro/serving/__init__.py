@@ -18,6 +18,7 @@ from repro.serving.policies import (
     FIFOAdmission,
     NeverDefrag,
     NoPrefixReuse,
+    PrefixAwareAdmission,
     PrefixPolicy,
     PriorityAdmission,
     SharedPrefix,
@@ -43,6 +44,7 @@ __all__ = [
     "NoPrefixReuse",
     "PageManager",
     "PagedCache",
+    "PrefixAwareAdmission",
     "PrefixCache",
     "PrefixPolicy",
     "PrefixTree",

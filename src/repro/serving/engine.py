@@ -98,6 +98,8 @@ from repro.serving.request import Request, RequestState
 from repro.serving.sampling import SamplingParams, request_key, sample_tokens
 from repro.serving.scheduler import Scheduler
 from repro.serving.slots import SlotCache
+from repro.spec.config import SpecConfig
+from repro.spec.verify import jitted_verify
 
 RECURRENT_KINDS = frozenset({"rglru", "mlstm", "slstm"})
 # effective kinds whose KV lands in page pools (models/kvcache.py); a
@@ -254,6 +256,11 @@ class EngineConfig:
     # prefill only the uncached suffix.  Requires a chunkable stack
     # (attn/MLA/dense): the suffix resumes through the chunk step.
     prefix_cache: bool = False
+    # speculative decoding (repro/spec/): draft k tokens per lane, verify
+    # them in ONE batched dispatch, greedy-accept in-jit.  Requires a
+    # chunkable stack (the verify window reuses the chunked-prefill
+    # row-independence contract).  None / enabled=False = plain decode.
+    spec: Optional[SpecConfig] = None
 
     @staticmethod
     def for_workload(prompt_len: int, gen_tokens: int, n_slots: int = 4,
@@ -343,13 +350,13 @@ class ServingEngine:
                         "(attn/MLA/dense); "
                         f"got {sorted(stack_kinds(cfg))}")
                 self._chunk_len = engine_cfg.prefill_chunk or ps
-                # int8 pools: the full-prompt CoW-fork shortcut would change
-                # the suffix chunk's dequantized-prefix attention split vs a
-                # cold chunked prefill — cap matches a page short instead,
-                # keeping warm bitwise-equal to cold (cache.py rationale)
+                # full-prompt hits CoW-fork the boundary page and resume at
+                # the final prompt token — int8 pools included: every
+                # admission on an int8 + prefix pool is forced through the
+                # chunk step (``_should_chunk_len``), so cold and warm runs
+                # attend the same dequantized pages and stay graph-identical
                 self.prefix: Optional[PrefixCache] = PrefixCache(
-                    self.store.manager, ps,
-                    allow_fork=cfg.kv_cache_dtype != "int8")
+                    self.store.manager, ps, allow_fork=True)
             else:
                 self.prefix = None
             self._chunk_fn = (
@@ -368,6 +375,33 @@ class ServingEngine:
         self._admit_fn = (None if self.paged
                           else _jitted_admit(cfg, engine_cfg.cache_len))
         self._decode_sample = _jitted_decode_sample(cfg)
+
+        # speculative decoding (repro/spec/): verify jit + drafter.  The
+        # verify window needs every row-independent property the chunked
+        # prefill relies on, so the same ``chunkable`` gate applies.
+        spec = engine_cfg.spec
+        self._spec = spec if (spec is not None and spec.enabled) else None
+        if self._spec is not None:
+            if not chunkable(cfg):
+                raise ValueError(
+                    f"{cfg.name}: speculative decoding needs a stack of "
+                    "strictly row-independent kinds (attn/MLA/dense) — the "
+                    "k-token verify window reuses the chunked-prefill "
+                    f"contract; got {sorted(stack_kinds(cfg))}")
+            from repro.spec import make_drafter
+
+            self._verify_fn = jitted_verify(cfg, self._spec.width)
+            self._drafter = make_drafter(
+                self._spec, cfg, n, engine_cfg.cache_len,
+                tree=self.prefix.tree if self.prefix is not None else None)
+        else:
+            self._verify_fn = None
+            self._drafter = None
+
+        # prefix-aware admission orders the queue by adopted-page signature;
+        # the policy is engine-agnostic, so the engine hands it the lookup
+        if hasattr(self.policies.admission, "bind"):
+            self.policies.admission.bind(self._admission_prefix_sig)
 
         # per-lane state. ``_tokens`` may be a DEVICE array: between sync
         # points sampled tokens feed the next decode device-to-device (see
@@ -398,7 +432,10 @@ class ServingEngine:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        need = len(prompt) + max_new_tokens
+        # speculative decoding writes up to k rows past the accepted
+        # position (the verify window's overshoot), so the budget check and
+        # the paged reservations below all carry the extra rows
+        need = len(prompt) + max_new_tokens + self._spec_overshoot
         if need > self.engine_cfg.cache_len + 1:
             raise ValueError(
                 f"request needs {need} cache positions but cache_len="
@@ -450,6 +487,8 @@ class ServingEngine:
         self._plan_cache.pop(req.req_id, None)  # admitted: plan consumed
         req.append_token(tok)  # stamps TTFT
         self.metrics.prefills += 1
+        if self._drafter is not None:
+            self._drafter.admit(slot, req.prompt)
         self._tokens = jnp.asarray(self._tokens).at[slot].set(tok)
         self._temps[slot] = s.temperature
         self._topk[slot] = s.top_k
@@ -567,7 +606,16 @@ class ServingEngine:
 
     def _should_chunk_len(self, prompt_len: int) -> bool:
         c = self.engine_cfg.prefill_chunk
-        if not self.paged or c is None or prompt_len <= c:
+        force = self.prefix is not None and self.cfg.kv_cache_dtype == "int8"
+        if force:
+            # int8 pools attend *dequantized* pages on the chunk path but
+            # raw bf16 K/V on the one-shot prefill path; forcing EVERY
+            # admission (cold or warm, any length) through the chunk step
+            # makes cold and warm runs graph-identical, which is what lets
+            # full-prompt prefix hits stay dequant-consistent on int8
+            # pools (see prefix/cache.py)
+            c = self._chunk_len
+        if not self.paged or c is None or (prompt_len <= c and not force):
             return False
         # the padded final chunk must stay inside the lane's block table
         return _roundup(prompt_len, c) <= self.store.max_pages * self.engine_cfg.page_size
@@ -575,18 +623,26 @@ class ServingEngine:
     def _should_chunk(self, req: Request) -> bool:
         return self._should_chunk_len(req.prompt_len)
 
+    @property
+    def _spec_overshoot(self) -> int:
+        """Extra cache rows the verify window may write past the accepted
+        position (rejected drafts' K/V, overwritten next step)."""
+        return self._spec.k if self._spec is not None else 0
+
     def _admit_rows(self, prompt_len: int) -> int:
         """Cache rows the admission itself touches (chunk padding or the
         page-rounded prefill bucket)."""
         if self._should_chunk_len(prompt_len):
-            return _roundup(prompt_len, self.engine_cfg.prefill_chunk)
+            return _roundup(prompt_len, self._chunk_len)
         return self._single_len(self._bucket_len(prompt_len))
 
     def _worst_case_rows(self, prompt_len: int, max_new_tokens: int) -> int:
         """Rows a request reserves: its admission footprint or prompt +
-        generation budget, whichever is larger (capped at the block-table
-        capacity, which ``add_request``'s cache_len check already bounds)."""
-        worst = max(self._admit_rows(prompt_len), prompt_len + max_new_tokens)
+        generation budget (+ the speculative overshoot), whichever is
+        larger (capped at the block-table capacity, which ``add_request``'s
+        cache_len check already bounds)."""
+        worst = max(self._admit_rows(prompt_len),
+                    prompt_len + max_new_tokens + self._spec_overshoot)
         return min(worst, self.store.max_pages * self.engine_cfg.page_size)
 
     def _reserve_tokens(self, req: Request) -> int:
@@ -599,7 +655,8 @@ class ServingEngine:
         generation budget, whichever is larger."""
         c = self._chunk_len
         suffix = plan.resume + _roundup(req.prompt_len - plan.resume, c)
-        return max(suffix, req.prompt_len + req.max_new_tokens)
+        return max(suffix,
+                   req.prompt_len + req.max_new_tokens + self._spec_overshoot)
 
     def _prefix_plan(self, req: Request):
         """The admission's prefix decision (None = admit cold).  Plans
@@ -692,6 +749,16 @@ class ServingEngine:
             np.asarray(mgr.block_tables[slot]),
             *common,
         )
+
+    def _admission_prefix_sig(self, req: Request):
+        """Adopted-page signature for prefix-aware admission ordering: two
+        waiting requests with the same signature would alias the same
+        cached pages, so admitting them back-to-back keeps those pages
+        hot.  None = cold admission (no cached prefix)."""
+        if self.prefix is None:
+            return None
+        plan = self._prefix_plan(req)
+        return tuple(plan.pages) if plan is not None else None
 
     # -- shared-prefix bookkeeping ---------------------------------------
     def _record_miss(self, req: Request) -> None:
@@ -847,7 +914,11 @@ class ServingEngine:
         occupancy = len(self.scheduler.running) + len(self.scheduler.chunking)
         self.metrics.peak_running = max(self.metrics.peak_running, occupancy)
 
-        if self.scheduler.running:
+        if self.scheduler.running and self._spec is not None and self._spec_ready():
+            t0 = time.perf_counter()
+            self._spec_decode(finished)
+            self.metrics.decode_s += time.perf_counter() - t0
+        elif self.scheduler.running:
             t0 = time.perf_counter()
             running = self.scheduler.running
             if self.paged and self._has_paged_kinds:
@@ -894,6 +965,100 @@ class ServingEngine:
                 self.metrics.defrag_pages_moved += moved
         return finished
 
+    # ------------------------------------------------------------------
+    # Speculative decoding (repro/spec/)
+    # ------------------------------------------------------------------
+    def _spec_ready(self) -> bool:
+        """Speculate only when every running lane is greedy — the fused
+        accept rule is exact for argmax; a mixed batch falls back to plain
+        decode wholesale (no per-lane mode split inside one dispatch)."""
+        return all(r.sampling.greedy for r in self.scheduler.running.values())
+
+    def _spec_decode(self, finished: list[Request]) -> None:
+        """One draft-verify round over every running lane.
+
+        Host-synchronous by design: the drafters read each lane's full
+        token history and the accept length gates eviction, so pending
+        plain-decode tokens are flushed first and this step's tokens land
+        on the host immediately.  The verify dispatch itself stays
+        traced-once — the window is always ``k + 1`` wide; per-lane draft
+        counts and acceptance lengths are data (``n_draft`` mask, in-jit
+        cumprod), never shapes.
+        """
+        spec = self._spec
+        if self._pending:
+            self._flush(finished)
+        running = dict(self.scheduler.running)
+        if not running:
+            return
+        # np.array (not asarray): a device array materializes as a read-only
+        # view, and the accept loop below writes per-lane feed tokens
+        self._tokens = np.array(self._tokens)
+        n = self.engine_cfg.n_slots
+        w = spec.width
+        slots = sorted(running)
+        histories = [running[s].prompt + running[s].output_tokens for s in slots]
+        proposals = self._drafter.propose(slots, histories)
+
+        toks = np.zeros((n, w), np.int32)
+        n_draft = np.zeros((n,), np.int32)
+        active = np.zeros((n,), bool)
+        for slot, hist, props in zip(slots, histories, proposals):
+            req = running[slot]
+            # never draft past the lane's generation budget: the verify
+            # row for draft j emits token j+1, so at most budget-1 drafts
+            allow = max(0, min(spec.k,
+                               req.max_new_tokens - len(req.output_tokens) - 1))
+            props = [int(t) for t in props[:allow]]
+            toks[slot, 0] = hist[-1]
+            if props:
+                toks[slot, 1:1 + len(props)] = props
+            n_draft[slot] = len(props)
+            active[slot] = True
+            self.metrics.spec_proposed += len(props)
+
+        mgr = self.store.manager if self.paged else None
+        base_row = {}
+        if self.paged and self._has_paged_kinds:
+            for slot in slots:
+                row = int(mgr.lengths[slot])
+                base_row[slot] = row
+                if self.prefix is not None:
+                    # the whole verify window must be privately writable
+                    for move in mgr.ensure_writable_range(slot, row, w):
+                        self._cow(slot, move)
+                mgr.ensure(slot, row + w)
+            self.store.sync_tables()
+            self.metrics.peak_pages_used = max(
+                self.metrics.peak_pages_used, mgr.pages_in_use)
+
+        self.store.cache, targets, accepted = self._verify_fn(
+            self.params, self.store.cache, toks, n_draft, active)
+        self.metrics.verify_dispatches += 1
+        self.metrics.decode_steps += 1
+        targets = np.asarray(targets)
+        accepted = np.asarray(accepted)
+
+        for slot in slots:
+            req = running[slot]
+            a = int(accepted[slot])
+            # emit accepted drafts + the bonus/correction row, stopping at
+            # EOS / budget exactly like the per-step plain-decode loop
+            emitted = 0
+            for j in range(a + 1):
+                req.append_token(int(targets[slot, j]))
+                emitted += 1
+                if self._should_evict(req):
+                    break
+            self.metrics.spec_accepted += min(emitted, a)
+            if self.paged and self._has_paged_kinds:
+                # rollback = block-table truncate: rejected rows' pages
+                # stay reserved to the lane and are overwritten in place
+                mgr.set_length(slot, base_row[slot] + emitted)
+            self._tokens[slot] = req.output_tokens[-1]
+            if self._should_evict(req):
+                self._evict(slot, finished)
+
     def _should_evict(self, req: Request) -> bool:
         return self.policies.eviction.should_evict(req)
 
@@ -933,6 +1098,8 @@ class ServingEngine:
     def _evict(self, slot: int, finished: list[Request]) -> None:
         req = self.scheduler.release(slot)
         self.store.free(slot)
+        if self._drafter is not None:
+            self._drafter.release(slot)
         self._greedy[slot] = True  # free lanes sample nothing
         self.metrics.record_finished(req)
         finished.append(req)

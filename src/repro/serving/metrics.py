@@ -54,6 +54,13 @@ class EngineMetrics:
     prefix_cow_forks: int = 0
     prefix_evicted_pages: int = 0
     prefix_tree_pages: int = 0
+    # speculative decoding (repro/spec/; all 0 when spec is off): drafted
+    # tokens dispatched for verification, drafts accepted, and verify
+    # dispatches (each verify also counts once in ``decode_steps`` — the
+    # tok/s win is generated_tokens growing faster than decode_steps)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    verify_dispatches: int = 0
 
     def begin(self) -> None:
         if not self.start_time:
@@ -108,6 +115,12 @@ class EngineMetrics:
             "prefix_cow_forks": self.prefix_cow_forks,
             "prefix_evicted_pages": self.prefix_evicted_pages,
             "prefix_tree_pages": self.prefix_tree_pages,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "verify_dispatches": self.verify_dispatches,
+            "acceptance_rate": round(
+                self.spec_accepted / self.spec_proposed, 4)
+            if self.spec_proposed else 0.0,
         }
 
     def format_report(self) -> str:

@@ -141,6 +141,59 @@ class BucketBatchedAdmission:
         return group
 
 
+class PrefixAwareAdmission:
+    """Admit requests sharing a hot radix-tree prefix back-to-back.
+
+    After each admission the policy remembers the admitted request's
+    adopted-page signature (the cached pages its prefix plan aliases);
+    the next poll prefers a waiting request with the SAME signature, so
+    a burst of shared-prefix requests admits consecutively while the
+    trunk pages are warm (and before pool pressure could evict them)
+    instead of interleaving with cold prompts in arrival order.
+
+    Starvation-bounded: a skipped head accrues patience, and after
+    ``patience`` consecutive skip-aheads the policy degrades to plain
+    FIFO until the head admits.  The engine injects the signature lookup
+    via ``bind`` (policies stay engine-agnostic); unbound, or with no
+    prefix cache, this IS FIFO.  One request per dispatch; ordering only
+    — which requests admit and what they compute is unchanged, so the
+    bitwise serving contract is untouched.
+    """
+
+    def __init__(self, patience: int = 4):
+        if patience < 1:
+            raise ValueError("patience must be >= 1")
+        self.patience = patience
+        self._sig_of = None
+        self._last_sig = None
+        self._skips = 0
+
+    def bind(self, sig_of) -> None:
+        """``sig_of(req) -> hashable | None``: the request's adopted-page
+        signature (None = cold)."""
+        self._sig_of = sig_of
+
+    def next_group(self, waiting, max_group, admit_ok, bucket_of):
+        if not waiting:
+            return []
+
+        def admit(i):
+            if not admit_ok(waiting[i]):
+                return []
+            self._last_sig = (self._sig_of(waiting[i])
+                              if self._sig_of is not None else None)
+            self._skips = 0 if i == 0 else self._skips + 1
+            return [i]
+
+        if (self._sig_of is None or self._last_sig is None
+                or self._skips >= self.patience):
+            return admit(0)
+        for i in range(len(waiting)):
+            if self._sig_of(waiting[i]) == self._last_sig:
+                return admit(i)
+        return admit(0)
+
+
 class PriorityAdmission:
     """Highest effective priority first, starvation-free through aging.
 

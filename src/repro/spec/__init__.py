@@ -1,0 +1,27 @@
+"""Speculative decoding: draft-verify loop for the serving engine.
+
+``k`` drafted tokens per lane are verified in ONE batched model dispatch
+(the paper's throughput-per-dispatch argument applied to serving: more
+byte-size GEMM work per issued operation), with greedy accept fused into
+the verify jit so speculative output stays bitwise identical to plain
+decode.  See ``verify.py`` for the accept rule and the exactness
+argument, ``ngram.py`` / ``draft_model.py`` for the two drafters.
+"""
+
+from repro.spec.config import SpecConfig
+from repro.spec.ngram import NgramDrafter
+from repro.spec.verify import jitted_verify
+
+
+def make_drafter(spec: SpecConfig, target_cfg, n_slots: int, cache_len: int,
+                 tree=None):
+    """Build the configured drafter (imports the draft model lazily so the
+    ngram path never touches model-init code)."""
+    if spec.drafter == "ngram":
+        return NgramDrafter(spec, tree=tree)
+    from repro.spec.draft_model import DraftModelDrafter
+
+    return DraftModelDrafter(spec, target_cfg, n_slots, cache_len)
+
+
+__all__ = ["SpecConfig", "NgramDrafter", "jitted_verify", "make_drafter"]

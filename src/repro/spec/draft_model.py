@@ -1,0 +1,174 @@
+"""Draft-model drafter: a small transformer proposes, the target verifies.
+
+The draft model runs its own slot cache, aligned lane-for-lane with the
+engine's: row ``i`` of a lane's draft cache was written by feeding token
+``i`` of that lane's sequence.  Rather than being told accept/reject
+results, the drafter *re-derives* validity at propose time by comparing
+the tokens it actually fed (``_fed``) against the lane's true history —
+the longest common prefix is the count of valid draft-cache rows, and
+the device position is rolled back to it.  After a verify with ``a``
+accepted drafts the catch-up (history beyond the common prefix) is
+always 1 token (partial accept / rejection: the correction replaces the
+first bad draft) or 2 (full accept: the bonus token plus the next input
+— row ``base + k - 1`` was the last written), so steady-state cost per
+spec step is at most one catch-up dispatch + ``k`` draft dispatches,
+each batched across all proposing lanes.
+
+The drafter is engine-independent: it owns lru-cached jits built
+directly on ``model_lib`` (prefill + scatter for admit, decode + argmax
+for draft steps), so ``repro.spec`` never imports ``repro.serving``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.spec.config import SpecConfig
+
+
+def draft_config(target: ModelConfig, spec: SpecConfig) -> ModelConfig:
+    """Derive the draft architecture.
+
+    ``spec.draft_arch`` names a registry config (reduced to smoke size,
+    vocab forced to the target's so proposals index the same token
+    space); otherwise the target is truncated to ``spec.draft_layers``
+    layers — always same-vocab, and same-family by construction.
+    """
+    if spec.draft_arch is not None:
+        cfg = reduced(get_config(spec.draft_arch))
+        cfg = cfg.with_(vocab_size=target.vocab_size)
+    else:
+        lead = target.moe.first_k_dense if target.moe is not None else 0
+        period = target.pattern_period
+        cfg = target.with_(n_layers=lead + period * max(
+            1, (spec.draft_layers - lead) // period))
+    return cfg.with_(remat=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_draft_admit(cfg: ModelConfig, cache_len: int):
+    """Prefill one prompt into lane ``slot`` of the draft slot cache (no
+    sampling — the *target* supplies t0; the draft only needs the rows)."""
+    from repro.serving.slots import scatter_lane
+
+    def admit(pool, params, tokens, lengths, slot, axes_flat):
+        _logits, single = model_lib.prefill(params, cfg, {"tokens": tokens},
+                                            cache_len, lengths=lengths)
+        return scatter_lane(pool, single, slot, axes_flat)
+
+    return jax.jit(admit, donate_argnums=(0,), static_argnums=(5,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_draft_step(cfg: ModelConfig):
+    """One greedy draft decode over the full slot batch (argmax only)."""
+
+    def step(params, tokens, cache, active):
+        logits, cache = model_lib.decode_step(params, cfg, tokens, cache, active)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
+class DraftModelDrafter:
+    name = "model"
+
+    def __init__(self, spec: SpecConfig, target_cfg: ModelConfig,
+                 n_slots: int, cache_len: int):
+        from repro.serving.slots import SlotCache
+
+        self.spec = spec
+        self.cfg = draft_config(target_cfg, spec)
+        self.cache_len = cache_len
+        self.params = model_lib.init_params(
+            self.cfg, jax.random.PRNGKey(spec.draft_seed))
+        self.store = SlotCache(self.cfg, n_slots, cache_len)
+        # tokens fed to the draft cache per lane: row i <- _fed[slot][i]
+        self._fed: dict[int, list[int]] = {}
+
+    # -- lane lifecycle -----------------------------------------------------
+    def admit(self, slot: int, history) -> None:
+        prompt = [int(t) for t in history]
+        admit = _jitted_draft_admit(self.cfg, self.cache_len)
+        tokens = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
+        lengths = jnp.asarray([len(prompt)], jnp.int32)
+        self.store.cache = admit(self.store.cache, self.params, tokens,
+                                 lengths, jnp.int32(slot),
+                                 self.store._axes_flat)
+        self._fed[slot] = prompt
+
+    def release(self, slot: int) -> None:
+        self._fed.pop(slot, None)
+        self.store.free(slot)
+
+    # -- proposal -----------------------------------------------------------
+    def _sync_pos(self, cache, slots):
+        """Pin device positions to the fed-token ledger.  ``decode_step``
+        zeroes inactive lanes' pos, so every dispatch re-anchors from the
+        host ledger instead of trusting the previous dispatch."""
+        p = np.zeros((self.store.n_slots,), np.int32)
+        for s in slots:
+            p[s] = len(self._fed[s])
+        return {**cache, "pos": jnp.asarray(p)}
+
+    def propose(self, slots, histories) -> list[list[int]]:
+        """Batched: catch-up dispatches (usually <= 1) + k draft dispatches."""
+        step = _jitted_draft_step(self.cfg)
+        n = self.store.n_slots
+        cache = self.store.cache
+
+        pending = {}
+        for slot, hist in zip(slots, histories):
+            hist = [int(t) for t in hist]
+            fed = self._fed.get(slot, [])
+            common = 0
+            for a, b in zip(fed, hist):
+                if a != b:
+                    break
+                common += 1
+            # rows beyond the common prefix were written from rejected
+            # drafts — roll the lane back and feed what's missing
+            self._fed[slot] = hist[:common]
+            pending[slot] = hist[common:]
+
+        # phase 1: lanes more than one token behind (full accept) feed
+        # their extra token in one active-masked dispatch
+        while any(len(c) > 1 for c in pending.values()):
+            toks = np.zeros((n,), np.int32)
+            active = np.zeros((n,), bool)
+            cache = self._sync_pos(cache, slots)
+            for s, c in list(pending.items()):
+                if len(c) > 1:
+                    toks[s], active[s] = c[0], True
+                    self._fed[s].append(c[0])
+                    pending[s] = c[1:]
+            _d, cache = step(self.params, jnp.asarray(toks), cache,
+                             jnp.asarray(active))
+
+        # phase 2: k greedy draft steps, all proposing lanes at once
+        # (feed t0 -> d1, then d_{j-1} -> d_j; the final draft d_k is
+        # returned but never fed, so the ledger stays row-aligned)
+        toks = np.zeros((n,), np.int32)
+        active = np.zeros((n,), bool)
+        for s, c in pending.items():
+            toks[s], active[s] = c[0], True
+        active_j = jnp.asarray(active)
+        drafts = {s: [] for s in slots}
+        for _ in range(self.spec.k):
+            cache = self._sync_pos(cache, slots)
+            for s in slots:
+                self._fed[s].append(int(toks[s]))
+            d, cache = step(self.params, jnp.asarray(toks), cache, active_j)
+            d = np.asarray(d)
+            for s in slots:
+                drafts[s].append(int(d[s]))
+                toks[s] = d[s]
+        self.store.cache = cache
+        return [drafts[s] for s in slots]

@@ -1,0 +1,64 @@
+"""Batched k-token verification: one dispatch, in-jit greedy accept.
+
+The verify window for a lane at position ``pos`` (cache rows < pos
+written, last sampled token t0 not yet appended) is
+``[t0, d1 .. dk]`` — W = k + 1 rows at absolute positions
+``pos .. pos + k``.  One :func:`repro.models.model.verify_step` dispatch
+writes all W K/V rows and returns (B, W, V) logits; row c's argmax is the
+token plain greedy decode would emit after accepting rows <= c.
+
+Accept rule (fused into the jit so the step stays traced-once across
+acceptance lengths — acceptance is *data*, not shape):
+
+    targets   = argmax(logits, -1)                       # (B, W)
+    match[c]  = draft[c] == targets[c]                   # d_{c+1} vs row c
+    ok[c]     = match[c] and c < n_draft                 # mask the pad
+    accepted  = length of the leading all-ok run (cumprod-sum)
+    new_pos   = pos + accepted + 1                       # +1: bonus row
+
+The emitted tokens are ``targets[:accepted + 1]``: the accepted drafts
+are *by construction* the argmax chain plain decode produces, and row
+``accepted`` is either the correction (first mismatch) or the bonus
+token (full accept) — so greedy speculative output is bitwise identical
+to plain decode.  Rows past ``accepted`` hold garbage K/V, overwritten
+by the next verify/decode window before any query attends them (the
+chunked-prefill padding argument).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_verify(cfg, width: int):
+    """One verify dispatch, jitted per (model config, window width).
+
+    fn(params, cache, tokens (B, W) int32, n_draft (B,) int32,
+       active (B,) bool) -> (new_cache, targets (B, W), accepted (B,))
+
+    ``accepted`` counts accepted *drafts* (<= n_draft); the host emits
+    ``targets[lane, : accepted + 1]``.  Inactive lanes keep pos = 0 and
+    (paged) write to the trash page, exactly like plain decode.
+    """
+
+    def fn(params, cache, tokens, n_draft, active):
+        logits, cache = model_lib.verify_step(params, cfg, tokens, cache, active)
+        targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if width > 1:
+            match = tokens[:, 1:] == targets[:, :-1]
+            ok = match & (jnp.arange(width - 1)[None, :] < n_draft[:, None])
+            accepted = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        else:
+            accepted = jnp.zeros((tokens.shape[0],), jnp.int32)
+        pos = cache["pos"]
+        cache = dict(cache)
+        cache["pos"] = jnp.where(active, pos + accepted + 1, 0)
+        return cache, targets, accepted
+
+    return jax.jit(fn, donate_argnums=(1,))

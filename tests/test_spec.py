@@ -1,0 +1,442 @@
+"""Speculative decoding (repro/spec/): draft-verify exactness, rollback
+under shared pages, traced-once verify, drafter determinism.
+
+The headline guarantee is the repo's exactness discipline applied to
+speculation: greedy engine output with spec ON is bitwise identical to
+spec OFF (and to a solo ``serve_batch`` decode) across GQA, MLA and int8
+paged KV, in both cache modes, with either drafter — acceptance only ever
+changes how many dispatches the stream costs, never its tokens.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import serve_batch
+from repro.configs import get_config, reduced
+from repro.models import init_params
+from repro.prefix import PrefixTree
+from repro.serving import (
+    EngineConfig,
+    EnginePolicies,
+    PrefixAwareAdmission,
+    Request,
+    ServingEngine,
+)
+from repro.spec import NgramDrafter, SpecConfig
+
+
+def _setup(arch, **cfg_kw):
+    cfg = reduced(get_config(arch)).with_(remat=False, **cfg_kw)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, policies=None, **ecfg_kw):
+    kw = dict(n_slots=2, cache_len=48, cache_mode="paged", page_size=8,
+              prefill_chunk=8)
+    kw.update(ecfg_kw)
+    return ServingEngine(cfg, params, EngineConfig(**kw), policies=policies)
+
+
+def _solo(cfg, params, prompt, gen, cache_len=48):
+    out, _ = serve_batch(cfg, params,
+                         {"tokens": jnp.asarray([prompt], jnp.int32)},
+                         cache_len=cache_len, gen_tokens=gen)
+    return np.asarray(out)[0].tolist()
+
+
+def _mixed_workload(cfg, rng, n=3):
+    """Repetitive prompts (draftable; high acceptance) mixed with random
+    ones (low acceptance) — exercises accept lengths from 0 to k."""
+    arrivals = []
+    for i in range(n):
+        if i % 2 == 0:
+            pat = rng.integers(0, cfg.vocab_size, 4).tolist()
+            prompt = (pat * 4)[: 12 + i]
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, 12 + i).tolist()
+        arrivals.append((2 * i, prompt, 8 + i))
+    return arrivals
+
+
+class ScriptedDrafter:
+    """Test-only drafter: maps each lane's history to a scripted draft.
+    Swapped in via ``engine._drafter`` to pin the verify window's accept
+    and reject paths deterministically (the ngram drafter's proposals
+    depend on whether the model's output happens to repeat)."""
+
+    def __init__(self, fn, k):
+        self.fn, self.k = fn, k
+
+    def admit(self, slot, history):
+        pass
+
+    def release(self, slot):
+        pass
+
+    def propose(self, slots, histories):
+        return [list(self.fn(h))[: self.k] for h in histories]
+
+
+def _oracle_fn(refs):
+    """refs: {tuple(prompt): solo_output_tokens}.  Returns the TRUE greedy
+    continuation of a history (acceptance-1.0 oracle)."""
+    def fn(hist):
+        for p, ref in refs.items():
+            if tuple(hist[: len(p)]) == p:
+                emitted = len(hist) - len(p)
+                return ref[emitted:]
+        raise AssertionError("history matches no known prompt")
+    return fn
+
+
+def _adversarial_fn(refs, vocab):
+    """Every drafted token is (true token + 1) mod vocab: guaranteed
+    rejection, so every dispatch exercises rollback."""
+    oracle = _oracle_fn(refs)
+    return lambda hist: [(t + 1) % vocab for t in oracle(hist)]
+
+
+# ---------------------------------------------------------------------------
+# Bitwise exactness (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,kv,expect_drafts", [
+    ("llama3.2-1b", "bf16", True),    # GQA pages
+    ("minicpm3-4b", "bf16", False),   # MLA latent pages (output non-repetitive)
+    ("llama3.2-1b", "int8", True),    # byte-size pages + scales
+])
+def test_spec_is_bitwise_invisible_paged(arch, kv, expect_drafts):
+    """Greedy tokens with speculation ON equal OFF equal each request's
+    solo decode; where the workload is draftable the run must actually
+    speculate (non-vacuous)."""
+    cfg, params = _setup(arch, kv_cache_dtype=kv)
+    rng = np.random.default_rng(0)
+    arrivals = _mixed_workload(cfg, rng)
+    outs = {}
+    for spec in (None, SpecConfig(enabled=True, k=4)):
+        engine = _engine(cfg, params, spec=spec)
+        m = engine.run(arrivals)
+        outs[spec is not None] = {r.req_id: r.output_tokens for r in m.finished}
+        if spec is not None:
+            assert m.verify_dispatches > 0, "speculation never engaged"
+            if expect_drafts:
+                assert m.spec_proposed > 0
+            engine.store.manager.check_invariants()
+            assert engine.store.manager.pages_in_use == 0
+    assert outs[True] == outs[False]
+    for i, (_, p, g) in enumerate(arrivals):
+        assert outs[True][i] == _solo(cfg, params, p, g), (
+            f"{arch}/{kv}: request {i} diverged from its solo decode")
+
+
+@pytest.mark.parametrize("arch,kv", [
+    ("minicpm3-4b", "bf16"),      # MLA verify window
+    ("llama3.2-1b", "int8"),      # int8 page writes in the verify window
+])
+def test_spec_accept_and_reject_paths_exact(arch, kv):
+    """Deterministic coverage of both verify outcomes: an oracle drafter
+    (every draft correct -> full windows accepted) and an adversarial one
+    (every draft wrong -> every dispatch rolls back) both reproduce the
+    solo stream bitwise."""
+    cfg, params = _setup(arch, kv_cache_dtype=kv)
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (12, 14)]
+    gens = [9, 8]
+    refs = {tuple(p): _solo(cfg, params, p, g)
+            for p, g in zip(prompts, gens)}
+    spec = SpecConfig(enabled=True, k=3)
+    for mode in ("oracle", "adversarial"):
+        engine = _engine(cfg, params, spec=spec)
+        fn = (_oracle_fn(refs) if mode == "oracle"
+              else _adversarial_fn(refs, cfg.vocab_size))
+        engine._drafter = ScriptedDrafter(fn, spec.k)
+        m = engine.run([(0, prompts[0], gens[0]), (1, prompts[1], gens[1])])
+        outs = {r.req_id: r.output_tokens for r in m.finished}
+        for i, p in enumerate(prompts):
+            assert outs[i] == refs[tuple(p)], f"{arch}/{kv}/{mode}: req {i}"
+        assert m.spec_proposed > 0
+        if mode == "oracle":
+            assert m.spec_accepted == m.spec_proposed
+        else:
+            assert m.spec_accepted == 0       # every window rolled back
+        engine.store.manager.check_invariants()
+        assert engine.store.manager.pages_in_use == 0
+
+
+def test_spec_is_bitwise_invisible_slot_mode():
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(1)
+    arrivals = _mixed_workload(cfg, rng)
+    outs = {}
+    for spec in (None, SpecConfig(enabled=True, k=4)):
+        engine = _engine(cfg, params, spec=spec, cache_mode="slot",
+                         page_size=16, prefill_chunk=None)
+        m = engine.run(arrivals)
+        outs[spec is not None] = {r.req_id: r.output_tokens for r in m.finished}
+    assert outs[True] == outs[False]
+    for i, (_, p, g) in enumerate(arrivals):
+        assert outs[True][i] == _solo(cfg, params, p, g), i
+
+
+def test_spec_draft_model_drafter_exact():
+    """The draft-model drafter proposes from its own small transformer +
+    slot cache; target-side outputs stay bitwise exact regardless of what
+    it proposes."""
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(2)
+    arrivals = _mixed_workload(cfg, rng)
+    spec = SpecConfig(enabled=True, k=3, drafter="model", draft_layers=2)
+    engine = _engine(cfg, params, spec=spec)
+    m = engine.run(arrivals)
+    assert m.verify_dispatches > 0 and m.spec_proposed > 0
+    outs = {r.req_id: r.output_tokens for r in m.finished}
+    for i, (_, p, g) in enumerate(arrivals):
+        assert outs[i] == _solo(cfg, params, p, g), i
+    # lane ledgers are released with their lanes
+    assert engine._drafter._fed == {}
+
+
+def test_spec_respects_eos_and_budget():
+    """EOS inside an accepted window truncates the stream exactly where
+    plain decode would; a 1-token budget still admits (k clamps to 0)."""
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(3)
+    pat = rng.integers(0, cfg.vocab_size, 4).tolist()
+    prompt = (pat * 4)[:13]
+    ref = _solo(cfg, params, prompt, 12)
+    eos = ref[5]
+    for spec in (None, SpecConfig(enabled=True, k=4)):
+        engine = _engine(cfg, params, spec=spec, eos_token=eos)
+        m = engine.run([(0, prompt, 12), (0, prompt, 1)])
+        outs = {r.req_id: r.output_tokens for r in m.finished}
+        assert outs[0] == ref[: ref.index(eos) + 1]
+        assert outs[1] == ref[:1]
+
+
+# ---------------------------------------------------------------------------
+# Rollback under CoW-shared pages (spec + prefix cache)
+# ---------------------------------------------------------------------------
+
+def test_spec_rollback_under_cow_shared_pages():
+    """Rejected drafts roll back lanes whose verify window overlapped
+    pages the prefix tree shares: the window is CoW-forked before the
+    dispatch, so truncation never corrupts the shared trunk.  An
+    adversarial drafter (every token wrong) forces rollback on every
+    dispatch."""
+    cfg, params = _setup("minicpm3-4b")
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 16).tolist()   # exactly 2 pages
+    ref = _solo(cfg, params, prompt, 10)
+    spec = SpecConfig(enabled=True, k=4)
+    engine = _engine(cfg, params, spec=spec, prefix_cache=True)
+    engine._drafter = ScriptedDrafter(
+        _adversarial_fn({tuple(prompt): ref}, cfg.vocab_size), spec.k)
+    m = engine.run([(0, prompt, 10), (2, prompt, 10)])      # 2nd = full hit
+    assert m.prefix_hits == 1 and m.prefix_cow_forks >= 1
+    assert m.spec_proposed > 0 and m.spec_accepted == 0, (
+        "adversarial drafts must all be rejected and rolled back")
+    engine.store.manager.check_invariants()
+    for r in m.finished:
+        assert r.output_tokens == ref
+    # only the tree's published prompt pages remain held
+    assert engine.store.manager.pages_in_use == m.prefix_tree_pages
+
+
+def test_spec_overshoot_reserved_in_admission():
+    """The verify window writes up to k rows past the accepted position;
+    admission must reserve them or a full pool would overcommit."""
+    cfg, params = _setup("llama3.2-1b")
+    spec = SpecConfig(enabled=True, k=4)
+    engine = _engine(cfg, params, spec=spec)
+    with pytest.raises(ValueError, match="cache positions"):
+        # 36 + 10 + 4 overshoot > 48 + 1; fits without the overshoot
+        engine.add_request(list(range(100, 136)), 10)
+    engine.add_request(list(range(100, 136)), 5)            # fits with it
+
+
+# ---------------------------------------------------------------------------
+# Traced-once verify
+# ---------------------------------------------------------------------------
+
+def test_spec_verify_traced_once_across_acceptance_lengths():
+    """Acceptance length is data, not shape: a run whose windows accept
+    0..k drafts compiles the verify dispatch exactly once."""
+    cfg, params = _setup("llama3.2-1b")
+    spec = SpecConfig(enabled=True, k=5)    # width 6: not shared with other tests
+    engine = _engine(cfg, params, spec=spec)
+    rng = np.random.default_rng(5)
+    m = engine.run(_mixed_workload(cfg, rng))
+    assert m.verify_dispatches >= 3
+    rates = {int(a) for a in range(spec.k + 1)}
+    assert engine._verify_fn._cache_size() == 1, (
+        f"verify retraced: {engine._verify_fn._cache_size()} entries "
+        f"(acceptance lengths seen should all share one trace: {rates})")
+
+
+# ---------------------------------------------------------------------------
+# N-gram drafter determinism
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_self_lookup():
+    d = NgramDrafter(SpecConfig(enabled=True, k=3, ngram_max=3))
+    # trailing [1,2,3] occurred earlier at position 0 -> continuation 4,5,6
+    hist = [1, 2, 3, 4, 5, 6, 1, 2, 3]
+    assert d.propose([0], [hist]) == [[4, 5, 6]]
+    # most recent earlier occurrence wins
+    hist = [1, 2, 9, 1, 2, 7, 1, 2]
+    assert d.propose([0], [hist]) == [[7, 1, 2]]
+    # shorter-n fallback: only the trailing 1-gram [7] recurs -> 8,9,7
+    assert d.propose([0], [[7, 8, 9, 7]]) == [[8, 9, 7]]
+    # no earlier occurrence of any trailing n-gram -> empty draft
+    assert d.propose([0], [[3, 1, 4, 1, 5, 9, 2, 6]]) == [[]]
+    assert d.propose([0], [[1, 2, 3, 4]]) == [[]]
+
+
+def test_ngram_drafter_prefers_longest_ngram():
+    d = NgramDrafter(SpecConfig(enabled=True, k=2, ngram_max=3))
+    # the 3-gram [5,6,7] matches at position 1 (-> 8,9); the 1-gram [7]
+    # also occurs later at position 7 (-> 0,5) — the longer match wins
+    hist = [9, 5, 6, 7, 8, 9, 4, 7, 0, 5, 6, 7]
+    assert d.propose([0], [hist]) == [[8, 9]]
+
+
+def test_ngram_drafter_tree_fallback_deterministic():
+    """Misses in the lane's own history fall back to the radix tree's
+    token paths, visited in sorted order (dict-order independent)."""
+    tree = PrefixTree(4)
+    tree.insert([7, 8, 1, 2, 3, 4, 5, 6], [1, 2])
+    tree.insert([7, 8, 9, 9, 1, 2, 3, 4], [1, 3])  # shares page [7,8,1,2]? no: splits
+    d = NgramDrafter(SpecConfig(enabled=True, k=2, ngram_max=2), tree=tree)
+    hist = [50, 51, 2, 3]            # trailing [2,3] appears in both paths
+    (draft,) = d.propose([0], [hist])
+    assert draft == [4, 5]           # sorted-smallest path [7,8,1,...] wins
+    # identical call -> identical draft (stateless + deterministic)
+    assert d.propose([0], [hist]) == [[4, 5]]
+
+
+# ---------------------------------------------------------------------------
+# Config / gating
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_spec_on_nonchunkable_stacks():
+    moe_cfg, moe_params = _setup("granite-moe-3b-a800m")
+    with pytest.raises(ValueError, match="row-independent"):
+        ServingEngine(moe_cfg, moe_params, EngineConfig(
+            spec=SpecConfig(enabled=True, k=4)))
+
+
+def test_spec_mixed_sampling_falls_back_to_plain_decode():
+    """A stochastic lane in the batch disables speculation for that step
+    (the fused accept rule is exact for argmax only) — outputs must still
+    match the spec-off engine."""
+    from repro.serving import SamplingParams
+
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(6)
+    p1 = rng.integers(0, cfg.vocab_size, 12).tolist()
+    p2 = rng.integers(0, cfg.vocab_size, 12).tolist()
+    sto = SamplingParams(greedy=False, temperature=0.8, top_k=4, seed=7)
+    outs = {}
+    for spec in (None, SpecConfig(enabled=True, k=4)):
+        engine = _engine(cfg, params, spec=spec)
+        # the stochastic lane arrives first and outlives the greedy one, so
+        # the running batch is mixed for the greedy lane's entire life
+        m = engine.run([(0, p2, 14, sto), (0, p1, 6)])
+        outs[spec is not None] = {r.req_id: r.output_tokens for r in m.finished}
+        if spec is not None:
+            assert m.verify_dispatches == 0, "speculated with a stochastic lane"
+    assert outs[True] == outs[False]
+
+
+def test_spec_config_roundtrip_through_runtime():
+    from repro.api import RuntimeConfig
+
+    rt = RuntimeConfig(spec=SpecConfig(enabled=True, k=3, drafter="model",
+                                       draft_layers=3))
+    rt2 = RuntimeConfig.from_dict(rt.to_dict())
+    assert rt2.spec == rt.spec
+    assert rt2 == rt
+    with pytest.raises(ValueError, match="drafter"):
+        SpecConfig(drafter="medusa")
+    with pytest.raises(ValueError, match="k must"):
+        SpecConfig(k=0)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-aware admission (satellite: ordering only, outputs invariant)
+# ---------------------------------------------------------------------------
+
+def test_prefix_aware_admission_groups_hot_prefix():
+    pol = PrefixAwareAdmission(patience=2)
+    sigs = {0: ("a",), 1: ("b",), 2: ("a",), 3: None}
+    pol.bind(lambda r: sigs[r.req_id])
+    reqs = [Request(req_id=i, prompt=[1], max_new_tokens=1) for i in range(4)]
+    ok = lambda r: True
+    bucket = lambda r: 1
+    # unprimed: FIFO head, which primes the signature to ("a",)
+    assert pol.next_group(reqs, 1, ok, bucket) == [0]
+    # now the matching later arrival jumps the queue
+    assert pol.next_group(reqs[1:], 1, ok, bucket) == [1]   # req 2 at index 1
+    # no match left -> FIFO head
+    assert pol.next_group([reqs[1], reqs[3]], 1, ok, bucket) == [0]
+
+
+def test_prefix_aware_admission_patience_bounds_starvation():
+    pol = PrefixAwareAdmission(patience=2)
+    pol.bind(lambda r: ("hot",) if r.req_id >= 100 else None)
+    head = Request(req_id=0, prompt=[1], max_new_tokens=1)
+    ok = lambda r: True
+    bucket = lambda r: 1
+    # prime the hot signature
+    assert pol.next_group([Request(req_id=100, prompt=[1], max_new_tokens=1)],
+                          1, ok, bucket) == [0]
+    picked = []
+    for i in range(4):
+        hot = Request(req_id=101 + i, prompt=[1], max_new_tokens=1)
+        idx, = pol.next_group([head, hot], 1, ok, bucket)
+        picked.append([head, hot][idx].req_id)
+    # two skip-aheads, then patience forces the starved FIFO head through
+    assert picked[:2] == [101, 102] and picked[2] == 0
+
+
+def test_prefix_aware_admission_through_engine_is_exact():
+    """End-to-end: ordering changes, outputs don't — every request still
+    matches its solo decode, and shared-prefix requests actually hit."""
+    cfg, params = _setup("llama3.2-1b")
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, 16).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 9, 3)] + [rng.integers(0, cfg.vocab_size, 11).tolist()]
+    gens = [6, 5, 4, 5]
+    engine = _engine(cfg, params, prefix_cache=True,
+                     policies=EnginePolicies(admission=PrefixAwareAdmission()))
+    m = engine.run([(0, p, g) for p, g in zip(prompts, gens)])
+    assert m.prefix_hits >= 2
+    outs = {r.req_id: r.output_tokens for r in m.finished}
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        assert outs[i] == _solo(cfg, params, p, g), i
+
+
+# ---------------------------------------------------------------------------
+# Satellite: int8 full-prompt prefix hits (one-page cap lifted)
+# ---------------------------------------------------------------------------
+
+def test_int8_full_prompt_prefix_hit_is_exact():
+    """int8 pools now CoW-fork the boundary page on a FULL-prompt hit and
+    resume at the final token (every admission is forced through the
+    dequant-consistent chunk step), instead of dropping the last page."""
+    cfg, params = _setup("llama3.2-1b", kv_cache_dtype="int8")
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, 16).tolist()   # exactly 2 pages
+    engine = _engine(cfg, params, prefix_cache=True)
+    m = engine.run([(0, prompt, 8), (3, prompt, 8)])
+    assert m.prefix_hits == 1 and m.prefix_cow_forks >= 1
+    # the full-prompt hit reuses all but the final token
+    assert m.prefix_hit_tokens == len(prompt) - 1
+    ref = _solo(cfg, params, prompt, 8)
+    for r in m.finished:
+        assert r.output_tokens == ref
+    engine.store.manager.check_invariants()
