@@ -9,8 +9,10 @@ fail (exit 1) when it regresses by more than ``--threshold`` (default
 15%).
 
 Only *machine-independent ratio* metrics gate — each sweep's headline
-speedup (engine-vs-static, spec-vs-plain, cached-vs-cold), never raw
-tok/s, whose absolute value depends on the host CI happens to land on.
+speedup (engine-vs-static, spec-vs-plain, cached-vs-cold) plus the
+tail-latency ratios (engine-vs-static and cached-vs-cold p99 TTFT, which
+gate in the *lower-is-better* direction), never raw tok/s, whose absolute
+value depends on the host CI happens to land on.
 Runs are additionally filtered to the newest run's platform (cpu / tpu
 ...), so a trajectory spanning machines still compares like with like.
 With fewer than ``--min-priors`` comparable prior runs a metric passes
@@ -38,9 +40,18 @@ GATED_METRICS = (
     "speedup_vs_cold",
 )
 
+# tail-latency ratios where LOWER is better (engine p99 TTFT over static,
+# cached p99 TTFT over cold): these fail when the value *rises* past
+# baseline * (1 + threshold)
+GATED_METRICS_LOWER = (
+    "ttft_p99_vs_static",
+    "ttft_p99_ratio_vs_cold",
+)
+
 
 def check_metric(path: pathlib.Path, runs: list, metric: str,
-                 threshold: float, min_priors: int) -> bool:
+                 threshold: float, min_priors: int,
+                 lower_is_better: bool = False) -> bool:
     """Gate one headline metric's trajectory.  True = pass."""
     series = [r for r in runs if r.get(metric) is not None]
     if not series:
@@ -55,12 +66,18 @@ def check_metric(path: pathlib.Path, runs: list, metric: str,
               f"-- pass (building trajectory)")
         return True
     baseline = statistics.median(priors)
-    floor = baseline * (1.0 - threshold)
-    ok = value >= floor
+    if lower_is_better:
+        bound = baseline * (1.0 + threshold)
+        ok = value <= bound
+        edge = "ceiling"
+    else:
+        bound = baseline * (1.0 - threshold)
+        ok = value >= bound
+        edge = "floor"
     verdict = "pass" if ok else "FAIL"
     print(f"[bench_check] {path.name}: {metric}={value:.3f} vs trailing "
           f"median {baseline:.3f} over {len(priors)} runs "
-          f"(floor {floor:.3f}) -- {verdict}")
+          f"({edge} {bound:.3f}) -- {verdict}")
     return ok
 
 
@@ -76,6 +93,9 @@ def check_file(path: pathlib.Path, threshold: float, min_priors: int) -> bool:
         return True
     results = [check_metric(path, runs, m, threshold, min_priors)
                for m in GATED_METRICS]
+    results += [check_metric(path, runs, m, threshold, min_priors,
+                             lower_is_better=True)
+                for m in GATED_METRICS_LOWER]
     return all(results)
 
 

@@ -87,6 +87,7 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
     """FIFO groups of ``slots``; one rectangular serve_batch per group."""
     useful = 0
     ttfts = []
+    per_tok = []
     t_start = time.perf_counter()
     prefill_s = decode_s = 0.0
     steps = 0
@@ -105,6 +106,9 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
         # every request in the group sees its first token when the group's
         # prefill returns; earlier groups delay later ones head-of-line
         ttfts += [time.perf_counter() - t_start - stats["decode_s"]] * len(group)
+        # lockstep decode: every lane advances one token per group step,
+        # so each request's per-token latency is the group's step time
+        per_tok += [stats["decode_s"] / max(gen, 1)] * len(group)
     wall = time.perf_counter() - t_start
     return {
         "mode": "static",
@@ -117,6 +121,12 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
         "decode_s": round(decode_s, 4),
         "ttft_mean_s": round(float(np.mean(ttfts)), 4),
         "ttft_max_s": round(float(np.max(ttfts)), 4),
+        "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
+        "ttft_p95_s": round(float(np.percentile(ttfts, 95)), 4),
+        "ttft_p99_s": round(float(np.percentile(ttfts, 99)), 4),
+        "per_token_p50_s": round(float(np.percentile(per_tok, 50)), 5),
+        "per_token_p95_s": round(float(np.percentile(per_tok, 95)), 5),
+        "per_token_p99_s": round(float(np.percentile(per_tok, 99)), 5),
     }
 
 
@@ -198,6 +208,7 @@ def prefix_sweep(cfg, params, args, out_path: str) -> None:
         tag = "cached" if prefix_on else "cold"
         print(f"{tag:>8s} {rec['tokens_per_s']:8.1f} tok/s | "
               f"TTFT mean {rec['ttft_mean_s']*1e3:7.1f}ms "
+              f"p99 {rec['ttft_p99_s']*1e3:7.1f}ms "
               f"max {rec['ttft_max_s']*1e3:7.1f}ms | "
               f"{rec['prefix_hits']} hits, {rec['prefix_hit_tokens']} prompt "
               f"tokens reused, {rec['prefix_cow_forks']} forks")
@@ -214,10 +225,13 @@ def prefix_sweep(cfg, params, args, out_path: str) -> None:
                                  / max(cold["tokens_per_s"], 1e-9), 3),
         "ttft_ratio_vs_cold": round(cached["ttft_mean_s"]
                                     / max(cold["ttft_mean_s"], 1e-9), 3),
+        "ttft_p99_ratio_vs_cold": round(cached["ttft_p99_s"]
+                                        / max(cold["ttft_p99_s"], 1e-9), 3),
         "records": records,
     }
     print(f"prefix cache: {run['speedup_vs_cold']:.2f}x tok/s, "
-          f"TTFT {run['ttft_ratio_vs_cold']:.2f}x vs cold at the same "
+          f"TTFT mean {run['ttft_ratio_vs_cold']:.2f}x / "
+          f"p99 {run['ttft_p99_ratio_vs_cold']:.2f}x vs cold at the same "
           f"page budget")
     stamped = append_run(out_path, "serve_bench_prefix", run)
     print(f"appended run to {out_path} (sha {stamped['git_sha']}, "
@@ -397,7 +411,7 @@ def main():
           f"prompts<={args.prompt_len}, budgets {{{max(1, args.gen//4)},{args.gen}}}, "
           f"kv={args.kv_cache_dtype} ===")
     print(f"{'mode':>8s} {'slots':>6s} {'stagger':>8s} {'tok/s':>8s} "
-          f"{'steps':>6s} {'TTFT-mean':>10s} {'TTFT-max':>9s}")
+          f"{'steps':>6s} {'TTFT-mean':>10s} {'TTFT-p99':>9s} {'TTFT-max':>9s}")
     for slots in slot_sweep:
         # warm both paths' jit caches at THIS slot count (prefill/decode
         # shapes depend on it) so compile time never lands in the comparison;
@@ -420,7 +434,7 @@ def main():
         records.append(rec)
         print(f"{'static':>8s} {slots:6d} {'-':>8s} {rec['tokens_per_s']:8.1f} "
               f"{rec['decode_steps']:6d} {rec['ttft_mean_s']:10.3f} "
-              f"{rec['ttft_max_s']:9.3f}")
+              f"{rec['ttft_p99_s']:9.3f} {rec['ttft_max_s']:9.3f}")
         for stagger in stagger_sweep:
             rec = max((run_engine(cfg, params, workload, slots, cache_len,
                                   buckets, stagger, **cell_kw)
@@ -430,7 +444,8 @@ def main():
             records.append(rec)
             print(f"{'engine':>8s} {slots:6d} {stagger:8d} "
                   f"{rec['tokens_per_s']:8.1f} {rec['decode_steps']:6d} "
-                  f"{rec['ttft_mean_s']:10.3f} {rec['ttft_max_s']:9.3f}")
+                  f"{rec['ttft_mean_s']:10.3f} {rec['ttft_p99_s']:9.3f} "
+                  f"{rec['ttft_max_s']:9.3f}")
 
         # paged sweep: SAME page budget as the slot pool above, more lanes
         pkw, lanes = paged_kw(slots, cache_len, args.requests)
@@ -444,7 +459,7 @@ def main():
         records.append(rec)
         print(f"{'paged':>8s} {slots:6d} {0:8d} {rec['tokens_per_s']:8.1f} "
               f"{rec['decode_steps']:6d} {rec['ttft_mean_s']:10.3f} "
-              f"{rec['ttft_max_s']:9.3f}   "
+              f"{rec['ttft_p99_s']:9.3f} {rec['ttft_max_s']:9.3f}   "
               f"peak {rec['peak_running']} lanes in {rec['pages_total']} pages")
 
     # headline: per-slot-count ratio of the engine's best arrival pattern vs
@@ -462,6 +477,22 @@ def main():
     print("continuous/static tokens-per-s: "
           + ", ".join(f"{r:.2f}x @ {s} slots" for s, r in ratios.items())
           + " (mixed budgets; finished lanes refill instead of idling)")
+
+    # tail-latency headline: engine p99 TTFT over static p99 TTFT (LOWER is
+    # better — interleaved prefill admits late arrivals without waiting for
+    # the whole previous group).  The conservative maximum across slot
+    # counts is the reported ratio; bench_check gates it with the
+    # lower-is-better direction.
+    ttft_ratios = {}
+    for slots in slot_sweep:
+        s = next(r["ttft_p99_s"] for r in records
+                 if r["mode"] == "static" and r["slots"] == slots)
+        e = min(r["ttft_p99_s"] for r in records
+                if r["mode"] == "engine" and r["slots"] == slots)
+        ttft_ratios[slots] = e / max(s, 1e-9)
+    print("engine/static TTFT p99: "
+          + ", ".join(f"{r:.2f}x @ {s} slots" for s, r in ttft_ratios.items())
+          + " (lower is better)")
 
     # paged headline: concurrency at the slot pool's KV budget — the slot
     # cache can NEVER exceed `slots` concurrent requests in that memory;
@@ -484,6 +515,9 @@ def main():
         },
         "speedup_vs_static": round(speedup, 3),
         "speedup_by_slots": {str(s): round(r, 3) for s, r in ratios.items()},
+        "ttft_p99_vs_static": round(max(ttft_ratios.values()), 3),
+        "ttft_p99_by_slots": {str(s): round(r, 3)
+                              for s, r in ttft_ratios.items()},
         "paged_peak_lanes_by_slots": {str(s): c for s, (c, _) in paged_conc.items()},
         "records": records,
     }

@@ -24,6 +24,9 @@ Map of the package
     * ``SamplingDefaults`` — default per-request sampling policy
     * ``SpecConfig``       — speculative decoding (draft-verify greedy
                              decode; ``repro/spec/``)
+    * ``ObsConfig``        — observability (``repro/obs/``): span tracing
+                             (Chrome trace JSON), scheduler event log,
+                             jax.profiler windows, invariant checking
 
     Frozen + validated; ``to_dict``/``from_dict`` round-trip; one
     ``resolve(cfg)`` step derives the legacy ``ModelConfig`` overrides and
@@ -70,6 +73,7 @@ from repro.api.config import (
 )
 from repro.api.llm import LLM
 from repro.api.outputs import RequestOutput
+from repro.obs import ObsConfig, Observability
 from repro.serving.policies import (
     AdmissionPolicy,
     BucketBatchedAdmission,
@@ -101,6 +105,8 @@ __all__ = [
     "LLM",
     "NeverDefrag",
     "NoPrefixReuse",
+    "ObsConfig",
+    "Observability",
     "PrefixAwareAdmission",
     "PrefixPolicy",
     "PriorityAdmission",

@@ -34,6 +34,7 @@ from repro.configs.base import (
     ModelConfig,
     default_cache_len,
 )
+from repro.obs.config import ObsConfig
 from repro.serving.engine import RECURRENT_KINDS, EngineConfig
 from repro.serving.policies import (
     BucketBatchedAdmission,
@@ -219,6 +220,10 @@ class RuntimeConfig:
     # Disabled by default (SpecConfig.enabled=False); needs a chunkable
     # (attn/MLA/dense) stack — the engine validates at construction.
     spec: SpecConfig = dataclasses.field(default_factory=SpecConfig)
+    # observability (repro/obs/): span tracing, scheduler event log,
+    # jax.profiler windows, per-step invariant checking.  All off by
+    # default — the engine's hot path sees only null sinks.
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
     # default generation budget for requests that don't specify one
     max_new_tokens: int = 16
     eos_token: Optional[int] = None
@@ -265,6 +270,7 @@ class RuntimeConfig:
             scheduler=SchedulerConfig(**sched),
             sampling=SamplingDefaults(**d.pop("sampling", {})),
             spec=SpecConfig(**d.pop("spec", {})),
+            obs=ObsConfig(**d.pop("obs", {})),
             **d,
         )
 

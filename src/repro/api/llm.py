@@ -72,6 +72,10 @@ class LLM:
         self.tokenizer = tokenizer or default_detokenizer
         self._policies = (policies if policies is not None
                           else self.runtime.build_policies())
+        # one observability bundle per LLM: it outlives engine rebuilds
+        # (spans/events accumulate across them, like metrics), and
+        # ``llm.obs.save()`` writes the configured trace/event sinks
+        self.obs = self.runtime.obs.build()
         self._engine: Optional[ServingEngine] = None
 
     # -- engine lifecycle --------------------------------------------------
@@ -94,13 +98,13 @@ class LLM:
             ecfg = dataclasses.replace(
                 ecfg, cache_len=max(ecfg.cache_len, old.engine_cfg.cache_len))
         self._engine = ServingEngine(self.config, self.params, ecfg,
-                                     policies=self._policies)
+                                     policies=self._policies, obs=self.obs)
         if old is not None:
             # metrics accumulate across rebuilds: carry the old object over
             # (held references stay live) with the new pool geometry stamped
             carried = old.metrics
-            carried.pages_total = self._engine.metrics.pages_total
-            carried.page_size = self._engine.metrics.page_size
+            carried.set_gauge("pages_total", self._engine.metrics.pages_total)
+            carried.set_gauge("page_size", self._engine.metrics.page_size)
             self._engine.metrics = carried
         return self._engine
 
@@ -164,7 +168,11 @@ class LLM:
         while engine.has_work:
             engine.step()
         detok = self.tokenizer if detokenize else None
-        return [RequestOutput.from_request(r, detok) for r in reqs]
+        # with observability on, each output carries its scheduler timeline
+        # (queued -> admitted -> chunks -> first_token -> finished events)
+        return [RequestOutput.from_request(
+            r, detok, timeline=self.obs.events.timeline(r.req_id) or None)
+            for r in reqs]
 
     def stream(self, prompt: Prompt,
                sampling: Optional[SamplingParams] = None,

@@ -20,11 +20,23 @@ class RequestOutput:
     finish_reason: str          # "stop" (EOS) | "length" (budget)
     ttft_s: Optional[float]     # submit -> first token
     latency_s: Optional[float]  # submit -> finished
+    # the request's scheduler event timeline (queued -> admitted -> chunks
+    # -> first_token -> finished dicts from ``obs.EventLog``); None when
+    # observability is disabled
+    timeline: Optional[list[dict]] = None
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Submit -> admitted, read off the timeline (None without one)."""
+        for ev in self.timeline or ():
+            if ev["kind"] == "admitted":
+                return ev.get("queue_wait_s")
+        return None
 
     @classmethod
     def from_request(cls, req: Request,
-                     detokenizer: Optional[Callable[[Sequence[int]], str]] = None
-                     ) -> "RequestOutput":
+                     detokenizer: Optional[Callable[[Sequence[int]], str]] = None,
+                     timeline: Optional[list[dict]] = None) -> "RequestOutput":
         stopped = (req.eos_token is not None and req.output_tokens
                    and req.output_tokens[-1] == req.eos_token)
         return cls(
@@ -35,4 +47,5 @@ class RequestOutput:
             finish_reason="stop" if stopped else "length",
             ttft_s=req.ttft_s,
             latency_s=req.latency_s,
+            timeline=timeline,
         )

@@ -33,11 +33,22 @@ ignored in its favour — only workload flags (``--requests``/
 admit) falls back to the lockstep baseline ``repro.api.serve_batch`` —
 kept both as the reference implementation the engine is tested against and
 as the baseline ``benchmarks/serve_bench.py`` beats.
+
+Observability (``repro/obs/``): ``--trace out.json`` writes the engine's
+span timeline as Chrome trace-event JSON (load at https://ui.perfetto.dev);
+``--events out.jsonl`` writes the scheduler decision log (one JSON object
+per admit/reject/chunk/CoW/defrag/finish event); ``--fence-spans`` makes
+spans block on device values so they measure device work, not dispatch;
+``--profile DIR`` wraps the first ``--profile-steps`` engine steps in a
+``jax.profiler`` device trace; ``--debug-invariants`` checks the page
+pool's bookkeeping after every step.  All off by default — the disabled
+engine runs with null sinks and zero extra host syncs.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -45,6 +56,7 @@ import numpy as np
 from repro.api import (
     LLM,
     KVConfig,
+    ObsConfig,
     QuantRuntime,
     RuntimeConfig,
     SamplingDefaults,
@@ -138,6 +150,28 @@ def _engine_main(llm: LLM, args) -> None:
     if metrics.finished:
         first = min(metrics.finished, key=lambda r: r.req_id)
         print(f"[engine] sample (req {first.req_id}):", first.output_tokens[:12])
+    if llm.obs.enabled:
+        r = metrics.report()
+        print(f"[obs] TTFT p50/p95/p99 {r['ttft_p50_s']*1e3:.1f}/"
+              f"{r['ttft_p95_s']*1e3:.1f}/{r['ttft_p99_s']*1e3:.1f} ms | "
+              f"per-token p50/p99 {r['per_token_p50_s']*1e3:.2f}/"
+              f"{r['per_token_p99_s']*1e3:.2f} ms | "
+              f"queue wait p99 {r['queue_wait_p99_s']*1e3:.1f} ms | "
+              f"{len(llm.obs.events)} scheduler events, "
+              f"{len(llm.obs.tracer.events)} spans")
+    for path in llm.obs.save():
+        print(f"[obs] wrote {path}")
+
+
+def _obs_from_args(args) -> ObsConfig:
+    return ObsConfig(
+        trace=args.trace,
+        events=args.events,
+        fence_spans=args.fence_spans,
+        profile_dir=args.profile,
+        profile_steps=args.profile_steps,
+        debug_invariants=args.debug_invariants,
+    )
 
 
 def _runtime_from_args(args) -> RuntimeConfig:
@@ -177,6 +211,7 @@ def _runtime_from_args(args) -> RuntimeConfig:
             drafter=args.draft,
             draft_arch=args.draft_arch,
         ),
+        obs=_obs_from_args(args),
         max_new_tokens=args.gen,
         reduced=args.reduced,
     )
@@ -253,13 +288,33 @@ def main():
                     help="paged attention impl (default: auto by platform)")
     ap.add_argument("--stream", action="store_true",
                     help="engine: print every token as it reaches the host")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="obs: write the engine span timeline as Chrome "
+                         "trace-event JSON (load in Perfetto)")
+    ap.add_argument("--events", default=None, metavar="OUT.jsonl",
+                    help="obs: write the scheduler decision log as JSONL")
+    ap.add_argument("--fence-spans", action="store_true",
+                    help="obs: block spans on device values so they measure "
+                         "device work (serializes the decode pipeline)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="obs: jax.profiler device trace over the first "
+                         "--profile-steps engine steps, written under DIR")
+    ap.add_argument("--profile-steps", type=int, default=20,
+                    help="obs: engine steps the --profile window covers")
+    ap.add_argument("--debug-invariants", action="store_true",
+                    help="obs: check page-pool invariants after every step")
     args = ap.parse_args()
 
     runtime = (load_runtime(args.runtime) if args.runtime
                else _runtime_from_args(args))
-    if args.runtime and args.reduced:
-        import dataclasses as _dc
-        runtime = _dc.replace(runtime, reduced=True)
+    if args.runtime:
+        # obs + reduced are session flags, not deployment profile state:
+        # they apply on top of whatever --runtime loaded
+        if args.reduced:
+            runtime = dataclasses.replace(runtime, reduced=True)
+        obs = _obs_from_args(args)
+        if obs != ObsConfig():
+            runtime = dataclasses.replace(runtime, obs=obs)
     llm = LLM(arch=args.arch, runtime=runtime)
     cfg = llm.config
     engine_capable = not cfg.is_encoder_decoder and cfg.frontend is None

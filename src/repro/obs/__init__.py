@@ -1,0 +1,54 @@
+"""``repro.obs`` — tracing, metrics and profiling for the serving stack.
+
+The paper's headline numbers are throughput/latency/efficiency, and every
+comparative photonic-accelerator claim rests on per-stage timing
+attribution — so the serving engine gets a first-class observability
+layer instead of a bag of mean-only counters:
+
+* ``trace``   — nested spans over engine dispatches (prefill / chunk /
+  decode / verify / defrag), optionally fenced with ``block_until_ready``
+  so they measure device work, exported as Chrome trace-event JSON
+  (Perfetto-loadable).
+* ``metrics`` — counters, gauges and log-bucketed histograms with exact
+  percentile queries; the registry ``serving.EngineMetrics`` is built on.
+* ``events``  — the structured scheduler event log: every admit / reject /
+  evict / CoW-fork / defrag / spec-fallback decision with its reason,
+  reassembled per-request as a queued→admitted→chunks→first-token→finished
+  timeline (surfaced on ``api.RequestOutput``).
+* ``profile`` — ``jax.profiler`` hooks wrapping N engine steps in a
+  device trace (``--profile DIR``).
+* ``config``  — ``ObsConfig`` (the ``RuntimeConfig.obs`` layer) and the
+  ``Observability`` bundle the engine consumes; ``DISABLED`` is the
+  shared null bundle.
+
+Two invariants, test-asserted in ``tests/test_obs.py``: disabled
+observability adds **zero overhead** (null sinks, no extra host syncs on
+the decode path), and enabled observability is **output-invisible**
+(greedy token streams stay bitwise identical with tracing on).
+"""
+
+from repro.obs.config import DISABLED, Observability, ObsConfig
+from repro.obs.events import NULL_EVENTS, EventLog, NullEventLog
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.profile import NULL_PROFILER, NullStepProfiler, StepProfiler
+from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
+
+__all__ = [
+    "Counter",
+    "DISABLED",
+    "EventLog",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_EVENTS",
+    "NULL_PROFILER",
+    "NULL_TRACER",
+    "NullEventLog",
+    "NullStepProfiler",
+    "NullTracer",
+    "ObsConfig",
+    "Observability",
+    "Span",
+    "StepProfiler",
+    "Tracer",
+]

@@ -1,0 +1,109 @@
+"""``ObsConfig``: the frozen, JSON-round-trippable observability surface.
+
+One sub-config of ``repro.api.RuntimeConfig`` (the same layering as
+``KVConfig``/``SchedulerConfig``): every knob maps onto one field, and
+``build()`` turns the config into the live ``Observability`` bundle the
+engine consumes.  With everything unset the build returns null sinks —
+the zero-overhead disabled mode the hot-path invariant demands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.obs.events import NULL_EVENTS, EventLog
+from repro.obs.profile import NULL_PROFILER, StepProfiler
+from repro.obs.trace import NULL_TRACER, Tracer
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability knobs (all off by default).
+
+    ``enabled=None`` means *auto*: tracing/events turn on iff a sink path
+    (or ``debug_invariants``/``fence_spans``) asks for them, so setting
+    ``trace="out.json"`` is sufficient.  ``enabled=True`` collects in
+    memory even without file sinks (read via ``llm.obs``);
+    ``enabled=False`` forces everything off regardless of paths.
+    """
+
+    enabled: Optional[bool] = None
+    # Chrome trace-event JSON output path (None = don't write a file)
+    trace: Optional[str] = None
+    # scheduler event-log JSONL output path (None = don't write a file)
+    events: Optional[str] = None
+    # block_until_ready-fence spans so they bracket device work instead of
+    # async dispatch (serializes the decode pipeline — measurement mode)
+    fence_spans: bool = False
+    # jax.profiler: wrap profile_steps engine steps in a device trace
+    # written under this directory (None = no profiling)
+    profile_dir: Optional[str] = None
+    profile_steps: int = 20
+    # run PageManager.check_invariants() every engine step and emit a
+    # structured violation event (then raise) instead of relying on tests
+    debug_invariants: bool = False
+
+    def __post_init__(self):
+        if self.profile_steps < 1:
+            raise ValueError("ObsConfig.profile_steps must be >= 1")
+
+    @property
+    def resolved_enabled(self) -> bool:
+        if self.enabled is not None:
+            return self.enabled
+        return bool(self.trace or self.events or self.fence_spans
+                    or self.debug_invariants)
+
+    def build(self) -> "Observability":
+        """The live bundle this config describes (null sinks when off)."""
+        on = self.resolved_enabled
+        return Observability(
+            tracer=Tracer(fence_spans=self.fence_spans) if on else NULL_TRACER,
+            events=EventLog() if on else NULL_EVENTS,
+            profiler=(StepProfiler(self.profile_dir, self.profile_steps)
+                      if self.profile_dir else NULL_PROFILER),
+            debug_invariants=self.debug_invariants,
+            enabled=on,
+            config=self,
+        )
+
+
+@dataclasses.dataclass
+class Observability:
+    """The engine-facing bundle: tracer + event log + profiler + flags.
+
+    Engine code calls into these unconditionally; the disabled singleton
+    (``repro.obs.DISABLED``) makes every call a no-op, which is what keeps
+    the invariant 'zero overhead, zero extra host syncs when off' literal
+    rather than aspirational.
+    """
+
+    tracer: object = NULL_TRACER
+    events: object = NULL_EVENTS
+    profiler: object = NULL_PROFILER
+    debug_invariants: bool = False
+    enabled: bool = False
+    config: Optional[ObsConfig] = None
+
+    def save(self, trace_path: Optional[str] = None,
+             events_path: Optional[str] = None) -> list[str]:
+        """Write the configured (or explicitly passed) file sinks; returns
+        the paths written.  Also flushes a still-armed profiler."""
+        self.profiler.close()
+        written = []
+        tp = trace_path or (self.config.trace if self.config else None)
+        ep = events_path or (self.config.events if self.config else None)
+        if tp and self.tracer.save(tp):
+            written.append(tp)
+        if ep and self.events.to_jsonl(ep):
+            written.append(ep)
+        return written
+
+    def close(self) -> None:
+        self.profiler.close()
+
+
+# the shared disabled bundle: stateless null sinks, safe to share between
+# engines (module singleton so the default costs nothing per engine)
+DISABLED = Observability()

@@ -1,0 +1,90 @@
+"""Structured scheduler event log.
+
+Every scheduling *decision* the engine takes — queued / admitted /
+rejected (with the reason) / chunk fed / promoted / first token / CoW fork
+/ prefix hit / defrag / spec fallback / finished — lands here as one
+dict: a monotonic ``seq``, a wall-clock ``t`` (``time.perf_counter``, the
+same clock every ``Request`` timestamp uses), the ``kind``, an optional
+``req_id``, and free-form fields.  ``to_jsonl`` writes one JSON object
+per line; ``timeline(req_id)`` reassembles one request's
+queued → admitted → chunks → first-token → finished history, which the
+API surfaces on ``RequestOutput.timeline``.
+
+This is the layer that answers "why wasn't this request admitted" — the
+question a means-only metrics dataclass structurally cannot: rejections
+carry the vetoing reason (pool capacity, with the page deficit), evictions
+carry theirs (budget vs EOS), and spec fallbacks say what disqualified
+the batch.
+
+``NullEventLog`` is the zero-overhead disabled twin: ``emit`` discards
+everything without building state.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from collections import defaultdict
+from typing import Optional
+
+
+class EventLog:
+    def __init__(self):
+        self.events: list[dict] = []
+        self._by_req: dict[int, list[dict]] = defaultdict(list)
+        self._seq = 0
+
+    def emit(self, kind: str, req_id: Optional[int] = None, **fields) -> dict:
+        ev = {"seq": self._seq, "t": time.perf_counter(), "kind": kind}
+        self._seq += 1
+        if req_id is not None:
+            ev["req_id"] = int(req_id)
+            self._by_req[int(req_id)].append(ev)
+        ev.update(fields)
+        self.events.append(ev)
+        return ev
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    # -- queries -----------------------------------------------------------
+    def timeline(self, req_id: int) -> list[dict]:
+        """One request's events in emission order."""
+        return list(self._by_req.get(int(req_id), ()))
+
+    def kinds(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for ev in self.events:
+            counts[ev["kind"]] = counts.get(ev["kind"], 0) + 1
+        return counts
+
+    # -- export ------------------------------------------------------------
+    def to_jsonl(self, path: str) -> str:
+        with open(path, "w") as f:
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+        return path
+
+
+class NullEventLog:
+    """Disabled event log: emits vanish, queries are empty."""
+
+    events: tuple = ()
+
+    def emit(self, kind: str, req_id: Optional[int] = None, **fields) -> None:
+        return None
+
+    def __len__(self) -> int:
+        return 0
+
+    def timeline(self, req_id: int) -> list:
+        return []
+
+    def kinds(self) -> dict:
+        return {}
+
+    def to_jsonl(self, path: str) -> Optional[str]:
+        return None
+
+
+NULL_EVENTS = NullEventLog()

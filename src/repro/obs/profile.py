@@ -1,0 +1,73 @@
+"""``jax.profiler`` hooks: wrap N engine steps in a device profiler trace.
+
+The span tracer (``obs.trace``) times *dispatches* from the host; when the
+question is what the device itself was doing inside one (kernel timings,
+HLO-level breakdown, transfer stalls), that is ``jax.profiler``'s job.
+``StepProfiler`` arms it over the engine loop: the first ``step_begin``
+after construction starts a trace into ``log_dir``, and after
+``n_steps`` completed steps the trace stops and the profiler goes inert —
+so a ``--profile DIR`` serve run captures a bounded window instead of an
+unboundedly-growing trace.  View with TensorBoard's profile plugin or
+``xprof`` (the trace also contains a Perfetto-loadable ``.trace.json.gz``
+under ``plugins/profile/``).
+
+``NullStepProfiler`` is the disabled twin: both hooks are no-ops, so the
+engine calls them unconditionally at zero cost.
+"""
+
+from __future__ import annotations
+
+
+class StepProfiler:
+    def __init__(self, log_dir: str, n_steps: int = 20):
+        if n_steps < 1:
+            raise ValueError("n_steps must be >= 1")
+        self.log_dir = log_dir
+        self.n_steps = n_steps
+        self.active = False
+        self.done = False
+        self._steps_seen = 0
+
+    def step_begin(self) -> None:
+        if self.done or self.active:
+            return
+        import jax
+
+        jax.profiler.start_trace(self.log_dir)
+        self.active = True
+
+    def step_end(self) -> None:
+        if not self.active:
+            return
+        self._steps_seen += 1
+        if self._steps_seen >= self.n_steps:
+            self.close()
+
+    def close(self) -> None:
+        """Stop the trace if still running (idempotent; also the engine's
+        end-of-run hook so short runs flush a partial window)."""
+        if self.active:
+            import jax
+
+            jax.profiler.stop_trace()
+            self.active = False
+            self.done = True
+
+
+class NullStepProfiler:
+    """Disabled profiler: hooks are no-ops."""
+
+    active = False
+    done = False
+
+    def step_begin(self) -> None:
+        pass
+
+    def step_end(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+NULL_PROFILER = NullStepProfiler()

@@ -1,0 +1,180 @@
+"""Span-based tracer exporting Chrome trace-event JSON.
+
+``Tracer.span("decode_step", step=12)`` opens a nested, context-managed
+span; closed spans accumulate as Chrome trace *complete events* (``"ph":
+"X"``) that ``save()`` writes as a ``{"traceEvents": [...]}`` document —
+drop it onto https://ui.perfetto.dev (or ``chrome://tracing``) and the
+engine's prefill/chunk/decode/verify/defrag dispatches render as a
+timeline.
+
+Two properties the serving engine depends on:
+
+* **Async-dispatch honesty.**  JAX dispatches return before the device
+  finishes, so a bare span measures *enqueue* time, not device work.  A
+  span may register device values with ``sp.fence(x)``; when the tracer
+  was built with ``fence_spans=True`` the span blocks on them
+  (``jax.block_until_ready``) before stamping its end timestamp, so the
+  span brackets the device computation.  With ``fence_spans=False`` the
+  fence call is free and **no extra host sync ever happens** — the
+  engine's lazy decode pipelining is untouched.
+* **Zero overhead when disabled.**  ``NULL_TRACER`` (a ``NullTracer``)
+  hands out one shared no-op span: no event list grows, no timestamps are
+  taken, nothing is fenced.  Engine code traces unconditionally and the
+  null objects make the disabled path vanish.
+
+Spans nest by call structure: the tracer keeps a stack, stamps each span
+with its ``depth``, and Perfetto reconstructs the hierarchy from timestamp
+containment on the single engine thread (one ``pid``/``tid``).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional
+
+
+def _now_us() -> float:
+    return time.perf_counter_ns() / 1000.0
+
+
+class Span:
+    """One in-flight span; use via ``with tracer.span(...) as sp``."""
+
+    __slots__ = ("_tracer", "name", "args", "_t0", "_fences", "_depth")
+
+    def __init__(self, tracer: "Tracer", name: str, args: dict):
+        self._tracer = tracer
+        self.name = name
+        self.args = args
+        self._t0 = 0.0
+        self._fences: list = []
+        self._depth = 0
+
+    def fence(self, *values) -> None:
+        """Register device values the span must wait on before closing
+        (only honoured when the tracer fences; otherwise free)."""
+        if self._tracer.fence_spans:
+            self._fences.extend(values)
+
+    def set(self, **kw) -> None:
+        """Attach (or update) span args after entry."""
+        self.args.update(kw)
+
+    def __enter__(self) -> "Span":
+        self._depth = len(self._tracer._stack)
+        self._tracer._stack.append(self)
+        self._t0 = _now_us()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if self._fences:
+            import jax
+
+            jax.block_until_ready(self._fences)
+        t1 = _now_us()
+        stack = self._tracer._stack
+        if stack and stack[-1] is self:
+            stack.pop()
+        self._tracer._emit(self, t1)
+        return False
+
+
+class _NullSpan:
+    """Shared do-nothing span: the disabled tracer's entire hot path."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+    def fence(self, *values) -> None:
+        pass
+
+    def set(self, **kw) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Collects spans / instants; exports Chrome trace-event JSON."""
+
+    enabled = True
+
+    def __init__(self, fence_spans: bool = False):
+        self.fence_spans = fence_spans
+        # finished events, already in Chrome trace-event dict form
+        self.events: list[dict] = []
+        self._stack: list[Span] = []
+        self._epoch_us = _now_us()
+
+    # -- recording ---------------------------------------------------------
+    def span(self, name: str, **args) -> Span:
+        return Span(self, name, args)
+
+    def instant(self, name: str, **args) -> None:
+        """A zero-duration marker (Chrome ``ph: "i"``)."""
+        ev = {"name": name, "ph": "i", "ts": _now_us() - self._epoch_us,
+              "pid": 1, "tid": 1, "s": "t"}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def _emit(self, span: Span, t1_us: float) -> None:
+        ev = {
+            "name": span.name,
+            "ph": "X",
+            "ts": span._t0 - self._epoch_us,
+            "dur": t1_us - span._t0,
+            "pid": 1,
+            "tid": 1,
+            "cat": "engine",
+        }
+        args = dict(span.args)
+        args["depth"] = span._depth
+        ev["args"] = args
+        self.events.append(ev)
+
+    # -- export ------------------------------------------------------------
+    def to_chrome(self) -> dict:
+        """The full Chrome trace-event document (Perfetto-loadable)."""
+        meta = [
+            {"name": "process_name", "ph": "M", "pid": 1, "tid": 1,
+             "args": {"name": "repro.serving"}},
+            {"name": "thread_name", "ph": "M", "pid": 1, "tid": 1,
+             "args": {"name": "engine"}},
+        ]
+        return {"traceEvents": meta + self.events, "displayTimeUnit": "ms"}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path
+
+
+class NullTracer:
+    """Disabled tracer: every span is the shared no-op span."""
+
+    enabled = False
+    fence_spans = False
+    events: tuple = ()
+
+    def span(self, name: str, **args) -> _NullSpan:
+        return _NULL_SPAN
+
+    def instant(self, name: str, **args) -> None:
+        pass
+
+    def to_chrome(self) -> dict:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+
+    def save(self, path: str) -> Optional[str]:
+        return None
+
+
+NULL_TRACER = NullTracer()

@@ -310,13 +310,17 @@ class PageManager:
         self.dirty = True
         return moves
 
-    # -- invariants (property-style tests poke this) -----------------------
-    def check_invariants(self) -> None:
-        """Raise if the pool's bookkeeping is inconsistent: refcounts match
-        actual holders, nothing is simultaneously free and referenced, and
-        block tables mirror the lane page lists."""
+    # -- invariants (property tests + the engine's debug mode poke this) ---
+    def invariant_violations(self) -> list[str]:
+        """Every bookkeeping inconsistency as a human-readable string:
+        refcounts must match actual holders, nothing may be simultaneously
+        free and referenced, and block tables must mirror the lane page
+        lists.  Empty list = pool consistent.  Non-raising so the engine's
+        ``debug_invariants`` mode can log the full set as one structured
+        event before failing."""
+        out: list[str] = []
         if (self.refcount < 0).any():
-            raise AssertionError("negative refcount")
+            out.append("negative refcount")
         holders = np.zeros_like(self.refcount)
         for pages in self.lane_pages:
             for p in pages:
@@ -324,18 +328,26 @@ class PageManager:
         holders[self.tree_held] += 1
         if not (holders == self.refcount).all():
             bad = np.nonzero(holders != self.refcount)[0]
-            raise AssertionError(f"refcount mismatch on pages {bad.tolist()}")
+            out.append(f"refcount mismatch on pages {bad.tolist()}")
         free = set(self._free)
         if len(free) != len(self._free):
-            raise AssertionError("duplicate pages on the free list")
+            out.append("duplicate pages on the free list")
         if TRASH_PAGE in free:
-            raise AssertionError("trash page on the free list")
+            out.append("trash page on the free list")
         referenced = set(int(p) for p in np.nonzero(self.refcount)[0])
         both = free & referenced
         if both:
-            raise AssertionError(f"pages both free and referenced: {both}")
-        if len(free) + len(referenced) != self.n_pages - 1:
-            raise AssertionError("pages leaked (neither free nor referenced)")
+            out.append(f"pages both free and referenced: {sorted(both)}")
+        elif len(free) + len(referenced) != self.n_pages - 1:
+            out.append("pages leaked (neither free nor referenced)")
         for lane, pages in enumerate(self.lane_pages):
             if self.block_tables[lane, :len(pages)].tolist() != pages:
-                raise AssertionError(f"lane {lane} table/page-list mismatch")
+                out.append(f"lane {lane} table/page-list mismatch")
+        return out
+
+    def check_invariants(self) -> None:
+        """Raise on the first inconsistency ``invariant_violations`` finds
+        (the property-test surface; unchanged behaviour)."""
+        bad = self.invariant_violations()
+        if bad:
+            raise AssertionError(bad[0])

@@ -146,3 +146,14 @@ class PrefixCache:
         protected path can pin some of them during one admission gate."""
         mgr = self.manager
         return int((mgr.tree_held & (mgr.refcount == 1)).sum())
+
+    def stats(self) -> dict:
+        """Structured snapshot of the tree for the observability layer:
+        what's cached, what's reclaimable, and the epoch (plan-memo
+        generation) — one dict, JSON-serializable."""
+        return {
+            "cached_pages": self.cached_pages,
+            "evictable_pages": self.evictable_pages,
+            "cached_tokens": self.cached_pages * self.page_size,
+            "epoch": self.epoch,
+        }

@@ -83,6 +83,7 @@ from repro.configs.base import (
     pages_for,
 )
 from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.obs import DISABLED, Observability
 from repro.paging import (
     PagedCache,
     chunkable,
@@ -275,7 +276,8 @@ class EngineConfig:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
-                 policies: Optional[EnginePolicies] = None):
+                 policies: Optional[EnginePolicies] = None,
+                 obs: Optional[Observability] = None):
         if cfg.is_encoder_decoder or cfg.frontend is not None:
             raise ValueError(
                 "ServingEngine handles decoder-only token-input models; "
@@ -298,6 +300,10 @@ class ServingEngine:
         self.paged = engine_cfg.cache_mode == "paged"
 
         self.policies = policies if policies is not None else EnginePolicies()
+        # observability bundle (repro/obs/): the DISABLED singleton's null
+        # sinks make every tracer/event/profiler call below a no-op, so the
+        # hot path is instrumented unconditionally at zero disabled cost
+        self.obs = obs if obs is not None else DISABLED
 
         n = engine_cfg.n_slots
         self.scheduler = Scheduler(n, engine_cfg.max_prefills_per_step,
@@ -331,8 +337,8 @@ class ServingEngine:
                         "use prefill_chunk=None")
             self.store = PagedCache(cfg, n, engine_cfg.cache_len, ps,
                                     engine_cfg.n_pages)
-            self.metrics.pages_total = self.store.n_pages
-            self.metrics.page_size = ps
+            self.metrics.set_gauge("pages_total", self.store.n_pages)
+            self.metrics.set_gauge("page_size", ps)
             # chunk length for BOTH long-prompt chunking and shared-prefix
             # suffix prefill; the prefix cache falls back to one page per
             # chunk (trivially page-aligned) when prefill_chunk is unset
@@ -467,6 +473,9 @@ class ServingEngine:
         )
         self._next_id += 1
         self.scheduler.submit(req)
+        self.obs.events.emit("queued", req.req_id, prompt_len=req.prompt_len,
+                             max_new_tokens=max_new_tokens,
+                             priority=priority)
         return req
 
     def _bucket_len(self, prompt_len: int) -> int:
@@ -486,7 +495,9 @@ class ServingEngine:
         s = req.sampling
         self._plan_cache.pop(req.req_id, None)  # admitted: plan consumed
         req.append_token(tok)  # stamps TTFT
-        self.metrics.prefills += 1
+        self.metrics.inc("prefills")
+        self.obs.events.emit("first_token", req.req_id, slot=slot,
+                             ttft_s=req.ttft_s)
         if self._drafter is not None:
             self._drafter.admit(slot, req.prompt)
         self._tokens = jnp.asarray(self._tokens).at[slot].set(tok)
@@ -506,18 +517,23 @@ class ServingEngine:
             np.asarray([s.greedy]),
             self._lane_key(req)[None],
         )
-        if self.paged:
-            tok_dev, self.store.cache = self._paged_admit(
-                req, slot, tokens, padded_len, common)
-            self._record_miss(req)
-            self._maybe_publish(req, slot)
-        else:
-            tok_dev, self.store.cache = self._admit_fn(
-                self.store.cache, self.params, tokens,
-                np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
-                *common, self.store._axes_flat,
-            )
-        self.metrics.prefill_dispatches += 1
+        self.obs.events.emit("admitted", req.req_id, slot=slot, mode="cold",
+                             queue_wait_s=req.queue_wait_s)
+        with self.obs.tracer.span("prefill", req=req.req_id, slot=slot,
+                                  tokens=padded_len) as sp:
+            if self.paged:
+                tok_dev, self.store.cache = self._paged_admit(
+                    req, slot, tokens, padded_len, common)
+                self._record_miss(req)
+                self._maybe_publish(req, slot)
+            else:
+                tok_dev, self.store.cache = self._admit_fn(
+                    self.store.cache, self.params, tokens,
+                    np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
+                    *common, self.store._axes_flat,
+                )
+            sp.fence(tok_dev)
+        self.metrics.inc("prefill_dispatches")
         self._arm_lane(req, slot, int(np.asarray(tok_dev)[0]))
 
     def _admit_group(self, group: list[tuple[Request, int]]) -> None:
@@ -539,12 +555,19 @@ class ServingEngine:
             temps[i], topk[i], greedy[i] = s.temperature, s.top_k, s.greedy
             keys[i] = self._lane_key(req)
         slots = np.asarray([slot for _, slot in group], np.int32)
+        for req, slot in group:
+            self.obs.events.emit("admitted", req.req_id, slot=slot,
+                                 mode="stacked", group=k,
+                                 queue_wait_s=req.queue_wait_s)
         admit_fn = _jitted_admit_group(self.cfg, self.engine_cfg.cache_len, k)
-        toks_dev, self.store.cache = admit_fn(
-            self.store.cache, self.params, tokens, lengths, slots,
-            temps, topk, greedy, keys, self.store._axes_flat)
-        self.metrics.prefill_dispatches += 1
-        self.metrics.stacked_prefills += k
+        with self.obs.tracer.span("prefill_stacked", k=k,
+                                  tokens=padded_len) as sp:
+            toks_dev, self.store.cache = admit_fn(
+                self.store.cache, self.params, tokens, lengths, slots,
+                temps, topk, greedy, keys, self.store._axes_flat)
+            sp.fence(toks_dev)
+        self.metrics.inc("prefill_dispatches")
+        self.metrics.inc("stacked_prefills", k)
         toks = np.asarray(toks_dev)
         for i, (req, slot) in enumerate(group):
             self._arm_lane(req, slot, int(toks[i]))
@@ -583,12 +606,19 @@ class ServingEngine:
             keys[i] = self._lane_key(req)
             table_rows[i] = mgr.block_tables[slot]
         lanes = np.asarray([slot for _, slot in group], np.int32)
+        for req, slot in group:
+            self.obs.events.emit("admitted", req.req_id, slot=slot,
+                                 mode="stacked", group=k,
+                                 queue_wait_s=req.queue_wait_s)
         admit_fn = _jitted_admit_paged_group(self.cfg, single_len, k)
-        toks_dev, self.store.cache = admit_fn(
-            self.store.cache, self.params, tokens, lengths, lanes,
-            page_ids, table_rows, temps, topk, greedy, keys)
-        self.metrics.prefill_dispatches += 1
-        self.metrics.stacked_prefills += k
+        with self.obs.tracer.span("prefill_stacked", k=k,
+                                  tokens=padded_len) as sp:
+            toks_dev, self.store.cache = admit_fn(
+                self.store.cache, self.params, tokens, lengths, lanes,
+                page_ids, table_rows, temps, topk, greedy, keys)
+            sp.fence(toks_dev)
+        self.metrics.inc("prefill_dispatches")
+        self.metrics.inc("stacked_prefills", k)
         toks = np.asarray(toks_dev)
         for i, (req, slot) in enumerate(group):
             self._record_miss(req)
@@ -715,11 +745,18 @@ class ServingEngine:
                     and deficit <= self.prefix.evictable_pages):
                 freed = self.prefix.evict_for(deficit, protect=protected)
                 if freed:
-                    self.metrics.prefix_evicted_pages += freed
-                    self.metrics.prefix_tree_pages = self.prefix.cached_pages
+                    self.metrics.inc("prefix_evicted_pages", freed)
+                    self.metrics.set_gauge("prefix_tree_pages",
+                                           self.prefix.cached_pages)
+                    self.obs.events.emit("prefix_evict", pages=freed,
+                                         deficit=int(deficit))
             if need <= mgr.available - tally[0]:
                 tally[0] += need
                 return True
+            self.obs.events.emit(
+                "rejected", req.req_id, reason="page_capacity",
+                need_pages=int(need),
+                available=int(mgr.available - tally[0]))
             return False
 
         return gate
@@ -763,7 +800,7 @@ class ServingEngine:
     # -- shared-prefix bookkeeping ---------------------------------------
     def _record_miss(self, req: Request) -> None:
         if self.prefix is not None:
-            self.metrics.prefix_misses += 1
+            self.metrics.inc("prefix_misses")
 
     def _maybe_publish(self, req: Request, slot: int) -> None:
         """After a prefill completes, enter the prompt's full pages into
@@ -773,18 +810,24 @@ class ServingEngine:
         if self.prefix is None or not self.policies.prefix.should_publish(req):
             return
         self.prefix.publish(req.prompt, self.store.manager.lane_pages[slot])
-        self.metrics.prefix_tree_pages = self.prefix.cached_pages
+        self.metrics.set_gauge("prefix_tree_pages", self.prefix.cached_pages)
 
     def _cow(self, slot: int, move) -> None:
         """Apply a copy-on-write fork on device (``move`` = (src, dst))."""
         self.store.copy_pages([move[0]], [move[1]])
-        self.metrics.prefix_cow_forks += 1
+        self.metrics.inc("prefix_cow_forks")
+        req = self.scheduler.request_in(slot)
+        self.obs.events.emit("cow_fork",
+                             req.req_id if req is not None else None,
+                             slot=slot, src=int(move[0]), dst=int(move[1]))
 
     # -- chunked prefill -------------------------------------------------
     def _begin_chunked(self, req: Request, slot: int,
                        finished: list[Request]) -> None:
         mgr = self.store.manager
         mgr.admit(slot, self._reserve_tokens(req))
+        self.obs.events.emit("admitted", req.req_id, slot=slot,
+                             mode="chunked", queue_wait_s=req.queue_wait_s)
         self.scheduler.begin_chunked(slot)
         req.prefill_done = 0
         self._record_miss(req)
@@ -800,11 +843,16 @@ class ServingEngine:
         mgr.admit(slot, self._prefix_rows(req, plan),
                   adopt_pages=plan.pages,
                   forks=0 if plan.fork_index is None else 1)
+        self.obs.events.emit("admitted", req.req_id, slot=slot, mode="prefix",
+                             cached_tokens=plan.resume,
+                             cached_pages=len(plan.pages),
+                             fork=plan.fork_index is not None,
+                             queue_wait_s=req.queue_wait_s)
         if plan.fork_index is not None:
             self._cow(slot, mgr.cow_fork(slot, plan.fork_index))
         self.prefix.tree.touch(plan.nodes)
-        self.metrics.prefix_hits += 1
-        self.metrics.prefix_hit_tokens += plan.resume
+        self.metrics.inc("prefix_hits")
+        self.metrics.inc("prefix_hit_tokens", plan.resume)
         self.scheduler.begin_chunked(slot)
         req.prefill_done = plan.resume
         self._process_chunk(req, slot, finished)
@@ -830,12 +878,17 @@ class ServingEngine:
         self.store.sync_tables()
         tokens = np.zeros((1, c), np.int32)
         tokens[0, :n] = req.prompt[start:start + n]
-        logits, self.store.cache = self._chunk_fn(
-            self.params, self.store.cache, tokens, jnp.int32(slot),
-            np.asarray([start], np.int32), np.asarray([n], np.int32))
+        with self.obs.tracer.span("chunk", req=req.req_id, slot=slot,
+                                  start=start, n=n) as sp:
+            logits, self.store.cache = self._chunk_fn(
+                self.params, self.store.cache, tokens, jnp.int32(slot),
+                np.asarray([start], np.int32), np.asarray([n], np.int32))
+            sp.fence(logits)
         req.prefill_done = start + n
-        self.metrics.chunk_steps += 1
-        self.metrics.prefill_dispatches += 1
+        self.metrics.inc("chunk_steps")
+        self.metrics.inc("prefill_dispatches")
+        self.obs.events.emit("chunk", req.req_id, slot=slot, start=start, n=n,
+                             done=req.prefill_done >= req.prompt_len)
         if req.prefill_done >= req.prompt_len:
             s = req.sampling
             tok_dev = _sample_jit(
@@ -856,9 +909,26 @@ class ServingEngine:
         """One scheduler iteration: interleave admissions (or prompt
         chunks) with a batched decode over all occupied lanes. Returns
         requests finished this step."""
+        obs = self.obs
+        obs.profiler.step_begin()
+        with obs.tracer.span("step", idx=self._step_idx + 1):
+            finished = self._step_inner()
+        obs.profiler.step_end()
+        if obs.debug_invariants and self.paged and self._has_paged_kinds:
+            bad = self.store.manager.invariant_violations()
+            if bad:
+                obs.events.emit("invariant_violation", step=self._step_idx,
+                                violations=bad)
+                raise AssertionError(
+                    f"page-pool invariants violated at step {self._step_idx}: "
+                    + "; ".join(bad))
+        self.metrics.touch()
+        return finished
+
+    def _step_inner(self) -> list[Request]:
         self.metrics.begin()
         self._step_idx += 1
-        self.metrics.steps += 1
+        self.metrics.inc("steps")
         finished: list[Request] = []
         budget = self.engine_cfg.max_prefills_per_step
 
@@ -909,16 +979,22 @@ class ServingEngine:
                     self._evict(slot, finished)
         if did_prefill:
             jax.block_until_ready(self.store.cache["pos"])
-            self.metrics.prefill_s += time.perf_counter() - t0
+            self.metrics.inc("prefill_s", time.perf_counter() - t0)
 
         occupancy = len(self.scheduler.running) + len(self.scheduler.chunking)
-        self.metrics.peak_running = max(self.metrics.peak_running, occupancy)
+        self.metrics.max_gauge("peak_running", occupancy)
 
         if self.scheduler.running and self._spec is not None and self._spec_ready():
             t0 = time.perf_counter()
             self._spec_decode(finished)
-            self.metrics.decode_s += time.perf_counter() - t0
+            self.metrics.inc("decode_s", time.perf_counter() - t0)
         elif self.scheduler.running:
+            if self._spec is not None:
+                # spec configured but this batch can't speculate (a
+                # non-greedy lane) — the round falls back to plain decode
+                self.obs.events.emit("spec_fallback",
+                                     reason="non_greedy_lane",
+                                     batch=len(self.scheduler.running))
             t0 = time.perf_counter()
             running = self.scheduler.running
             if self.paged and self._has_paged_kinds:
@@ -934,14 +1010,15 @@ class ServingEngine:
                             self._cow(slot, move)
                     mgr.ensure(slot, row + 1)
                 self.store.sync_tables()
-                self.metrics.peak_pages_used = max(
-                    self.metrics.peak_pages_used, mgr.pages_in_use)
+                self.metrics.max_gauge("peak_pages_used", mgr.pages_in_use)
             active = np.zeros((self.engine_cfg.n_slots,), bool)
             active[list(running)] = True
-            toks, self.store.cache = self._decode_sample(
-                self.params, self._tokens, self.store.cache, active,
-                self._temps, self._topk, self._greedy, self._keys,
-                not bool(self._greedy.all()))
+            with self.obs.tracer.span("decode", batch=len(running)) as sp:
+                toks, self.store.cache = self._decode_sample(
+                    self.params, self._tokens, self.store.cache, active,
+                    self._temps, self._topk, self._greedy, self._keys,
+                    not bool(self._greedy.all()))
+                sp.fence(toks)
             if self.paged:
                 self.store.manager.advance(running)
             # feed the sampled tokens into the next decode device-to-device;
@@ -949,20 +1026,24 @@ class ServingEngine:
             # so all-greedy stretches pipeline like the static loop does
             self._tokens = toks
             self._pending.append((toks, dict(running)))
-            self.metrics.decode_steps += 1
+            self.metrics.inc("decode_steps")
             if self._needs_sync():
                 self._flush(finished)
-            self.metrics.decode_s += time.perf_counter() - t0
+            self.metrics.inc("decode_s", time.perf_counter() - t0)
 
         # policy-triggered pool compaction: evictions above may have left
         # holes; compacting now keeps the free list contiguous for the next
         # admissions (ROADMAP PR 3 follow-up: defrag existed, untriggered)
         if (self.paged and self._has_paged_kinds
                 and self.policies.defrag.should_defrag(self.store.manager)):
-            moved = self.store.defrag()
+            with self.obs.tracer.span("defrag") as sp:
+                moved = self.store.defrag()
+                sp.set(pages_moved=moved)
             if moved:
-                self.metrics.defrag_count += 1
-                self.metrics.defrag_pages_moved += moved
+                self.metrics.inc("defrag_count")
+                self.metrics.inc("defrag_pages_moved", moved)
+                self.obs.events.emit("defrag", pages_moved=moved,
+                                     step=self._step_idx)
         return finished
 
     # ------------------------------------------------------------------
@@ -1015,7 +1096,7 @@ class ServingEngine:
                 toks[slot, 1:1 + len(props)] = props
             n_draft[slot] = len(props)
             active[slot] = True
-            self.metrics.spec_proposed += len(props)
+            self.metrics.inc("spec_proposed", len(props))
 
         mgr = self.store.manager if self.paged else None
         base_row = {}
@@ -1029,13 +1110,14 @@ class ServingEngine:
                         self._cow(slot, move)
                 mgr.ensure(slot, row + w)
             self.store.sync_tables()
-            self.metrics.peak_pages_used = max(
-                self.metrics.peak_pages_used, mgr.pages_in_use)
+            self.metrics.max_gauge("peak_pages_used", mgr.pages_in_use)
 
-        self.store.cache, targets, accepted = self._verify_fn(
-            self.params, self.store.cache, toks, n_draft, active)
-        self.metrics.verify_dispatches += 1
-        self.metrics.decode_steps += 1
+        with self.obs.tracer.span("verify", batch=len(slots), width=w) as sp:
+            self.store.cache, targets, accepted = self._verify_fn(
+                self.params, self.store.cache, toks, n_draft, active)
+            sp.fence(targets, accepted)
+        self.metrics.inc("verify_dispatches")
+        self.metrics.inc("decode_steps")
         targets = np.asarray(targets)
         accepted = np.asarray(accepted)
 
@@ -1050,7 +1132,8 @@ class ServingEngine:
                 emitted += 1
                 if self._should_evict(req):
                     break
-            self.metrics.spec_accepted += min(emitted, a)
+            self.metrics.inc("spec_accepted", min(emitted, a))
+            self.metrics.observe("accept_len", min(emitted, a))
             if self.paged and self._has_paged_kinds:
                 # rollback = block-table truncate: rejected rows' pages
                 # stay reserved to the lane and are overwritten in place
@@ -1102,6 +1185,12 @@ class ServingEngine:
             self._drafter.release(slot)
         self._greedy[slot] = True  # free lanes sample nothing
         self.metrics.record_finished(req)
+        reason_of = getattr(self.policies.eviction, "evict_reason", None)
+        self.obs.events.emit(
+            "finished", req.req_id, slot=slot,
+            n_tokens=len(req.output_tokens),
+            reason=reason_of(req) if reason_of is not None else req.finish_reason,
+            latency_s=req.latency_s)
         finished.append(req)
 
     @property

@@ -243,6 +243,16 @@ class BudgetOrEOSEviction:
     def should_evict(self, req: Request) -> bool:
         return req.done
 
+    def evict_reason(self, req: Request) -> str:
+        """Why ``should_evict`` fired — recorded on the scheduler event
+        log's ``finished`` event.  Custom eviction policies may expose the
+        same hook (e.g. ``"slo_deadline"``); the engine falls back to the
+        budget/EOS distinction when they don't."""
+        if (req.eos_token is not None and req.output_tokens
+                and req.output_tokens[-1] == req.eos_token):
+            return "eos"
+        return "length"
+
 
 class NeverDefrag:
     """Disable automatic compaction (the pre-policy behaviour)."""

@@ -75,6 +75,7 @@ class Request:
 
     # wall-clock timeline (engine-stamped)
     submit_time: float = 0.0
+    admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
 
@@ -119,3 +120,21 @@ class Request:
         if self.finish_time is None:
             return None
         return self.finish_time - self.submit_time
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Time spent WAITING (submit -> admitted into a lane)."""
+        if self.admit_time is None:
+            return None
+        return self.admit_time - self.submit_time
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        """Why generation stopped: ``"eos"`` or ``"length"`` (None while
+        still in flight)."""
+        if self.state is not RequestState.FINISHED:
+            return None
+        if (self.eos_token is not None and self.output_tokens
+                and self.output_tokens[-1] == self.eos_token):
+            return "eos"
+        return "length"

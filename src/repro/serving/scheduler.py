@@ -31,6 +31,7 @@ serving tests rely on.
 from __future__ import annotations
 
 import heapq
+import time
 import warnings
 from collections import deque
 from typing import Callable, Optional
@@ -80,10 +81,12 @@ class Scheduler:
         for i in reversed(idxs):
             del self.waiting[i]
         out = []
+        now = time.perf_counter()
         for req in reqs:
             slot = heapq.heappop(self._free)
             req.state = RequestState.RUNNING
             req.slot = slot
+            req.admit_time = now  # queue-wait metric: submit -> here
             self.running[slot] = req
             out.append((req, slot))
         return out

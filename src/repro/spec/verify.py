@@ -48,17 +48,24 @@ def jitted_verify(cfg, width: int):
     """
 
     def fn(params, cache, tokens, n_draft, active):
-        logits, cache = model_lib.verify_step(params, cfg, tokens, cache, active)
-        targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if width > 1:
-            match = tokens[:, 1:] == targets[:, :-1]
-            ok = match & (jnp.arange(width - 1)[None, :] < n_draft[:, None])
-            accepted = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
-        else:
-            accepted = jnp.zeros((tokens.shape[0],), jnp.int32)
-        pos = cache["pos"]
-        cache = dict(cache)
-        cache["pos"] = jnp.where(active, pos + accepted + 1, 0)
+        # named scopes label the verify window + accept rule in device
+        # profiles (obs.StepProfiler / --profile), separating the model
+        # forward from the accept arithmetic in the HLO timeline
+        with jax.named_scope("spec_verify"):
+            logits, cache = model_lib.verify_step(params, cfg, tokens, cache,
+                                                  active)
+        with jax.named_scope("spec_accept"):
+            targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if width > 1:
+                match = tokens[:, 1:] == targets[:, :-1]
+                ok = match & (jnp.arange(width - 1)[None, :] < n_draft[:, None])
+                accepted = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                                   axis=1)
+            else:
+                accepted = jnp.zeros((tokens.shape[0],), jnp.int32)
+            pos = cache["pos"]
+            cache = dict(cache)
+            cache["pos"] = jnp.where(active, pos + accepted + 1, 0)
         return cache, targets, accepted
 
     return jax.jit(fn, donate_argnums=(1,))
