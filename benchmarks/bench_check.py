@@ -33,19 +33,23 @@ import statistics
 import sys
 
 # the machine-independent headline ratios (higher is better), one per
-# sweep kind: continuous-vs-static, spec-on-vs-off, prefix-cached-vs-cold
+# sweep kind: continuous-vs-static, spec-on-vs-off, prefix-cached-vs-cold,
+# plus deadline-respecting throughput share under overload (goodput
+# tok/s over total tok/s at stagger 0 — the SLO accounting headline)
 GATED_METRICS = (
     "speedup_vs_static",
     "speedup_vs_plain",
     "speedup_vs_cold",
+    "goodput_frac_overload",
 )
 
 # tail-latency ratios where LOWER is better (engine p99 TTFT over static,
-# cached p99 TTFT over cold): these fail when the value *rises* past
-# baseline * (1 + threshold)
+# cached p99 TTFT over cold, overloaded-engine p99 TTFT over static):
+# these fail when the value *rises* past baseline * (1 + threshold)
 GATED_METRICS_LOWER = (
     "ttft_p99_vs_static",
     "ttft_p99_ratio_vs_cold",
+    "ttft_p99_overload_vs_static",
 )
 
 
@@ -82,6 +86,13 @@ def check_metric(path: pathlib.Path, runs: list, metric: str,
 
 
 def check_file(path: pathlib.Path, threshold: float, min_priors: int) -> bool:
+    # a missing or zero-byte trajectory is a fresh start, not a failure —
+    # CI on a new branch has nothing to gate against; only a file that
+    # EXISTS with content but cannot parse is treated as corruption
+    if not path.exists() or path.stat().st_size == 0:
+        print(f"[bench_check] {path.name}: missing or empty -- skipped "
+              f"(fresh trajectory)")
+        return True
     try:
         doc = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:

@@ -60,6 +60,7 @@ from repro.api import (
     SpecConfig,
     serve_batch,
 )
+from repro.serving.sampling import SamplingParams
 from repro.configs import (
     default_cache_len,
     default_page_count,
@@ -133,8 +134,10 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
 def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
                stagger: int = 0, quant_mode: str = "bf16",
                kv_dtype: str = "bf16", prefill_chunk=None, spec=None,
-               **kv_kw):
-    """One facade cell: the RuntimeConfig IS the cell description."""
+               deadline=None, **kv_kw):
+    """One facade cell: the RuntimeConfig IS the cell description.
+    ``deadline`` attaches an SLO deadline (seconds from submit) to every
+    request so the record carries goodput / hit-miss accounting."""
     runtime = RuntimeConfig(
         quant=QuantRuntime(mode=quant_mode),
         kv=KVConfig(dtype=kv_dtype, cache_len=cache_len, **kv_kw),
@@ -143,7 +146,12 @@ def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
         spec=spec if spec is not None else SpecConfig(),
     )
     llm = LLM(config=cfg, params=params, runtime=runtime)
-    arrivals = [(i * stagger, p, b) for i, (p, b) in enumerate(workload)]
+    if deadline is not None:
+        sp = SamplingParams(deadline_s=deadline)
+        arrivals = [(i * stagger, p, b, sp)
+                    for i, (p, b) in enumerate(workload)]
+    else:
+        arrivals = [(i * stagger, p, b) for i, (p, b) in enumerate(workload)]
     metrics = llm.engine.run(arrivals)
     rep = metrics.report()
     if spec is not None and spec.enabled:
@@ -462,6 +470,38 @@ def main():
               f"{rec['ttft_p99_s']:9.3f} {rec['ttft_max_s']:9.3f}   "
               f"peak {rec['peak_running']} lanes in {rec['pages_total']} pages")
 
+    # SLO/goodput cell: the overload regime — every request arrives at t=0
+    # into the SMALLEST lane count, so queue waits dominate the tail.  The
+    # deadline is calibrated on this host from the same cell's measured
+    # no-deadline latency (1.5x the mean), which lands between the early
+    # groups (hit) and the deeply queued tail (miss) — so the goodput
+    # fraction measures the scheduler's deadline behaviour, not the
+    # machine's absolute speed, and gates as a ratio in bench_check.
+    slots = min(slot_sweep)
+    calib = next(r for r in records if r["mode"] == "engine"
+                 and r["slots"] == slots and r["stagger"] == 0)
+    deadline = max(1.5 * calib["latency_mean_s"], 1e-3)
+    rec = max((run_engine(cfg, params, workload, slots, cache_len, buckets,
+                          0, deadline=deadline, **cell_kw)
+               for _ in range(args.repeats)),
+              key=lambda r: r["goodput_tokens_per_s"])
+    rec["mode"], rec["slots"] = "overload", slots
+    rec["deadline_s"] = round(deadline, 4)
+    rec["repeats"] = args.repeats
+    records.append(rec)
+    goodput_frac = (rec["goodput_tokens_per_s"]
+                    / max(rec["tokens_per_s"], 1e-9))
+    static_p99 = next(r["ttft_p99_s"] for r in records
+                      if r["mode"] == "static" and r["slots"] == slots)
+    overload_p99_ratio = rec["ttft_p99_s"] / max(static_p99, 1e-9)
+    print(f"{'overload':>8s} {slots:6d} {0:8d} {rec['tokens_per_s']:8.1f} "
+          f"{rec['decode_steps']:6d} {rec['ttft_mean_s']:10.3f} "
+          f"{rec['ttft_p99_s']:9.3f} {rec['ttft_max_s']:9.3f}   "
+          f"deadline {deadline*1e3:.0f}ms: {rec['deadline_hits']} hit / "
+          f"{rec['deadline_misses']} missed, goodput "
+          f"{rec['goodput_tokens_per_s']:.1f} tok/s "
+          f"({goodput_frac:.2f} of total)")
+
     # headline: per-slot-count ratio of the engine's best arrival pattern vs
     # static's best case (all requests available at t=0 — static cannot even
     # express staggered arrivals without waiting to fill a batch). The
@@ -518,6 +558,11 @@ def main():
         "ttft_p99_vs_static": round(max(ttft_ratios.values()), 3),
         "ttft_p99_by_slots": {str(s): round(r, 3)
                               for s, r in ttft_ratios.items()},
+        # SLO headlines (overload cell): deadline-respecting share of
+        # throughput, and the overloaded engine's p99 TTFT over static's —
+        # both host-independent ratios; bench_check gates them
+        "goodput_frac_overload": round(goodput_frac, 3),
+        "ttft_p99_overload_vs_static": round(overload_p99_ratio, 3),
         "paged_peak_lanes_by_slots": {str(s): c for s, (c, _) in paged_conc.items()},
         "records": records,
     }

@@ -284,6 +284,10 @@ class RuntimeConfig:
             gemm_backend=self.quant.gemm_backend,
             kv_cache_dtype=self.kv.dtype,
             paged_attn_impl=self.kv.paged_attn_impl,
+            # watchdog instrumentation changes the traced graph (debug
+            # callbacks), so it must key the jit caches like any other
+            # ModelConfig field — a toggle can never reuse a stale trace
+            numerics_watchdog=self.obs.watchdog,
         )
 
     def resolve_engine(self, cfg: ModelConfig,

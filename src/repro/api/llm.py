@@ -77,6 +77,48 @@ class LLM:
         # ``llm.obs.save()`` writes the configured trace/event sinks
         self.obs = self.runtime.obs.build()
         self._engine: Optional[ServingEngine] = None
+        # live telemetry frontend: a stdlib HTTP server polling the engine's
+        # registry (plus the numerics watchdog's, when armed) on each
+        # scrape.  Pure pull — nothing on the dispatch path knows about it.
+        self.metrics_server = None
+        if self.runtime.obs.metrics_port is not None:
+            from repro.obs.server import MetricsServer
+
+            self.metrics_server = MetricsServer(
+                self._collect_metrics,
+                port=self.runtime.obs.metrics_port).start()
+
+    def _collect_metrics(self):
+        """Scrape-time collector: registries + cheap derived gauges.
+        Derived values read host-side counters only (no ``report()``, no
+        device sync), so a scrape never perturbs the run."""
+        from repro.obs import watchdog as _watchdog
+
+        regs, derived = [], {}
+        m = self._engine.metrics if self._engine is not None else None
+        if m is not None:
+            regs.append(m.registry)
+            wall = m.wall_s
+            toks = m.generated_tokens
+            derived["wall_seconds"] = wall
+            derived["generated_tokens"] = float(toks)
+            derived["tokens_per_second"] = toks / max(wall, 1e-9)
+            derived["goodput_tokens_per_second"] = (
+                m.goodput_tokens / max(wall, 1e-9))
+            derived["requests_finished"] = float(len(m.finished))
+        wreg = _watchdog.peek_registry()
+        if wreg is not None:
+            regs.append(wreg)
+        return regs, derived
+
+    def close(self) -> None:
+        """Stop the metrics server (if any) and close event/trace sinks.
+        Idempotent; the LLM stays usable for generate/stream afterwards
+        minus the closed sinks."""
+        if self.metrics_server is not None:
+            self.metrics_server.close()
+            self.metrics_server = None
+        self.obs.close()
 
     # -- engine lifecycle --------------------------------------------------
     def _ensure_engine(self, prompt_len: int, gen_tokens: int) -> ServingEngine:

@@ -24,6 +24,11 @@ class RequestOutput:
     # -> first_token -> finished dicts from ``obs.EventLog``); None when
     # observability is disabled
     timeline: Optional[list[dict]] = None
+    # SLO outcome: finished within sampling.deadline_s?  None = no deadline
+    deadline_hit: Optional[bool] = None
+    # per-request resource attribution (``RequestCost.as_dict()``); None
+    # when the engine recorded no dispatches for this request
+    cost: Optional[dict] = None
 
     @property
     def queue_wait_s(self) -> Optional[float]:
@@ -48,4 +53,6 @@ class RequestOutput:
             ttft_s=req.ttft_s,
             latency_s=req.latency_s,
             timeline=timeline,
+            deadline_hit=req.deadline_hit,
+            cost=req.cost.as_dict() if req.cost.dispatches else None,
         )

@@ -18,6 +18,7 @@ are gone; they all route through here / the registry now.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax.numpy as jnp
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 from repro.backends import impls  # noqa: F401  (populates the registry)
 from repro.backends.registry import resolve_backend
 from repro.backends.spec import parse_quant_mode
+from repro.obs import watchdog as _watchdog
 
 __all__ = ["dynamic_quant", "effective_bits", "quantized_linear", "gemm_int"]
 
@@ -70,6 +72,45 @@ def effective_bits(spec, k: int) -> tuple[int, int]:
     return a, w
 
 
+def _stage_watchdog_stats(label: str, quant_mode: str, xf, wf, xq, xs, wq,
+                          a_bits: int, w_bits: int, nominal: int) -> None:
+    """Stage this GEMM's numerics stats out of the jit via debug.callback.
+
+    Everything is computed in-graph (no host sync; the callback is an
+    effectful side output that does not feed the computation, so enabling
+    it cannot change results):
+
+    - at-rail occupancy of both quantized operands (``rail_hits``),
+    - activation ``amax`` and mean relative quantization error,
+    - an accumulator-magnitude bound in bits: ``max_row sum_k |xq|``
+      times ``max |wq|`` is the largest int32 any output element can
+      reach, so ``log2`` of it against the 31 usable magnitude bits is
+      the live headroom the ``effective_bits`` clamp guarantees
+      statically (the fused gemm_dequant path never materializes the
+      accumulator, so this bound is the only runtime view of it).
+    """
+    import jax
+
+    from repro.quant.qtensor import rail_hits
+
+    xqf = xq.astype(jnp.float32)
+    deq = xqf * xs
+    abs_mean = jnp.mean(jnp.abs(xf))
+    stats = jnp.stack([
+        rail_hits(xq, a_bits).astype(jnp.float32),
+        rail_hits(wq, w_bits).astype(jnp.float32),
+        jnp.float32(xq.size),
+        jnp.float32(wq.size),
+        jnp.max(jnp.abs(xf)),
+        jnp.mean(jnp.abs(xf - deq)) / (abs_mean + 1e-12),
+        jnp.log2(1.0 + jnp.max(jnp.sum(jnp.abs(xqf), axis=-1))
+                 * jnp.max(jnp.abs(wq.astype(jnp.float32)))),
+        jnp.float32(nominal - (a_bits + w_bits)),
+    ])
+    jax.debug.callback(
+        functools.partial(_watchdog.record, label, quant_mode), stats)
+
+
 def quantized_linear(
     x: jnp.ndarray,
     w: jnp.ndarray,
@@ -77,14 +118,30 @@ def quantized_linear(
     *,
     backend: Optional[str] = None,
     out_dtype=None,
+    watch: Optional[bool] = None,
+    layer: Optional[str] = None,
 ) -> jnp.ndarray:
-    """x (..., K) fp @ w (K, N) fp -> (..., N) fp via the quantized pipeline."""
+    """x (..., K) fp @ w (K, N) fp -> (..., N) fp via the quantized pipeline.
+
+    ``watch``/``layer`` drive the numerics watchdog explicitly; by
+    default the ambient trace-time context set by the model entry points
+    (``watchdog.watching``, keyed off ``ModelConfig.numerics_watchdog``)
+    decides, so the ~60 model call sites need no extra plumbing.
+    """
     b, spec = resolve_backend(quant_mode, backend)
     a_bits, w_bits = effective_bits(spec, x.shape[-1])
     xf = x.astype(jnp.float32)
     wf = w.astype(jnp.float32)
     xq, xs = dynamic_quant(xf, axis=-1, bits=a_bits)
     wq, ws = dynamic_quant(wf, axis=0, bits=w_bits)
+
+    ctx = _watchdog.trace_ctx()
+    if watch if watch is not None else ctx is not None:
+        label = layer or _watchdog.next_label(
+            ctx, x.shape[-1], w.shape[-1])
+        _stage_watchdog_stats(label, quant_mode, xf, wf, xq, xs, wq,
+                              a_bits, w_bits, spec.a_bits + spec.w_bits)
+
     xq = xq.astype(spec.a_dtype)
     wq = wq.astype(spec.w_dtype)
 

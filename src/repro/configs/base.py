@@ -130,6 +130,12 @@ class ModelConfig:
     # under-report flops/bytes/collectives by ~n_layers. Never enable for
     # real execution of deep configs (compile time is O(depth)).
     scan_unroll: bool = False
+    # Numerics watchdog (repro.obs.watchdog): when set, every quantized
+    # GEMM stages per-layer saturation/amax/quant-error stats through
+    # jax.debug.callback. Lives on ModelConfig (not a global) so every
+    # lru_cached jit wrapper in the engine re-keys when it toggles —
+    # a compiled trace can never be reused across watchdog states.
+    numerics_watchdog: bool = False
 
     def __post_init__(self):
         if self.quant_mode not in QUANT_MODES:

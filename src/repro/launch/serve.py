@@ -41,8 +41,15 @@ per admit/reject/chunk/CoW/defrag/finish event); ``--fence-spans`` makes
 spans block on device values so they measure device work, not dispatch;
 ``--profile DIR`` wraps the first ``--profile-steps`` engine steps in a
 ``jax.profiler`` device trace; ``--debug-invariants`` checks the page
-pool's bookkeeping after every step.  All off by default — the disabled
-engine runs with null sinks and zero extra host syncs.
+pool's bookkeeping after every step.  ``--metrics-port P`` serves a live
+Prometheus ``/metrics`` endpoint (plus ``/healthz`` and a JSON
+``/snapshot``) off the engine's registries; ``--watchdog`` arms the
+numerics watchdog (per-layer saturation counters and amax/quant-error
+histograms from inside the quantized GEMM pipeline, bitwise
+output-invisible); ``--deadline SEC`` attaches an SLO deadline to every
+synthetic request so the run reports goodput and hit/miss counts.  All
+off by default — the disabled engine runs with null sinks and zero extra
+host syncs.
 """
 
 from __future__ import annotations
@@ -114,7 +121,12 @@ def _engine_main(llm: LLM, args) -> None:
     # workload hints anchor the 'auto' bucket ladder to the nominal prompt
     # length (auto_buckets(prompt_len), as the pre-facade CLI built it)
     engine = llm.build_engine(args.prompt_len + args.shared_prefix, args.gen)
+    if llm.metrics_server is not None:
+        print(f"[obs] metrics server at {llm.metrics_server.url}/metrics "
+              f"(also /healthz, /snapshot)")
     sampling = llm.runtime.sampling.to_params()
+    if args.deadline is not None:
+        sampling = dataclasses.replace(sampling, deadline_s=args.deadline)
     arrivals = [(s, p, g, sampling)
                 for s, p, g in synthetic_workload(llm.config, args.requests,
                                                   args.prompt_len, args.gen,
@@ -147,6 +159,14 @@ def _engine_main(llm: LLM, args) -> None:
         print(f"[engine] batched admission: {metrics.prefills} prefills in "
               f"{metrics.prefill_dispatches} dispatches "
               f"({metrics.stacked_prefills} stacked)")
+    if metrics.deadline_hits or metrics.deadline_misses:
+        r = metrics.report()
+        print(f"[engine] SLO: {metrics.deadline_hits} hit / "
+              f"{metrics.deadline_misses} missed deadlines "
+              f"(hit rate {r['deadline_hit_rate']:.2f}, "
+              f"{metrics.deadline_late_admissions} already late at "
+              f"admission) | goodput {r['goodput_tokens_per_s']:.1f} tok/s "
+              f"of {r['tokens_per_s']:.1f} total")
     if metrics.finished:
         first = min(metrics.finished, key=lambda r: r.req_id)
         print(f"[engine] sample (req {first.req_id}):", first.output_tokens[:12])
@@ -159,8 +179,17 @@ def _engine_main(llm: LLM, args) -> None:
               f"queue wait p99 {r['queue_wait_p99_s']*1e3:.1f} ms | "
               f"{len(llm.obs.events)} scheduler events, "
               f"{len(llm.obs.tracer.events)} spans")
+    if llm.runtime.obs.watchdog:
+        from repro.obs import watchdog as _watchdog
+
+        sat = _watchdog.saturation_report()
+        if sat:
+            worst = sorted(sat.items(), key=lambda kv: -kv[1])[:3]
+            rendered = ", ".join(f"{k} {v:.4f}" for k, v in worst)
+            print(f"[obs] watchdog: worst at-rail occupancy {rendered}")
     for path in llm.obs.save():
         print(f"[obs] wrote {path}")
+    llm.close()
 
 
 def _obs_from_args(args) -> ObsConfig:
@@ -171,6 +200,9 @@ def _obs_from_args(args) -> ObsConfig:
         profile_dir=args.profile,
         profile_steps=args.profile_steps,
         debug_invariants=args.debug_invariants,
+        metrics_port=args.metrics_port,
+        events_max_mb=args.events_max_mb,
+        watchdog=args.watchdog,
     )
 
 
@@ -303,6 +335,21 @@ def main():
                     help="obs: engine steps the --profile window covers")
     ap.add_argument("--debug-invariants", action="store_true",
                     help="obs: check page-pool invariants after every step")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="obs: serve live /metrics (Prometheus text "
+                         "exposition) + /healthz + /snapshot on this port "
+                         "(0 = ephemeral; URL printed at startup)")
+    ap.add_argument("--events-max-mb", type=float, default=64.0,
+                    help="obs: rotate the --events JSONL stream past this size")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="obs: numerics watchdog — per-layer saturation/"
+                         "clip counters and amax/quant-error histograms "
+                         "from inside the quantized GEMM pipeline "
+                         "(output-invisible; retraces the jits)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="SLO: per-request deadline in seconds from submit; "
+                         "finished-late requests count as misses and drop "
+                         "out of goodput")
     args = ap.parse_args()
 
     runtime = (load_runtime(args.runtime) if args.runtime

@@ -40,8 +40,28 @@ from repro.models.layers import (
     rmsnorm,
     unembed,
 )
+from repro.obs import watchdog as _watchdog
 
 LOSS_CHUNK = 512
+
+
+def _watched(tag: str):
+    """Wrap a ``(params, cfg, ...)`` entry point in the numerics-watchdog
+    trace-time context when ``cfg.numerics_watchdog`` asks for it.
+
+    The context is consulted by ``quantized_linear`` *while JAX traces
+    the body*, so every quantized GEMM below self-labels
+    (``<tag>.<site>.k<K>n<N>``) without threading a flag through the
+    model call tree.  ``cfg.numerics_watchdog`` is part of every jit
+    cache key, so toggling can never reuse an uninstrumented trace.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(params, cfg, *args, **kw):
+            with _watchdog.watching(tag if cfg.numerics_watchdog else None):
+                return fn(params, cfg, *args, **kw)
+        return wrapper
+    return deco
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +219,7 @@ def _head_table(params, cfg: ModelConfig):
     return params["embed"] if cfg.tie_embeddings else params["head"]
 
 
+@_watched("forward")
 def forward(params, cfg: ModelConfig, batch):
     """Full logits (B, S, V) — use only for small configs/tests."""
     h, _ = backbone(params, cfg, batch)
@@ -233,6 +254,7 @@ def _chunked_ce(hidden, labels, mask, table, cfg: ModelConfig):
 AUX_LOSS_WEIGHT = 0.01
 
 
+@_watched("loss")
 def lm_loss(params, cfg: ModelConfig, batch):
     """Next-token (or label) cross-entropy + MoE aux loss. Scalar fp32."""
     h, aux = backbone(params, cfg, batch)
@@ -327,6 +349,7 @@ def paged_cache_shapes(cfg: ModelConfig, n_lanes: int, cache_len: int,
 # Prefill
 # ---------------------------------------------------------------------------
 
+@_watched("prefill")
 def prefill(params, cfg: ModelConfig, batch, cache_len: int, lengths=None):
     """Process the prompt, return (last-position logits (B, V), cache).
 
@@ -422,6 +445,7 @@ def _prefill_decoder_with_cross(x, params, cfg, positions, cache):
 # Decode
 # ---------------------------------------------------------------------------
 
+@_watched("decode")
 def decode_step(params, cfg: ModelConfig, tokens, cache, active=None):
     """One token for every sequence. tokens: (B,) int32 (or (B,d) embeds).
 
@@ -469,6 +493,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, active=None):
     return logits, new_cache
 
 
+@_watched("verify")
 def verify_step(params, cfg: ModelConfig, tokens, cache, active=None):
     """W tokens for every sequence in one dispatch (speculative verify).
 

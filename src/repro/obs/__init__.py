@@ -20,6 +20,14 @@ layer instead of a bag of mean-only counters:
 * ``config``  — ``ObsConfig`` (the ``RuntimeConfig.obs`` layer) and the
   ``Observability`` bundle the engine consumes; ``DISABLED`` is the
   shared null bundle.
+* ``server``  — the live telemetry frontend: Prometheus text exposition
+  over ``MetricsRegistry`` (histograms as native ``_bucket/_sum/_count``
+  series), a grammar validator, and the stdlib ``MetricsServer`` serving
+  ``/metrics`` + ``/healthz`` + ``/snapshot`` from a daemon thread.
+* ``watchdog`` — the numerics watchdog: per-layer saturation / amax /
+  quant-error / accumulator-headroom stats from every quantized GEMM,
+  staged in-jit through ``jax.debug.callback`` (off: zero overhead; on:
+  bitwise output-invisible).
 
 Two invariants, test-asserted in ``tests/test_obs.py``: disabled
 observability adds **zero overhead** (null sinks, no extra host syncs on
@@ -27,10 +35,14 @@ the decode path), and enabled observability is **output-invisible**
 (greedy token streams stay bitwise identical with tracing on).
 """
 
+from repro.obs import watchdog
 from repro.obs.config import DISABLED, Observability, ObsConfig
 from repro.obs.events import NULL_EVENTS, EventLog, NullEventLog
-from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               labeled, split_labels)
 from repro.obs.profile import NULL_PROFILER, NullStepProfiler, StepProfiler
+from repro.obs.server import (MetricsServer, render_exposition,
+                              validate_exposition)
 from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
 
 __all__ = [
@@ -40,6 +52,7 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "MetricsServer",
     "NULL_EVENTS",
     "NULL_PROFILER",
     "NULL_TRACER",
@@ -51,4 +64,9 @@ __all__ = [
     "Span",
     "StepProfiler",
     "Tracer",
+    "labeled",
+    "render_exposition",
+    "split_labels",
+    "validate_exposition",
+    "watchdog",
 ]

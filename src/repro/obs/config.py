@@ -43,10 +43,25 @@ class ObsConfig:
     # run PageManager.check_invariants() every engine step and emit a
     # structured violation event (then raise) instead of relying on tests
     debug_invariants: bool = False
+    # serve a live /metrics (Prometheus) + /healthz + /snapshot endpoint
+    # on this port (0 = ephemeral).  Polls registries only; does not turn
+    # the tracer/event sinks on and never touches the dispatch path.
+    metrics_port: Optional[int] = None
+    # streaming event sink rotation threshold: when the --events JSONL
+    # file passes this size it is rotated once to <path>.1
+    events_max_mb: float = 64.0
+    # numerics watchdog: per-layer saturation/amax/quant-error stats from
+    # every quantized GEMM (threaded onto ModelConfig so jits re-key)
+    watchdog: bool = False
 
     def __post_init__(self):
         if self.profile_steps < 1:
             raise ValueError("ObsConfig.profile_steps must be >= 1")
+        if self.metrics_port is not None and not (
+                0 <= self.metrics_port <= 65535):
+            raise ValueError("ObsConfig.metrics_port must be in [0, 65535]")
+        if self.events_max_mb <= 0:
+            raise ValueError("ObsConfig.events_max_mb must be positive")
 
     @property
     def resolved_enabled(self) -> bool:
@@ -58,9 +73,17 @@ class ObsConfig:
     def build(self) -> "Observability":
         """The live bundle this config describes (null sinks when off)."""
         on = self.resolved_enabled
+        if not on:
+            events = NULL_EVENTS
+        elif self.events:
+            # a file sink streams incrementally with bounded memory
+            events = EventLog(stream_path=self.events,
+                              max_bytes=int(self.events_max_mb * 2 ** 20))
+        else:
+            events = EventLog()
         return Observability(
             tracer=Tracer(fence_spans=self.fence_spans) if on else NULL_TRACER,
-            events=EventLog() if on else NULL_EVENTS,
+            events=events,
             profiler=(StepProfiler(self.profile_dir, self.profile_steps)
                       if self.profile_dir else NULL_PROFILER),
             debug_invariants=self.debug_invariants,
@@ -102,6 +125,7 @@ class Observability:
 
     def close(self) -> None:
         self.profiler.close()
+        self.events.close()
 
 
 # the shared disabled bundle: stateless null sinks, safe to share between

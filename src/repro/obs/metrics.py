@@ -20,7 +20,36 @@ interpolated estimate for callers that drop samples.
 from __future__ import annotations
 
 import math
+import threading
 from typing import Optional
+
+
+def labeled(name: str, **labels) -> str:
+    """Build a registry key carrying Prometheus-style labels.
+
+    ``labeled("watchdog_act_sat", layer="decode.00")`` ->
+    ``watchdog_act_sat{layer="decode.00"}``.  The exposition renderer
+    groups series by the base name (everything before ``{``), so one
+    metric family can hold many labeled series in a flat registry.
+    """
+    if not labels:
+        return name
+    body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return f"{name}{{{body}}}"
+
+
+def split_labels(key: str) -> tuple[str, dict[str, str]]:
+    """Inverse of :func:`labeled`: registry key -> (base name, labels)."""
+    base, brace, rest = key.partition("{")
+    if not brace:
+        return key, {}
+    labels: dict[str, str] = {}
+    for part in rest.rstrip("}").split(","):
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        labels[k.strip()] = v.strip().strip('"')
+    return base, labels
 
 
 class Counter:
@@ -146,9 +175,16 @@ class Histogram:
 
 
 class MetricsRegistry:
-    """Named counters / gauges / histograms, created on first touch."""
+    """Named counters / gauges / histograms, created on first touch.
+
+    Get-or-create and whole-registry reads take ``lock`` so a metrics
+    server thread can iterate the families while the engine thread is
+    still creating new ones.  Updates to an existing metric are plain
+    attribute pokes — atomic enough under the GIL for monitoring reads.
+    """
 
     def __init__(self):
+        self.lock = threading.Lock()
         self.counters: dict[str, Counter] = {}
         self.gauges: dict[str, Gauge] = {}
         self.histograms: dict[str, Histogram] = {}
@@ -157,19 +193,24 @@ class MetricsRegistry:
     def counter(self, name: str) -> Counter:
         c = self.counters.get(name)
         if c is None:
-            c = self.counters[name] = Counter(name)
+            with self.lock:
+                c = self.counters.setdefault(name, Counter(name))
         return c
 
     def gauge(self, name: str) -> Gauge:
         g = self.gauges.get(name)
         if g is None:
-            g = self.gauges[name] = Gauge(name)
+            with self.lock:
+                g = self.gauges.setdefault(name, Gauge(name))
         return g
 
     def histogram(self, name: str, **kw) -> Histogram:
         h = self.histograms.get(name)
         if h is None:
-            h = self.histograms[name] = Histogram(name, **kw)
+            with self.lock:
+                h = self.histograms.get(name)
+                if h is None:
+                    h = self.histograms[name] = Histogram(name, **kw)
         return h
 
     # -- event-style emission ---------------------------------------------
@@ -188,9 +229,13 @@ class MetricsRegistry:
     # -- export ------------------------------------------------------------
     def snapshot(self) -> dict:
         """Plain-dict dump: counter/gauge values, histogram summaries."""
+        with self.lock:
+            counters = list(self.counters.items())
+            gauges = list(self.gauges.items())
+            histograms = list(self.histograms.items())
         return {
-            "counters": {k: c.value for k, c in self.counters.items()},
-            "gauges": {k: g.value for k, g in self.gauges.items()},
+            "counters": {k: c.value for k, c in counters},
+            "gauges": {k: g.value for k, g in gauges},
             "histograms": {
                 k: {
                     "count": h.total,
@@ -201,6 +246,6 @@ class MetricsRegistry:
                     "p95": h.percentile(95),
                     "p99": h.percentile(99),
                 }
-                for k, h in self.histograms.items()
+                for k, h in histograms
             },
         }

@@ -24,7 +24,16 @@ Two properties the serving engine depends on:
 
 Spans nest by call structure: the tracer keeps a stack, stamps each span
 with its ``depth``, and Perfetto reconstructs the hierarchy from timestamp
-containment on the single engine thread (one ``pid``/``tid``).
+containment on the single engine thread (``tid`` 1).
+
+**Per-lane tracks.**  A span may additionally name the engine lanes
+(slots) it covers — ``tracer.span("decode", lanes=running)`` or
+``span("prefill", lane=slot)``.  The span still lands on the engine
+track, and a copy is emitted per lane at ``tid = slot + 2`` (tid 1 is
+the engine stack), with ``thread_name`` metadata so Perfetto renders one
+track per lane: batched decode/verify dispatches show up as concurrent
+bars across every participating request instead of one engine-thread
+stack.
 """
 
 from __future__ import annotations
@@ -41,15 +50,18 @@ def _now_us() -> float:
 class Span:
     """One in-flight span; use via ``with tracer.span(...) as sp``."""
 
-    __slots__ = ("_tracer", "name", "args", "_t0", "_fences", "_depth")
+    __slots__ = ("_tracer", "name", "args", "_t0", "_fences", "_depth",
+                 "_lanes")
 
-    def __init__(self, tracer: "Tracer", name: str, args: dict):
+    def __init__(self, tracer: "Tracer", name: str, args: dict,
+                 lanes: tuple = ()):
         self._tracer = tracer
         self.name = name
         self.args = args
         self._t0 = 0.0
         self._fences: list = []
         self._depth = 0
+        self._lanes = lanes
 
     def fence(self, *values) -> None:
         """Register device values the span must wait on before closing
@@ -112,10 +124,16 @@ class Tracer:
         self.events: list[dict] = []
         self._stack: list[Span] = []
         self._epoch_us = _now_us()
+        self._lane_tids: set = set()
 
     # -- recording ---------------------------------------------------------
-    def span(self, name: str, **args) -> Span:
-        return Span(self, name, args)
+    def span(self, name: str, lanes=None, lane=None, **args) -> Span:
+        """Open a span.  ``lanes``/``lane`` name the engine slots the
+        dispatch covers; the span is mirrored onto each lane's track."""
+        if lane is not None:
+            lanes = (lane,)
+        return Span(self, name, args,
+                    tuple(lanes) if lanes is not None else ())
 
     def instant(self, name: str, **args) -> None:
         """A zero-duration marker (Chrome ``ph: "i"``)."""
@@ -139,6 +157,15 @@ class Tracer:
         args["depth"] = span._depth
         ev["args"] = args
         self.events.append(ev)
+        # mirror onto per-lane tracks (tid = slot + 2; tid 1 = engine)
+        for slot in span._lanes:
+            tid = int(slot) + 2
+            self._lane_tids.add(tid)
+            lane_ev = dict(ev)
+            lane_ev["tid"] = tid
+            lane_ev["cat"] = "lane"
+            lane_ev["args"] = {**args, "lane": int(slot)}
+            self.events.append(lane_ev)
 
     # -- export ------------------------------------------------------------
     def to_chrome(self) -> dict:
@@ -149,6 +176,9 @@ class Tracer:
             {"name": "thread_name", "ph": "M", "pid": 1, "tid": 1,
              "args": {"name": "engine"}},
         ]
+        for tid in sorted(self._lane_tids):
+            meta.append({"name": "thread_name", "ph": "M", "pid": 1,
+                         "tid": tid, "args": {"name": f"lane {tid - 2}"}})
         return {"traceEvents": meta + self.events, "displayTimeUnit": "ms"}
 
     def save(self, path: str) -> str:

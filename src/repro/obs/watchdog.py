@@ -1,0 +1,153 @@
+"""Numerics watchdog: runtime visibility into quantization headroom.
+
+SPOGA's physical constraint is analog dynamic range — operands wider
+than ~4 bits saturate the optical signal chain, which is why the kernels
+bit-slice byte-size integers and why ``effective_bits`` shrinks operand
+widths until the int32 accumulator cannot wrap.  This module is the
+software mirror of that wall: when enabled, every quantized GEMM in the
+pipeline reports how hard the workload is actually pushing against the
+clamp — per-layer at-rail occupancy (fraction of quantized values
+sitting on the ±qmax rail), activation ``amax``, relative quantization
+error, and the accumulator-magnitude bound in bits — into a module-level
+:class:`MetricsRegistry` that the ``/metrics`` server exposes alongside
+the engine registry.
+
+Mechanics: enablement is a **trace-time** thread-local context.  Model
+entry points (``prefill`` / ``decode_step`` / ``verify_step`` /
+``forward``) enter :func:`watching` when ``ModelConfig.numerics_watchdog``
+is set; ``quantized_linear`` consults :func:`trace_ctx` while JAX is
+tracing and, when active, stages its stats through ``jax.debug.callback``
+into :func:`record`.  Because the flag lives on the (hashable, frozen)
+``ModelConfig``, every jit cache in the engine re-keys automatically —
+a toggled watchdog can never reuse a trace compiled without callbacks.
+Off means the context is never entered: zero callbacks staged, zero
+host syncs, identical jaxprs.  On, ``jax.debug.callback`` is effectful
+but does not feed back into the computation, so outputs stay bitwise
+identical (both properties are test-asserted).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+from repro.obs.metrics import MetricsRegistry, labeled
+
+_LOCK = threading.Lock()
+_REGISTRY: Optional[MetricsRegistry] = None
+_TLS = threading.local()
+
+
+def registry() -> MetricsRegistry:
+    """The watchdog's registry, created on first use."""
+    global _REGISTRY
+    if _REGISTRY is None:
+        with _LOCK:
+            if _REGISTRY is None:
+                _REGISTRY = MetricsRegistry()
+    return _REGISTRY
+
+
+def peek_registry() -> Optional[MetricsRegistry]:
+    """The registry if any watchdog stats were recorded, else None."""
+    return _REGISTRY
+
+
+def reset() -> None:
+    """Drop all recorded stats (tests; fresh serving sessions)."""
+    global _REGISTRY
+    with _LOCK:
+        _REGISTRY = None
+
+
+class _Ctx:
+    __slots__ = ("tag", "n")
+
+    def __init__(self, tag: str):
+        self.tag = tag
+        self.n = 0
+
+
+@contextmanager
+def watching(tag: Optional[str]) -> Iterator[None]:
+    """Enable the watchdog for quantized GEMMs traced in this scope.
+
+    ``tag`` names the entry point (``prefill`` / ``decode`` / ...);
+    ``None`` is a no-op so call sites can pass
+    ``"decode" if cfg.numerics_watchdog else None`` unconditionally.
+    """
+    if tag is None:
+        yield
+        return
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = _Ctx(tag)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def trace_ctx() -> Optional[_Ctx]:
+    """The active trace-time context, if any (consulted while tracing)."""
+    return getattr(_TLS, "ctx", None)
+
+
+def next_label(ctx: Optional[_Ctx], k: int, n: int) -> str:
+    """Stable per-trace-site layer label: ``<tag>.<idx>.k<K>n<N>``.
+
+    The index is a trace-time counter, so re-tracing the same entry
+    point reproduces the same labels.  Under ``lax.scan`` the layer body
+    traces once — scanned layers share one label whose counters then
+    accumulate across all scan iterations at runtime.
+    """
+    if ctx is None:
+        return f"direct.k{k}n{n}"
+    i = ctx.n
+    ctx.n += 1
+    return f"{ctx.tag}.{i:02d}.k{k}n{n}"
+
+
+def record(label: str, spec_name: str, stats) -> None:
+    """Host-side sink for one GEMM's in-jit stats vector.
+
+    Called via ``jax.debug.callback``; ``stats`` arrives as an ndarray
+    ``[act_rail_hits, w_rail_hits, act_elems, w_elems, amax, rel_err,
+    acc_bits, bits_lost]``.  Looked up dynamically (module-level) so a
+    compiled trace never captures a stale registry.
+    """
+    act_sat, w_sat, a_n, w_n, amax, err, acc_bits, lost = (
+        float(v) for v in stats)
+    reg = registry()
+    lab = {"layer": label, "mode": spec_name}
+    reg.inc(labeled("watchdog_calls", **lab))
+    reg.inc(labeled("watchdog_act_sat", **lab), int(act_sat))
+    reg.inc(labeled("watchdog_w_sat", **lab), int(w_sat))
+    reg.inc(labeled("watchdog_act_elems", **lab), int(a_n))
+    reg.inc(labeled("watchdog_w_elems", **lab), int(w_n))
+    if lost:
+        reg.inc(labeled("watchdog_bits_clamped", **lab), int(lost))
+    reg.observe(labeled("watchdog_amax", **lab), amax)
+    reg.observe(labeled("watchdog_quant_err", **lab), err)
+    reg.observe(labeled("watchdog_acc_bits", **lab), acc_bits)
+    reg.set_max(labeled("watchdog_acc_bits_peak", **lab), acc_bits)
+
+
+def saturation_report() -> dict:
+    """Per-layer at-rail occupancy summary (activation side), for quick
+    programmatic checks: ``{layer_key: fraction_at_rail}``."""
+    reg = peek_registry()
+    if reg is None:
+        return {}
+    out = {}
+    with reg.lock:
+        keys = list(reg.counters)
+    for key in keys:
+        if not key.startswith("watchdog_act_sat"):
+            continue
+        suffix = key[len("watchdog_act_sat"):]
+        n = reg.counters.get("watchdog_act_elems" + suffix)
+        if n is None or not n.value:
+            continue
+        out[suffix.strip("{}")] = reg.counters[key].value / n.value
+    return out

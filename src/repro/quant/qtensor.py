@@ -80,3 +80,17 @@ def quantize(
 
 def dequantize(q: QTensor, dtype=jnp.float32) -> jnp.ndarray:
     return q.dequantize(dtype)
+
+
+def rail_hits(data: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Count of quantized values sitting on the ±qmax rail.
+
+    With dynamic absmax scaling the largest-magnitude element maps
+    *exactly* onto ±qmax, so true clipping never occurs — but at-rail
+    occupancy is the saturation signal anyway: a distribution crowding
+    the rail is one re-quantization (or one calibrated static scale)
+    away from clipping, the software mirror of driving an analog channel
+    against its dynamic-range ceiling.  Used by the numerics watchdog.
+    """
+    qmax = qmax_for_bits(bits)
+    return jnp.sum(jnp.abs(data.astype(jnp.float32)) >= qmax)

@@ -432,7 +432,8 @@ class ServingEngine:
                     sampling: Optional[SamplingParams] = None,
                     eos_token: Optional[int] = None,
                     on_token=None, on_text=None, detokenizer=None,
-                    priority: int = 0) -> Request:
+                    priority: int = 0,
+                    deadline_s: Optional[float] = None) -> Request:
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -459,23 +460,29 @@ class ServingEngine:
                     f"request reserves {pages} pages but the pool only has "
                     f"{usable} usable pages; raise n_pages (or lower "
                     f"page_size / the request's budget)")
+        sampling = sampling or SamplingParams()
+        if deadline_s is None:
+            deadline_s = sampling.deadline_s
         req = Request(
             req_id=self._next_id,
             prompt=prompt,
             max_new_tokens=max_new_tokens,
-            sampling=sampling or SamplingParams(),
+            sampling=sampling,
             eos_token=self.engine_cfg.eos_token if eos_token is None else eos_token,
             on_token=on_token,
             on_text=on_text,
             detokenizer=detokenizer,
             priority=priority,
+            deadline_s=deadline_s,
             submit_time=time.perf_counter(),
         )
         self._next_id += 1
         self.scheduler.submit(req)
         self.obs.events.emit("queued", req.req_id, prompt_len=req.prompt_len,
                              max_new_tokens=max_new_tokens,
-                             priority=priority)
+                             priority=priority,
+                             **({"deadline_s": deadline_s}
+                                if deadline_s is not None else {}))
         return req
 
     def _bucket_len(self, prompt_len: int) -> int:
@@ -519,8 +526,9 @@ class ServingEngine:
         )
         self.obs.events.emit("admitted", req.req_id, slot=slot, mode="cold",
                              queue_wait_s=req.queue_wait_s)
-        with self.obs.tracer.span("prefill", req=req.req_id, slot=slot,
-                                  tokens=padded_len) as sp:
+        t0 = time.perf_counter()
+        with self.obs.tracer.span("prefill", lane=slot, req=req.req_id,
+                                  slot=slot, tokens=padded_len) as sp:
             if self.paged:
                 tok_dev, self.store.cache = self._paged_admit(
                     req, slot, tokens, padded_len, common)
@@ -533,6 +541,8 @@ class ServingEngine:
                     *common, self.store._axes_flat,
                 )
             sp.fence(tok_dev)
+        req.cost.prefill_s += time.perf_counter() - t0
+        req.cost.dispatches += 1
         self.metrics.inc("prefill_dispatches")
         self._arm_lane(req, slot, int(np.asarray(tok_dev)[0]))
 
@@ -560,16 +570,20 @@ class ServingEngine:
                                  mode="stacked", group=k,
                                  queue_wait_s=req.queue_wait_s)
         admit_fn = _jitted_admit_group(self.cfg, self.engine_cfg.cache_len, k)
-        with self.obs.tracer.span("prefill_stacked", k=k,
-                                  tokens=padded_len) as sp:
+        t0 = time.perf_counter()
+        with self.obs.tracer.span("prefill_stacked", lanes=slots.tolist(),
+                                  k=k, tokens=padded_len) as sp:
             toks_dev, self.store.cache = admit_fn(
                 self.store.cache, self.params, tokens, lengths, slots,
                 temps, topk, greedy, keys, self.store._axes_flat)
             sp.fence(toks_dev)
+        share = (time.perf_counter() - t0) / k
         self.metrics.inc("prefill_dispatches")
         self.metrics.inc("stacked_prefills", k)
         toks = np.asarray(toks_dev)
         for i, (req, slot) in enumerate(group):
+            req.cost.prefill_s += share
+            req.cost.dispatches += 1
             self._arm_lane(req, slot, int(toks[i]))
 
     def _admit_group_paged(self, group: list[tuple[Request, int]]) -> None:
@@ -611,16 +625,20 @@ class ServingEngine:
                                  mode="stacked", group=k,
                                  queue_wait_s=req.queue_wait_s)
         admit_fn = _jitted_admit_paged_group(self.cfg, single_len, k)
-        with self.obs.tracer.span("prefill_stacked", k=k,
-                                  tokens=padded_len) as sp:
+        t0 = time.perf_counter()
+        with self.obs.tracer.span("prefill_stacked", lanes=lanes.tolist(),
+                                  k=k, tokens=padded_len) as sp:
             toks_dev, self.store.cache = admit_fn(
                 self.store.cache, self.params, tokens, lengths, lanes,
                 page_ids, table_rows, temps, topk, greedy, keys)
             sp.fence(toks_dev)
+        share = (time.perf_counter() - t0) / k
         self.metrics.inc("prefill_dispatches")
         self.metrics.inc("stacked_prefills", k)
         toks = np.asarray(toks_dev)
         for i, (req, slot) in enumerate(group):
+            req.cost.prefill_s += share
+            req.cost.dispatches += 1
             self._record_miss(req)
             self._maybe_publish(req, slot)
             self._arm_lane(req, slot, int(toks[i]))
@@ -878,12 +896,15 @@ class ServingEngine:
         self.store.sync_tables()
         tokens = np.zeros((1, c), np.int32)
         tokens[0, :n] = req.prompt[start:start + n]
-        with self.obs.tracer.span("chunk", req=req.req_id, slot=slot,
-                                  start=start, n=n) as sp:
+        t0 = time.perf_counter()
+        with self.obs.tracer.span("chunk", lane=slot, req=req.req_id,
+                                  slot=slot, start=start, n=n) as sp:
             logits, self.store.cache = self._chunk_fn(
                 self.params, self.store.cache, tokens, jnp.int32(slot),
                 np.asarray([start], np.int32), np.asarray([n], np.int32))
             sp.fence(logits)
+        req.cost.prefill_s += time.perf_counter() - t0
+        req.cost.dispatches += 1
         req.prefill_done = start + n
         self.metrics.inc("chunk_steps")
         self.metrics.inc("prefill_dispatches")
@@ -986,8 +1007,14 @@ class ServingEngine:
 
         if self.scheduler.running and self._spec is not None and self._spec_ready():
             t0 = time.perf_counter()
+            spec_reqs = list(self.scheduler.running.values())
             self._spec_decode(finished)
-            self.metrics.inc("decode_s", time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            self.metrics.inc("decode_s", dt)
+            share = dt / max(len(spec_reqs), 1)
+            for req in spec_reqs:
+                req.cost.verify_s += share
+                req.cost.dispatches += 1
         elif self.scheduler.running:
             if self._spec is not None:
                 # spec configured but this batch can't speculate (a
@@ -1009,11 +1036,14 @@ class ServingEngine:
                         if move is not None:
                             self._cow(slot, move)
                     mgr.ensure(slot, row + 1)
+                    # KV footprint integral: pages held x decode steps
+                    running[slot].cost.page_steps += len(mgr.lane_pages[slot])
                 self.store.sync_tables()
                 self.metrics.max_gauge("peak_pages_used", mgr.pages_in_use)
             active = np.zeros((self.engine_cfg.n_slots,), bool)
             active[list(running)] = True
-            with self.obs.tracer.span("decode", batch=len(running)) as sp:
+            with self.obs.tracer.span("decode", lanes=list(running),
+                                      batch=len(running)) as sp:
                 toks, self.store.cache = self._decode_sample(
                     self.params, self._tokens, self.store.cache, active,
                     self._temps, self._topk, self._greedy, self._keys,
@@ -1025,11 +1055,17 @@ class ServingEngine:
             # pull them to host lazily (only when scheduling needs them),
             # so all-greedy stretches pipeline like the static loop does
             self._tokens = toks
-            self._pending.append((toks, dict(running)))
+            decoded = dict(running)  # eviction below mutates the live dict
+            self._pending.append((toks, decoded))
             self.metrics.inc("decode_steps")
             if self._needs_sync():
                 self._flush(finished)
-            self.metrics.inc("decode_s", time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            self.metrics.inc("decode_s", dt)
+            share = dt / max(len(decoded), 1)
+            for req in decoded.values():
+                req.cost.decode_s += share
+                req.cost.dispatches += 1
 
         # policy-triggered pool compaction: evictions above may have left
         # holes; compacting now keeps the free list contiguous for the next
@@ -1109,10 +1145,12 @@ class ServingEngine:
                     for move in mgr.ensure_writable_range(slot, row, w):
                         self._cow(slot, move)
                 mgr.ensure(slot, row + w)
+                running[slot].cost.page_steps += len(mgr.lane_pages[slot])
             self.store.sync_tables()
             self.metrics.max_gauge("peak_pages_used", mgr.pages_in_use)
 
-        with self.obs.tracer.span("verify", batch=len(slots), width=w) as sp:
+        with self.obs.tracer.span("verify", batch=len(slots), width=w,
+                                  lanes=slots) as sp:
             self.store.cache, targets, accepted = self._verify_fn(
                 self.params, self.store.cache, toks, n_draft, active)
             sp.fence(targets, accepted)
@@ -1186,11 +1224,15 @@ class ServingEngine:
         self._greedy[slot] = True  # free lanes sample nothing
         self.metrics.record_finished(req)
         reason_of = getattr(self.policies.eviction, "evict_reason", None)
+        extra = {}
+        if req.deadline_s is not None:
+            extra["deadline_s"] = req.deadline_s
+            extra["deadline_hit"] = req.deadline_hit
         self.obs.events.emit(
             "finished", req.req_id, slot=slot,
             n_tokens=len(req.output_tokens),
             reason=reason_of(req) if reason_of is not None else req.finish_reason,
-            latency_s=req.latency_s)
+            latency_s=req.latency_s, **extra)
         finished.append(req)
 
     @property

@@ -43,6 +43,12 @@ _COUNTERS = (
     "prefix_hits", "prefix_misses", "prefix_hit_tokens", "prefix_cow_forks",
     "prefix_evicted_pages", "spec_proposed", "spec_accepted",
     "verify_dispatches",
+    # SLO accounting: per-request deadline outcome (stamped at finish) and
+    # tokens from deadline-respecting requests (the goodput numerator —
+    # no-deadline requests always count; a missed deadline zeroes the
+    # request's contribution)
+    "deadline_hits", "deadline_misses", "deadline_late_admissions",
+    "goodput_tokens",
 )
 # float time accumulators (counters that add seconds)
 _TIMERS = ("prefill_s", "decode_s")
@@ -58,6 +64,11 @@ _HISTOGRAMS = (
     "per_token_s",   # decode-only: (latency - ttft) / (n_tokens - 1)
     "queue_wait_s",  # submit -> admitted into a lane
     "accept_len",    # accepted drafts per speculative verify round (count)
+    # per-request cost attribution (from Request.cost, observed at finish)
+    "cost_prefill_s",   # prefill/chunk dispatch time attributed to the req
+    "cost_decode_s",    # share of batched decode dispatch time
+    "cost_verify_s",    # share of batched spec draft+verify time
+    "cost_page_steps",  # sum over decode steps of pages held (paged only)
 )
 
 
@@ -145,6 +156,22 @@ class EngineMetrics:
                 self.observe("per_token_s", (req.latency_s - req.ttft_s) / (n - 1))
         if req.queue_wait_s is not None:
             self.observe("queue_wait_s", req.queue_wait_s)
+        # SLO outcome + goodput: no-deadline requests always count
+        hit = req.deadline_hit
+        if hit is not None:
+            self.inc("deadline_hits" if hit else "deadline_misses")
+            if getattr(req, "late_at_admission", False):
+                self.inc("deadline_late_admissions")
+        if hit is not False:
+            self.inc("goodput_tokens", len(req.output_tokens))
+        cost = getattr(req, "cost", None)
+        if cost is not None and cost.dispatches:
+            self.observe("cost_prefill_s", cost.prefill_s)
+            self.observe("cost_decode_s", cost.decode_s)
+            if cost.verify_s:
+                self.observe("cost_verify_s", cost.verify_s)
+            if cost.page_steps:
+                self.observe("cost_page_steps", cost.page_steps)
 
     # -- summary -----------------------------------------------------------
     @property
@@ -220,6 +247,18 @@ class EngineMetrics:
             "accept_len_p50": self._pct("accept_len", 50, 2),
             "accept_len_p95": self._pct("accept_len", 95, 2),
             "accept_len_p99": self._pct("accept_len", 99, 2),
+            "deadline_hits": self.deadline_hits,
+            "deadline_misses": self.deadline_misses,
+            "deadline_hit_rate": round(
+                self.deadline_hits / (self.deadline_hits
+                                      + self.deadline_misses), 4)
+            if (self.deadline_hits + self.deadline_misses) else None,
+            "goodput_tokens": self.goodput_tokens,
+            "goodput_tokens_per_s": round(
+                self.goodput_tokens / max(wall, 1e-9), 2),
+            "cost_prefill_p99_s": self._pct("cost_prefill_s", 99),
+            "cost_decode_p99_s": self._pct("cost_decode_s", 99),
+            "cost_verify_p99_s": self._pct("cost_verify_s", 99),
         }
 
     def format_report(self) -> str:

@@ -35,6 +35,31 @@ class RequestState(enum.Enum):
 
 
 @dataclasses.dataclass
+class RequestCost:
+    """Per-request resource attribution, accumulated by the engine.
+
+    Device-time shares are host-measured around each dispatch and split
+    evenly across the requests riding it (batched decode/verify), so the
+    per-phase totals sum to engine dispatch time.  Without
+    ``fence_spans`` async dispatch means these measure *enqueue* +
+    any sync the step forced; with ``ObsConfig(fence_spans=True)`` they
+    bracket device work.  ``page_steps`` integrates pages held per decode
+    step (paged engines) — the request's KV-memory x time footprint.
+    """
+
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    verify_s: float = 0.0
+    dispatches: int = 0
+    page_steps: int = 0
+
+    def as_dict(self) -> dict:
+        return {"prefill_s": self.prefill_s, "decode_s": self.decode_s,
+                "verify_s": self.verify_s, "dispatches": self.dispatches,
+                "page_steps": self.page_steps}
+
+
+@dataclasses.dataclass
 class Request:
     """One generation request: prompt tokens in, sampled tokens out."""
 
@@ -65,8 +90,18 @@ class Request:
     detokenizer: Optional[Callable[[Sequence[int]], str]] = dataclasses.field(
         default=None, repr=False)
 
+    # SLO deadline (seconds from submit); resolved from
+    # ``sampling.deadline_s`` at add_request unless passed explicitly.
+    deadline_s: Optional[float] = None
+    # stamped by the scheduler when the deadline already expired in queue
+    # (the request was doomed before it ever held a slot)
+    late_at_admission: bool = False
+
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
+    # resource attribution (see RequestCost)
+    cost: RequestCost = dataclasses.field(default_factory=RequestCost,
+                                          repr=False)
     output_tokens: list[int] = dataclasses.field(default_factory=list)
     # text already emitted through ``on_text`` (delta bookkeeping)
     emitted_text: str = dataclasses.field(default="", repr=False)
@@ -127,6 +162,15 @@ class Request:
         if self.admit_time is None:
             return None
         return self.admit_time - self.submit_time
+
+    @property
+    def deadline_hit(self) -> Optional[bool]:
+        """Did the request finish inside its deadline?  ``None`` while in
+        flight or when no deadline was set (no-deadline requests always
+        count toward goodput, but report no hit/miss)."""
+        if self.deadline_s is None or self.latency_s is None:
+            return None
+        return self.latency_s <= self.deadline_s
 
     @property
     def finish_reason(self) -> Optional[str]:

@@ -12,6 +12,7 @@ batch.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +28,19 @@ class SamplingParams:
     temperature: float = 1.0
     top_k: int = 0          # <= 0: no top-k truncation
     seed: int = 0           # folded into the engine key per request
+    # SLO deadline: seconds from submit to finish.  Purely an accounting
+    # annotation (rides SamplingParams because that is the per-request
+    # options object every arrival tuple already carries): the scheduler
+    # stamps hit/miss at finish and only deadline-respecting requests
+    # count toward goodput.  None = no deadline (always counts).
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if not self.greedy and self.temperature <= 0:
             raise ValueError("temperature must be > 0 for stochastic sampling "
                              "(use greedy=True for argmax decoding)")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be positive (None = no SLO)")
 
 
 def request_key(seed: int, req_id: int, token_index: int):

@@ -87,6 +87,11 @@ class Scheduler:
             req.state = RequestState.RUNNING
             req.slot = slot
             req.admit_time = now  # queue-wait metric: submit -> here
+            if (req.deadline_s is not None
+                    and now - req.submit_time > req.deadline_s):
+                # SLO already blown in queue: the lane is spent on a
+                # request that cannot count toward goodput
+                req.late_at_admission = True
             self.running[slot] = req
             out.append((req, slot))
         return out

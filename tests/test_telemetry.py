@@ -1,0 +1,564 @@
+"""The fleet-telemetry layer (PR 8): Prometheus exposition + live
+``/metrics`` server, SLO deadline / goodput / per-request cost accounting,
+the numerics watchdog, per-lane trace tracks, the streaming event sink,
+and the bench_check fresh-trajectory behaviour.
+
+The two engine-level invariants extend to the new layer: the watchdog
+adds zero host syncs when off (no ``debug_callback`` in the jaxpr) and is
+bitwise output-invisible when on; the metrics server only *polls*
+registries, so a scrape mid-run perturbs nothing.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    LLM,
+    KVConfig,
+    ObsConfig,
+    RuntimeConfig,
+    SchedulerConfig,
+    SpecConfig,
+)
+from repro.api.config import QuantRuntime
+from repro.backends.pipeline import quantized_linear
+from repro.configs import get_config
+from repro.obs import watchdog
+from repro.obs.events import EventLog
+from repro.obs.metrics import MetricsRegistry, labeled, split_labels
+from repro.obs.server import (
+    CONTENT_TYPE,
+    MetricsServer,
+    render_exposition,
+    validate_exposition,
+)
+from repro.obs.trace import Tracer
+from repro.serving.metrics import EngineMetrics
+from repro.serving.request import Request, RequestCost
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# labeled registry keys
+# ---------------------------------------------------------------------------
+
+def test_labeled_keys_roundtrip_and_sort():
+    key = labeled("watchdog_amax", mode="w4a4", layer="decode.00")
+    # label keys are sorted so the same label set always yields one key
+    assert key == 'watchdog_amax{layer="decode.00",mode="w4a4"}'
+    base, labels = split_labels(key)
+    assert base == "watchdog_amax"
+    assert labels == {"layer": "decode.00", "mode": "w4a4"}
+    assert labeled("plain") == "plain"
+    assert split_labels("plain") == ("plain", {})
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition: renderer + validator
+# ---------------------------------------------------------------------------
+
+def _populated_registry():
+    reg = MetricsRegistry()
+    reg.inc("steps", 3)
+    reg.inc(labeled("watchdog_act_sat", layer="decode.00", mode="w4a4"), 7)
+    reg.set("pages_total", 16)
+    for v in (0.001, 0.01, 0.02, 0.5):
+        reg.observe("ttft_s", v)
+    reg.observe(labeled("watchdog_amax", layer="decode.00", mode="w4a4"), 2.5)
+    return reg
+
+
+def test_render_exposition_is_valid_and_complete():
+    text = render_exposition([_populated_registry()],
+                             {"tokens_per_second": 12.5})
+    assert validate_exposition(text) == []
+    assert "# TYPE repro_steps_total counter" in text
+    assert "repro_steps_total 3" in text
+    # labels survive rendering, attached to the family name
+    assert ('repro_watchdog_act_sat_total{layer="decode.00",mode="w4a4"} 7'
+            in text)
+    assert "# TYPE repro_pages_total gauge" in text
+    assert "repro_tokens_per_second 12.5" in text
+    # histograms render as native cumulative buckets ending at +Inf
+    assert "# TYPE repro_ttft_s histogram" in text
+    assert 'repro_ttft_s_bucket{le="+Inf"} 4' in text
+    assert "repro_ttft_s_count 4" in text
+    assert "repro_ttft_s_sum" in text
+    # the labeled histogram keeps its labels alongside le
+    assert 'repro_watchdog_amax_bucket{layer="decode.00",le=' in text
+
+
+def test_render_exposition_merges_registries_and_prefix():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.inc("from_a")
+    b.inc("from_b")
+    text = render_exposition([a, b], prefix="x")
+    assert "x_from_a_total 1" in text and "x_from_b_total 1" in text
+    assert validate_exposition(text) == []
+
+
+def test_validator_rejects_malformed_exposition():
+    assert validate_exposition("name with spaces 1\n")
+    assert validate_exposition("x_total 1\n")  # sample without TYPE
+    assert validate_exposition("# TYPE c counter\nc_total -1\n")  # negative
+    # le must increase and buckets must be cumulative, ending at +Inf == count
+    bad_order = ('# TYPE h histogram\nh_bucket{le="1"} 5\n'
+                 'h_bucket{le="0.5"} 6\nh_bucket{le="+Inf"} 6\n'
+                 "h_sum 1\nh_count 6\n")
+    assert any("le not increasing" in e for e in validate_exposition(bad_order))
+    shrinking = ('# TYPE h histogram\nh_bucket{le="1"} 5\n'
+                 'h_bucket{le="2"} 3\nh_bucket{le="+Inf"} 5\n'
+                 "h_sum 1\nh_count 5\n")
+    assert any("not cumulative" in e for e in validate_exposition(shrinking))
+    no_inf = ('# TYPE h histogram\nh_bucket{le="1"} 5\n'
+              "h_sum 1\nh_count 5\n")
+    assert any("missing +Inf" in e for e in validate_exposition(no_inf))
+    mismatch = ('# TYPE h histogram\nh_bucket{le="+Inf"} 4\n'
+                "h_sum 1\nh_count 5\n")
+    assert any("!= _count" in e for e in validate_exposition(mismatch))
+    no_sum = ('# TYPE h histogram\nh_bucket{le="+Inf"} 5\nh_count 5\n')
+    assert any("missing _sum" in e for e in validate_exposition(no_sum))
+
+
+# ---------------------------------------------------------------------------
+# the HTTP frontend
+# ---------------------------------------------------------------------------
+
+def test_metrics_server_endpoints():
+    reg = _populated_registry()
+    srv = MetricsServer(lambda: ([reg], {"up": 1.0}), port=0).start()
+    try:
+        assert srv.port and srv.url.endswith(str(srv.port))
+        with urllib.request.urlopen(srv.url + "/metrics") as resp:
+            assert resp.headers["Content-Type"] == CONTENT_TYPE
+            body = resp.read().decode()
+        assert validate_exposition(body) == []
+        assert "repro_up 1" in body and "repro_steps_total 3" in body
+
+        with urllib.request.urlopen(srv.url + "/healthz") as resp:
+            assert resp.read() == b"ok\n"
+
+        with urllib.request.urlopen(srv.url + "/snapshot") as resp:
+            doc = json.loads(resp.read())
+        assert doc["derived"] == {"up": 1.0}
+        assert doc["registries"][0]["counters"]["steps"] == 3
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(srv.url + "/nope")
+        assert ei.value.code == 404
+    finally:
+        srv.close()
+    srv.close()  # idempotent
+
+
+def test_metrics_server_collector_failure_is_500_not_crash():
+    def broken():
+        raise RuntimeError("collector exploded")
+
+    srv = MetricsServer(broken, port=0).start()
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(srv.url + "/metrics")
+        assert ei.value.code == 500
+        # the server survives a broken scrape
+        with urllib.request.urlopen(srv.url + "/healthz") as resp:
+            assert resp.read() == b"ok\n"
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# SLO deadline / goodput / cost accounting (host-side units)
+# ---------------------------------------------------------------------------
+
+def test_sampling_params_deadline_validation():
+    assert SamplingParams(deadline_s=1.5).deadline_s == 1.5
+    assert SamplingParams().deadline_s is None
+    with pytest.raises(ValueError):
+        SamplingParams(deadline_s=0.0)
+
+
+def test_deadline_goodput_and_cost_accounting():
+    m = EngineMetrics()
+    m.begin()
+    now = time.perf_counter()
+
+    hit = Request(req_id=0, prompt=[1], max_new_tokens=2, deadline_s=1000.0)
+    hit.submit_time = now
+    hit.output_tokens = [5, 6]
+    hit.cost = RequestCost(prefill_s=0.2, decode_s=0.1, dispatches=3,
+                           page_steps=4)
+    m.record_finished(hit)
+
+    miss = Request(req_id=1, prompt=[1], max_new_tokens=1, deadline_s=1e-9)
+    miss.submit_time = now - 1.0
+    miss.late_at_admission = True
+    miss.output_tokens = [7]
+    m.record_finished(miss)
+
+    free = Request(req_id=2, prompt=[1], max_new_tokens=3)  # no deadline
+    free.submit_time = now
+    free.output_tokens = [1, 2, 3]
+    m.record_finished(free)
+
+    assert hit.deadline_hit is True
+    assert miss.deadline_hit is False
+    assert free.deadline_hit is None
+    assert m.deadline_hits == 1 and m.deadline_misses == 1
+    assert m.deadline_late_admissions == 1
+    # goodput: deadline-respecting tokens — the miss's token drops out,
+    # the no-deadline request always counts
+    assert m.goodput_tokens == 2 + 3
+    rep = m.report()
+    assert rep["deadline_hit_rate"] == 0.5
+    assert rep["goodput_tokens"] == 5
+    assert rep["goodput_tokens_per_s"] <= rep["tokens_per_s"]
+    assert rep["cost_prefill_p99_s"] == pytest.approx(0.2)
+    assert rep["cost_decode_p99_s"] == pytest.approx(0.1)
+
+    # no deadlines at all -> hit rate is None, goodput == throughput
+    m2 = EngineMetrics()
+    m2.begin()
+    free2 = Request(req_id=0, prompt=[1], max_new_tokens=1)
+    free2.submit_time = time.perf_counter()
+    free2.output_tokens = [9]
+    m2.record_finished(free2)
+    r2 = m2.report()
+    assert r2["deadline_hit_rate"] is None
+    assert r2["goodput_tokens"] == r2["generated_tokens"] == 1
+
+
+def test_scheduler_stamps_late_at_admission():
+    sched = Scheduler(n_slots=2)
+    doomed = Request(req_id=0, prompt=[1], max_new_tokens=1, deadline_s=1e-6)
+    doomed.submit_time = time.perf_counter() - 1.0
+    fine = Request(req_id=1, prompt=[1], max_new_tokens=1, deadline_s=100.0)
+    fine.submit_time = time.perf_counter()
+    sched.submit(doomed)
+    sched.submit(fine)
+    admitted = sched.schedule(limit=2)
+    assert len(admitted) == 2
+    assert doomed.late_at_admission is True
+    assert fine.late_at_admission is False
+
+
+# ---------------------------------------------------------------------------
+# numerics watchdog: direct pipeline surface
+# ---------------------------------------------------------------------------
+
+def _crafted_near_clamp():
+    """Half the activation entries sit AT the dynamic-quant rail: with an
+    absmax scale, every |x| == amax element maps exactly onto +-qmax."""
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((8, 32)) * 0.01).astype(np.float32)
+    x[:, ::2] = np.where(np.arange(8)[:, None] % 2 == 0, 1.0, -1.0)
+    w = rng.standard_normal((32, 16)).astype(np.float32) * 0.1
+    return x, w
+
+
+def test_watchdog_off_leaves_jaxpr_clean():
+    x, w = _crafted_near_clamp()
+    plain = str(jax.make_jaxpr(
+        lambda a, b: quantized_linear(a, b, "w4a4"))(x, w))
+    assert "debug_callback" not in plain
+    watched = str(jax.make_jaxpr(
+        lambda a, b: quantized_linear(a, b, "w4a4", watch=True))(x, w))
+    assert "debug_callback" in watched
+
+
+def test_watchdog_saturation_counter_fires_and_is_output_invisible():
+    watchdog.reset()
+    x, w = _crafted_near_clamp()
+    f_plain = jax.jit(lambda a, b: quantized_linear(a, b, "w4a4"))
+    f_watch = jax.jit(lambda a, b: quantized_linear(
+        a, b, "w4a4", watch=True, layer="crafted"))
+    y_plain = np.asarray(f_plain(x, w))
+    y_watch = np.asarray(f_watch(x, w))
+    jax.effects_barrier()
+    # bitwise invisible: the callback observes, never feeds the output
+    np.testing.assert_array_equal(y_plain, y_watch)
+
+    reg = watchdog.peek_registry()
+    assert reg is not None
+    key = labeled("watchdog_act_sat", layer="crafted", mode="w4a4")
+    n_key = labeled("watchdog_act_elems", layer="crafted", mode="w4a4")
+    sat = reg.counters[key].value
+    n = reg.counters[n_key].value
+    assert n == x.size
+    # half the entries were crafted onto the rail
+    assert sat / n == pytest.approx(0.5, abs=0.1)
+    assert watchdog.saturation_report()[
+        'layer="crafted",mode="w4a4"'] == pytest.approx(sat / n)
+    # amax / quant-error / accumulator-headroom histograms observed too
+    amax_key = labeled("watchdog_amax", layer="crafted", mode="w4a4")
+    assert reg.histograms[amax_key].total >= 1
+    assert reg.histograms[amax_key].max == pytest.approx(1.0)
+    acc_key = labeled("watchdog_acc_bits", layer="crafted", mode="w4a4")
+    assert 0 < reg.histograms[acc_key].max <= 33
+    watchdog.reset()
+    assert watchdog.peek_registry() is None
+
+
+def test_runtime_config_arms_model_watchdog_flag():
+    base = get_config("llama3.2-1b")
+    assert not RuntimeConfig().resolve_model(base).numerics_watchdog
+    armed = RuntimeConfig(obs=ObsConfig(watchdog=True)).resolve_model(base)
+    assert armed.numerics_watchdog
+    # jit keying: the armed config must hash differently
+    assert hash(armed) != hash(RuntimeConfig().resolve_model(base))
+
+
+# ---------------------------------------------------------------------------
+# live end-to-end: paged + prefix + spec run, scraped mid-flight
+# ---------------------------------------------------------------------------
+
+def _telemetry_runtime(watchdog_on: bool, port=None) -> RuntimeConfig:
+    return RuntimeConfig(
+        reduced=True,
+        quant=QuantRuntime(mode="w4a4"),
+        kv=KVConfig(mode="paged", page_size=8, prefix_cache=True),
+        scheduler=SchedulerConfig(n_slots=2, prefill_chunk=8),
+        spec=SpecConfig(enabled=True, k=2, drafter="ngram"),
+        obs=ObsConfig(watchdog=watchdog_on, metrics_port=port),
+    )
+
+
+def _prompts(cfg):
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 16).tolist()
+    return [shared + rng.integers(0, cfg.vocab_size, n).tolist()
+            for n in (5, 9, 3)]
+
+
+def test_live_scrape_watchdog_parity_and_cost():
+    watchdog.reset()
+    # reference run: watchdog OFF (the untraced, callback-free graph)
+    llm_off = LLM(arch="llama3.2-1b", runtime=_telemetry_runtime(False))
+    outs_off = llm_off.generate(_prompts(llm_off.config), max_new_tokens=6)
+    assert llm_off.metrics_server is None
+    assert watchdog.peek_registry() is None  # off records NOTHING
+
+    # instrumented run: watchdog ON + live metrics server, driven step by
+    # step so /metrics is scraped MID-run with requests still in flight
+    llm = LLM(arch="llama3.2-1b", runtime=_telemetry_runtime(True, port=0))
+    assert llm.config.numerics_watchdog
+    engine = llm.build_engine(25, 6)
+    sp = SamplingParams(deadline_s=120.0)
+    reqs = [engine.add_request(p, 6, sampling=sp)
+            for p in _prompts(llm.config)]
+    assert all(r.deadline_s == 120.0 for r in reqs)
+
+    url = llm.metrics_server.url
+    mid = None
+    while engine.has_work:
+        engine.step()
+        if mid is None:
+            mid = urllib.request.urlopen(url + "/metrics").read().decode()
+    assert mid is not None
+    assert validate_exposition(mid) == []
+    assert "repro_steps_total" in mid
+
+    final = urllib.request.urlopen(url + "/metrics").read().decode()
+    assert validate_exposition(final) == []
+    # the ISSUE's named series: TTFT/per-token histograms, goodput,
+    # per-layer saturation counters — all from one live run
+    assert "# TYPE repro_ttft_s histogram" in final
+    assert 'repro_ttft_s_bucket{le="+Inf"} 3' in final
+    assert "# TYPE repro_per_token_s histogram" in final
+    assert "repro_goodput_tokens_total" in final
+    assert "repro_deadline_hits_total 3" in final
+    assert "repro_watchdog_act_sat_total" in final
+    assert 'mode="w4a4"' in final
+    assert "repro_goodput_tokens_per_second" in final
+    assert "repro_tokens_per_second" in final
+
+    # bitwise parity: the watchdog's debug callbacks never change tokens
+    assert ([r.output_tokens for r in reqs]
+            == [o.token_ids for o in outs_off])
+
+    sat = watchdog.saturation_report()
+    assert sat and all(0.0 <= v <= 1.0 for v in sat.values())
+    # scanned-layer labels carry the entry-point tag
+    assert any(k.startswith('layer="prefill.') or k.startswith('layer="verify.')
+               or k.startswith('layer="decode.') for k in sat)
+
+    # per-request cost attribution reached the finished requests
+    for r in reqs:
+        assert r.deadline_hit is True
+        assert r.cost.dispatches >= 1
+        assert r.cost.prefill_s > 0
+        assert r.cost.page_steps > 0  # paged run holds pages every step
+    # goodput accounting: every request hit its generous deadline
+    m = engine.metrics
+    assert m.deadline_hits == 3 and m.deadline_misses == 0
+    assert m.goodput_tokens == sum(len(r.output_tokens) for r in reqs)
+
+    llm.close()
+    with pytest.raises(urllib.error.URLError):
+        urllib.request.urlopen(url + "/healthz", timeout=1)
+    watchdog.reset()
+
+
+def test_generate_outputs_carry_deadline_and_cost():
+    runtime = RuntimeConfig(
+        reduced=True,
+        kv=KVConfig(mode="slot", cache_len=32),
+        scheduler=SchedulerConfig(n_slots=2),
+    )
+    llm = LLM(arch="llama3.2-1b", runtime=runtime)
+    sp = SamplingParams(deadline_s=300.0)
+    outs = llm.generate([[1, 2, 3, 4]], sampling=sp, max_new_tokens=4)
+    assert outs[0].deadline_hit is True
+    assert outs[0].cost is not None
+    assert outs[0].cost["dispatches"] >= 1
+    assert outs[0].cost["prefill_s"] > 0
+    # no deadline -> None outcome, cost still attributed
+    outs2 = llm.generate([[1, 2, 3, 4]], max_new_tokens=4)
+    assert outs2[0].deadline_hit is None
+    assert outs2[0].cost["dispatches"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# per-lane trace tracks
+# ---------------------------------------------------------------------------
+
+def test_tracer_mirrors_spans_onto_lane_tracks():
+    tr = Tracer()
+    with tr.span("decode", lanes=[0, 2], batch=2):
+        pass
+    with tr.span("prefill", lane=1):
+        pass
+    with tr.span("step"):  # lane-free spans stay engine-only
+        pass
+    engine_evs = [e for e in tr.events if e["tid"] == 1]
+    lane_evs = [e for e in tr.events if e["tid"] != 1]
+    assert [e["name"] for e in engine_evs] == ["decode", "prefill", "step"]
+    # tid = slot + 2 (tid 1 is the engine stack)
+    assert sorted((e["tid"], e["name"], e["args"]["lane"])
+                  for e in lane_evs) == [
+        (2, "decode", 0), (3, "prefill", 1), (4, "decode", 2)]
+    assert all(e["cat"] == "lane" for e in lane_evs)
+    # the mirror copies the span's own timing and args
+    dec = engine_evs[0]
+    for lane_ev in (e for e in lane_evs if e["name"] == "decode"):
+        assert lane_ev["ts"] == dec["ts"] and lane_ev["dur"] == dec["dur"]
+        assert lane_ev["args"]["batch"] == 2
+
+    doc = tr.to_chrome()
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    names = {e["tid"]: e["args"]["name"] for e in metas
+             if e["name"] == "thread_name"}
+    assert names == {1: "engine", 2: "lane 0", 3: "lane 1", 4: "lane 2"}
+
+
+# ---------------------------------------------------------------------------
+# streaming event sink with rotation
+# ---------------------------------------------------------------------------
+
+def test_event_log_streams_and_rotates(tmp_path):
+    path = tmp_path / "events.jsonl"
+    log = EventLog(stream_path=str(path), max_bytes=2048, keep=16)
+    for i in range(200):
+        log.emit("tick", req_id=i, payload="x" * 32)
+    assert log.rotations >= 1
+    rotated = pathlib.Path(str(path) + ".1")
+    assert rotated.exists()
+    # in-memory window stays bounded; file lines stay valid JSONL
+    assert len(log) == 16
+    log.close()
+    # disk stays bounded at ~2x max_bytes: only current + one rotation
+    for p in (path, rotated):
+        assert p.stat().st_size <= 2 * log.max_bytes
+        for line in p.read_text().splitlines():
+            ev = json.loads(line)
+            assert ev["kind"] == "tick" and "seq" in ev
+    # rotation renames whole files between line writes — the current file's
+    # first line continues exactly where the rotated file ended
+    current_lines = path.read_text().splitlines()
+    if current_lines:
+        last_rotated = json.loads(rotated.read_text().splitlines()[-1])["seq"]
+        assert json.loads(current_lines[0])["seq"] == last_rotated + 1
+    # timeline queries serve from the bounded window
+    assert log.timeline(199)[0]["req_id"] == 199
+
+    # to_jsonl on the stream path is a flush, not a rewrite
+    log2 = EventLog(stream_path=str(tmp_path / "s.jsonl"))
+    log2.emit("a")
+    assert log2.to_jsonl(str(tmp_path / "s.jsonl")) == str(tmp_path / "s.jsonl")
+    assert (tmp_path / "s.jsonl").read_text().count("\n") == 1
+    log2.close()
+    with pytest.raises(ValueError):
+        EventLog(stream_path=str(tmp_path / "bad.jsonl"), max_bytes=0)
+
+
+def test_obs_config_builds_streaming_sink(tmp_path):
+    path = tmp_path / "ev.jsonl"
+    obs = ObsConfig(events=str(path), events_max_mb=1.0).build()
+    assert isinstance(obs.events, EventLog)
+    assert obs.events.stream_path == str(path)
+    assert obs.events.max_bytes == 2 ** 20
+    obs.events.emit("hello", req_id=0)
+    obs.close()  # closes the stream handle
+    assert json.loads(path.read_text().splitlines()[0])["kind"] == "hello"
+    with pytest.raises(ValueError):
+        ObsConfig(events_max_mb=0)
+    with pytest.raises(ValueError):
+        ObsConfig(metrics_port=70000)
+
+
+# ---------------------------------------------------------------------------
+# bench_check: fresh trajectories exit cleanly, corruption still fails
+# ---------------------------------------------------------------------------
+
+_BENCH_CHECK = (pathlib.Path(__file__).parent.parent / "benchmarks"
+                / "bench_check.py")
+
+
+def _run_bench_check(*files):
+    return subprocess.run(
+        [sys.executable, str(_BENCH_CHECK), *map(str, files)],
+        capture_output=True, text=True)
+
+
+def test_bench_check_skips_missing_and_empty(tmp_path):
+    missing = tmp_path / "BENCH_nope.json"
+    r = _run_bench_check(missing)
+    assert r.returncode == 0
+    assert "fresh trajectory" in r.stdout
+
+    empty = tmp_path / "BENCH_empty.json"
+    empty.write_text("")
+    r = _run_bench_check(empty)
+    assert r.returncode == 0
+    assert "fresh trajectory" in r.stdout
+
+
+def test_bench_check_fails_on_corrupt_and_gates_goodput(tmp_path):
+    corrupt = tmp_path / "BENCH_bad.json"
+    corrupt.write_text("{not json")
+    r = _run_bench_check(corrupt)
+    assert r.returncode == 1
+    assert "FAIL" in r.stdout
+
+    # goodput_frac_overload gates like the other ratio headlines: a run
+    # regressing >15% below the trailing median fails
+    runs = [{"platform": "cpu", "goodput_frac_overload": v}
+            for v in (0.8, 0.8, 0.8, 0.4)]
+    traj = tmp_path / "BENCH_goodput.json"
+    traj.write_text(json.dumps({"runs": runs}))
+    r = _run_bench_check(traj)
+    assert r.returncode == 1
+    assert "goodput_frac_overload" in r.stdout
+    runs[-1]["goodput_frac_overload"] = 0.79
+    traj.write_text(json.dumps({"runs": runs}))
+    assert _run_bench_check(traj).returncode == 0
