@@ -34,12 +34,14 @@ import sys
 
 # the machine-independent headline ratios (higher is better), one per
 # sweep kind: continuous-vs-static, spec-on-vs-off, prefix-cached-vs-cold,
-# plus deadline-respecting throughput share under overload (goodput
-# tok/s over total tok/s at stagger 0 — the SLO accounting headline)
+# tensor-parallel tp=N-vs-tp=1, plus deadline-respecting throughput share
+# under overload (goodput tok/s over total tok/s at stagger 0 — the SLO
+# accounting headline)
 GATED_METRICS = (
     "speedup_vs_static",
     "speedup_vs_plain",
     "speedup_vs_cold",
+    "tp_speedup",
     "goodput_frac_overload",
 )
 

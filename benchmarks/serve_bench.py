@@ -32,9 +32,13 @@ the radix-tree prefix cache (``repro/prefix/``) buys in tok/s and TTFT.
 measuring the tok/s win and draft acceptance rate of the prompt-lookup
 draft-verify loop (``repro/spec/``).
 
+``--tp N`` switches to the tensor-parallel sweep: the same paged workload
+served at tp=1 vs tp=N over a "model"-axis device mesh (``repro/shard``),
+recording the ``tp_speedup`` scaling cell.
+
 Appends a stamped run (git SHA + date) to ``BENCH_serve.json``:
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--prefix|--spec] [--out PATH]
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quick] [--prefix|--spec|--tp N] [--out PATH]
 """
 
 from __future__ import annotations
@@ -54,6 +58,7 @@ from bench_record import append_run  # noqa: E402
 from repro.api import (
     LLM,
     KVConfig,
+    MeshConfig,
     QuantRuntime,
     RuntimeConfig,
     SchedulerConfig,
@@ -134,16 +139,18 @@ def run_static(cfg, params, workload, slots: int, prompt_len: int, cache_len: in
 def run_engine(cfg, params, workload, slots: int, cache_len: int, buckets,
                stagger: int = 0, quant_mode: str = "bf16",
                kv_dtype: str = "bf16", prefill_chunk=None, spec=None,
-               deadline=None, **kv_kw):
+               deadline=None, tp: int = 1, **kv_kw):
     """One facade cell: the RuntimeConfig IS the cell description.
     ``deadline`` attaches an SLO deadline (seconds from submit) to every
-    request so the record carries goodput / hit-miss accounting."""
+    request so the record carries goodput / hit-miss accounting; ``tp``
+    shards the cell over a tensor-parallel device mesh (repro/shard)."""
     runtime = RuntimeConfig(
         quant=QuantRuntime(mode=quant_mode),
         kv=KVConfig(dtype=kv_dtype, cache_len=cache_len, **kv_kw),
         scheduler=SchedulerConfig(n_slots=slots, prefill_buckets=buckets,
                                   prefill_chunk=prefill_chunk),
         spec=spec if spec is not None else SpecConfig(),
+        mesh=MeshConfig(tp=tp),
     )
     llm = LLM(config=cfg, params=params, runtime=runtime)
     if deadline is not None:
@@ -327,6 +334,71 @@ def spec_sweep(cfg, params, args, out_path: str) -> None:
           f"{stamped['date']})")
 
 
+def tp_sweep(cfg, params, args, out_path: str) -> None:
+    """Tensor-parallel scaling cell: the SAME paged workload served at
+    tp=1 vs tp=N from the same per-run pool budget (repro/shard threads a
+    "model"-axis mesh through params, attention heads, experts and the KV
+    pool; block tables stay host-side).  On a real multi-chip mesh
+    ``tp_speedup`` measures TP scaling; on a forced host mesh (CI:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) the devices
+    share one CPU, so the cell is a *correctness + dispatch-overhead*
+    record, not a perf claim — bench_check gates only that the ratio
+    stays within prior bounds."""
+    tp = args.tp
+    if jax.device_count() % tp:
+        raise SystemExit(
+            f"--tp {tp} needs jax.device_count() ({jax.device_count()}) "
+            f"divisible by tp; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} to fake "
+            f"a host mesh")
+    cache_len = default_cache_len(args.prompt_len, args.gen)
+    slots = 2 if args.quick else min(int(s) for s in args.slots.split(","))
+    kw = dict(
+        quant_mode=args.quant_mode, kv_dtype=args.kv_cache_dtype,
+        prefill_chunk=PAGE_SIZE, mode="paged", page_size=PAGE_SIZE,
+        n_pages=default_page_count(slots, cache_len, PAGE_SIZE),
+    )
+    workload = make_workload(cfg, args.requests, args.prompt_len, args.gen)
+    print(f"=== tp sweep: {cfg.name} | {args.requests} requests, "
+          f"prompts<={args.prompt_len}, {slots} lanes, tp 1 vs {tp}, "
+          f"{jax.device_count()} devices ===")
+    records = []
+    warm = [(p, 2) for p, _ in workload[:slots]]
+    for cell_tp in (1, tp):
+        run_engine(cfg, params, warm, slots, cache_len, None,
+                   tp=cell_tp, **kw)
+        rec = max((run_engine(cfg, params, workload, slots, cache_len, None,
+                              tp=cell_tp, **kw)
+                   for _ in range(args.repeats)),
+                  key=lambda r: r["tokens_per_s"])
+        rec["mode"] = f"paged tp={cell_tp}"
+        rec["slots"], rec["tp"] = slots, cell_tp
+        records.append(rec)
+        print(f"{'tp=' + str(cell_tp):>8s} {rec['tokens_per_s']:8.1f} tok/s | "
+              f"{rec['decode_steps']:4d} decode dispatches | "
+              f"TTFT mean {rec['ttft_mean_s']*1e3:7.1f}ms "
+              f"p99 {rec['ttft_p99_s']*1e3:7.1f}ms")
+    base, sharded = records
+    run = {
+        "arch": cfg.name,
+        "config": {
+            "requests": args.requests, "prompt_len": args.prompt_len,
+            "gen": args.gen, "lanes": slots, "tp": tp,
+            "devices": jax.device_count(),
+            "kv_cache_dtype": args.kv_cache_dtype,
+            "quant_mode": args.quant_mode, "reduced": not args.full,
+        },
+        "tp_speedup": round(sharded["tokens_per_s"]
+                            / max(base["tokens_per_s"], 1e-9), 3),
+        "records": records,
+    }
+    print(f"tensor parallel: {run['tp_speedup']:.2f}x tok/s at tp={tp} vs "
+          f"tp=1 (host-mesh runs measure dispatch overhead, not scaling)")
+    stamped = append_run(out_path, "serve_bench_tp", run)
+    print(f"appended run to {out_path} (sha {stamped['git_sha']}, "
+          f"{stamped['date']})")
+
+
 def paged_kw(slots: int, cache_len: int, n_requests: int):
     """Paged engine at the *slot pool's* KV budget: same page count the
     slot cache would pin (``slots`` worst-case lanes), but lane count
@@ -368,6 +440,11 @@ def main():
                          "spec-off paged serving of a repetitive workload")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="spec sweep: drafted tokens per verify dispatch")
+    ap.add_argument("--tp", type=int, default=0, metavar="N",
+                    help="tensor-parallel sweep instead: paged serving at "
+                         "tp=1 vs tp=N (repro/shard; needs device_count "
+                         "divisible by N — force a host mesh with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     ap.add_argument("--shared-prefix", type=int, default=48,
                     help="prefix sweep: shared system-prompt length "
                          "(prompt-len becomes the unique tail length)")
@@ -399,6 +476,13 @@ def main():
             args.requests = min(args.requests, 6)
             args.repeats = min(args.repeats, 2)
         spec_sweep(cfg, params, args, args.out)
+        return
+
+    if args.tp:
+        if args.quick:
+            args.requests = min(args.requests, 6)
+            args.repeats = min(args.repeats, 2)
+        tp_sweep(cfg, params, args, args.out)
         return
 
     cache_len = default_cache_len(args.prompt_len, args.gen)

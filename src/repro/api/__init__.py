@@ -61,6 +61,7 @@ See ``examples/api_quickstart.py`` for the runnable version.
 from repro.api.baseline import serve_batch
 from repro.api.config import (
     KVConfig,
+    MeshConfig,
     QuantRuntime,
     RuntimeConfig,
     SamplingDefaults,
@@ -78,6 +79,7 @@ from repro.serving.policies import (
     AdmissionPolicy,
     BucketBatchedAdmission,
     BudgetOrEOSEviction,
+    DeadlineAdmission,
     DefragPolicy,
     EnginePolicies,
     EvictionPolicy,
@@ -97,12 +99,14 @@ __all__ = [
     "AdmissionPolicy",
     "BucketBatchedAdmission",
     "BudgetOrEOSEviction",
+    "DeadlineAdmission",
     "DefragPolicy",
     "EnginePolicies",
     "EvictionPolicy",
     "FIFOAdmission",
     "KVConfig",
     "LLM",
+    "MeshConfig",
     "NeverDefrag",
     "NoPrefixReuse",
     "ObsConfig",

@@ -39,6 +39,7 @@ from repro.serving.engine import RECURRENT_KINDS, EngineConfig
 from repro.serving.policies import (
     BucketBatchedAdmission,
     BudgetOrEOSEviction,
+    DeadlineAdmission,
     EnginePolicies,
     FIFOAdmission,
     NeverDefrag,
@@ -132,6 +133,41 @@ class KVConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    """Device mesh for sharded serving (``repro/shard/``).
+
+    ``tp`` shards attention heads / MoE experts / GEMM operands over the
+    "model" axis; ``dp`` is reserved for data-parallel engine replicas
+    (currently size 1 in serving).  ``enable=True`` at ``tp=1`` builds a
+    genuine 1x1 mesh — the bitwise-vs-unsharded test configuration; the
+    default ``enable=None`` activates the mesh iff an axis exceeds 1.
+    Axis names must stay ``("data", "model")`` to match the sharding
+    rules in ``runtime/sharding.py``; they are configurable only so the
+    JSON form is explicit about what the mesh means.
+    """
+
+    tp: int = 1
+    dp: int = 1
+    enable: Optional[bool] = None
+    axes: Tuple[str, str] = ("data", "model")
+
+    def __post_init__(self):
+        if self.tp < 1:
+            raise ValueError("MeshConfig.tp must be >= 1")
+        if self.dp < 1:
+            raise ValueError("MeshConfig.dp must be >= 1")
+        object.__setattr__(self, "axes", tuple(str(a) for a in self.axes))
+        if len(self.axes) != 2 or len(set(self.axes)) != 2:
+            raise ValueError(f"MeshConfig.axes must be two distinct axis "
+                             f"names, got {self.axes!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.enable if self.enable is not None else (
+            self.tp > 1 or self.dp > 1)
+
+
+@dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Admission / scheduling: lanes, buckets, chunking, engine policies."""
 
@@ -149,7 +185,9 @@ class SchedulerConfig:
     batched_admission: bool = False
     # admission ordering: "fifo" (head-of-line) | "priority"
     # (Request.priority with starvation-free aging) | "prefix-aware"
-    # (requests sharing a hot cached prefix admit back-to-back)
+    # (requests sharing a hot cached prefix admit back-to-back) |
+    # "deadline" (FIFO that SHEDS already-late requests at ingress —
+    # the SLO-aware half of PR 8's late_admissions accounting)
     admission: str = "fifo"
     # paged mode: compact the pool when fragmentation (1 - used/span)
     # crosses this threshold; None disables auto-defrag
@@ -160,9 +198,10 @@ class SchedulerConfig:
             raise ValueError("SchedulerConfig.n_slots must be >= 1")
         if self.max_prefills_per_step < 1:
             raise ValueError("SchedulerConfig.max_prefills_per_step must be >= 1")
-        if self.admission not in ("fifo", "priority", "prefix-aware"):
+        if self.admission not in ("fifo", "priority", "prefix-aware",
+                                  "deadline"):
             raise ValueError("SchedulerConfig.admission must be 'fifo', "
-                             f"'priority' or 'prefix-aware', got "
+                             f"'priority', 'prefix-aware' or 'deadline', got "
                              f"{self.admission!r}")
         if self.admission != "fifo" and self.batched_admission:
             raise ValueError("batched_admission stacks FIFO bucket-mates; "
@@ -216,6 +255,11 @@ class RuntimeConfig:
     kv: KVConfig = dataclasses.field(default_factory=KVConfig)
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     sampling: SamplingDefaults = dataclasses.field(default_factory=SamplingDefaults)
+    # sharded serving (repro/shard/): tensor-parallel device mesh.  The
+    # default 1x1 config is disabled — the engine runs exactly the
+    # unsharded path; tp>1 (or enable=True) threads the mesh through
+    # params, pools and every engine dispatch.
+    mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
     # speculative decoding (repro/spec/): draft-verify greedy decode.
     # Disabled by default (SpecConfig.enabled=False); needs a chunkable
     # (attn/MLA/dense) stack — the engine validates at construction.
@@ -253,6 +297,7 @@ class RuntimeConfig:
         b = d["scheduler"]["prefill_buckets"]
         if isinstance(b, tuple):
             d["scheduler"]["prefill_buckets"] = list(b)
+        d["mesh"]["axes"] = list(d["mesh"]["axes"])
         return d
 
     @classmethod
@@ -269,6 +314,7 @@ class RuntimeConfig:
             kv=KVConfig(**d.pop("kv", {})),
             scheduler=SchedulerConfig(**sched),
             sampling=SamplingDefaults(**d.pop("sampling", {})),
+            mesh=MeshConfig(**d.pop("mesh", {})),
             spec=SpecConfig(**d.pop("spec", {})),
             obs=ObsConfig(**d.pop("obs", {})),
             **d,
@@ -339,6 +385,8 @@ class RuntimeConfig:
             admission = PriorityAdmission()
         elif self.scheduler.admission == "prefix-aware":
             admission = PrefixAwareAdmission()
+        elif self.scheduler.admission == "deadline":
+            admission = DeadlineAdmission()
         elif self.scheduler.batched_admission:
             admission = BucketBatchedAdmission()
         else:

@@ -35,6 +35,7 @@ from repro.serving.engine import ServingEngine
 from repro.serving.policies import EnginePolicies
 from repro.serving.request import RequestState, default_detokenizer
 from repro.serving.sampling import SamplingParams
+from repro.shard import build_mesh, shard_params
 
 Prompt = Sequence[int]
 
@@ -69,6 +70,13 @@ class LLM:
             from repro.checkpoint.checkpoint import restore_checkpoint
 
             self.params = restore_checkpoint(checkpoint_dir, None, self.params)
+        # sharded serving (repro/shard/): resolve the per-arch Megatron
+        # PartitionSpecs into NamedShardings and commit the weights once,
+        # here — every engine dispatch then sees the TP layout as a stable
+        # input constraint.  mesh=None (the default config) changes nothing.
+        self.mesh = build_mesh(self.runtime.mesh)
+        if self.mesh is not None:
+            self.params = shard_params(self.params, self.mesh, self.config)
         self.tokenizer = tokenizer or default_detokenizer
         self._policies = (policies if policies is not None
                           else self.runtime.build_policies())
@@ -140,7 +148,8 @@ class LLM:
             ecfg = dataclasses.replace(
                 ecfg, cache_len=max(ecfg.cache_len, old.engine_cfg.cache_len))
         self._engine = ServingEngine(self.config, self.params, ecfg,
-                                     policies=self._policies, obs=self.obs)
+                                     policies=self._policies, obs=self.obs,
+                                     mesh=self.mesh)
         if old is not None:
             # metrics accumulate across rebuilds: carry the old object over
             # (held references stay live) with the new pool geometry stamped

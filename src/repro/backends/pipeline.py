@@ -41,6 +41,17 @@ def dynamic_quant(x: jnp.ndarray, axis, bits: int = 8):
     [-7, 7] and pass through a single 4-bit plane unchanged).  Thin wrapper
     over :func:`repro.quant.qtensor.quantize` — the quantization arithmetic
     lives in exactly one place.
+
+    Tensor-parallel note: under pjit the per-row ``amax`` reduction over a
+    "model"-sharded K axis lowers to a cross-device collective (pjit's
+    global-view semantics), so per-row scales are GLOBALLY exact — every
+    device quantizes its K-slice against the same scale, and the partial
+    int32 accumulators psum into exactly what an unsharded quantized GEMM
+    would produce.  Column-parallel (N-sharded) weights are even simpler:
+    each device owns whole output columns, so weight scales never cross
+    devices.  No sharding-specific code is needed here; this is why the
+    tp=1 engine is bitwise and tp>1 differs only by float reduction order
+    in the row-parallel psums.
     """
     from repro.quant.qtensor import quantize  # lazy: keeps layering one-way
 

@@ -11,10 +11,20 @@ state (the dry-run must set XLA_FLAGS before any jax initialization).
 
 from __future__ import annotations
 
+import math
+
 import jax
 
 
 def _make_mesh(shape, axes):
+    need = math.prod(shape)
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh shape {dict(zip(axes, shape))} needs {need} devices but "
+            f"only {have} are visible; on CPU, export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "BEFORE jax initializes (or shrink the mesh)")
     # jax.sharding.AxisType (explicit-mesh API) only exists on newer jax;
     # older releases default every axis to Auto, which is what we want.
     if hasattr(jax.sharding, "AxisType"):

@@ -50,6 +50,12 @@ output-invisible); ``--deadline SEC`` attaches an SLO deadline to every
 synthetic request so the run reports goodput and hit/miss counts.  All
 off by default — the disabled engine runs with null sinks and zero extra
 host syncs.
+
+``--tp N`` serves tensor-parallel (``repro/shard``): params, attention
+heads, MoE experts and the paged KV pool shard over an N-way "model" mesh
+axis while block tables stay host-side and replicated, so prefill /
+decode / verify each remain one pjit dispatch per step.  Off-accelerator,
+fake the devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -63,6 +69,7 @@ import numpy as np
 from repro.api import (
     LLM,
     KVConfig,
+    MeshConfig,
     ObsConfig,
     QuantRuntime,
     RuntimeConfig,
@@ -244,6 +251,7 @@ def _runtime_from_args(args) -> RuntimeConfig:
             draft_arch=args.draft_arch,
         ),
         obs=_obs_from_args(args),
+        mesh=MeshConfig(tp=args.tp),
         max_new_tokens=args.gen,
         reduced=args.reduced,
     )
@@ -268,11 +276,12 @@ def main():
                     help="engine: stack same-bucket prompts into one prefill "
                          "dispatch (slot and paged modes)")
     ap.add_argument("--admission", default="fifo",
-                    choices=["fifo", "priority", "prefix-aware"],
+                    choices=["fifo", "priority", "prefix-aware", "deadline"],
                     help="engine: admission ordering (priority = "
                          "Request.priority with starvation-free aging; "
                          "prefix-aware = requests sharing a hot cached "
-                         "prefix admit back-to-back)")
+                         "prefix admit back-to-back; deadline = FIFO that "
+                         "also sheds already-late requests at ingress)")
     ap.add_argument("--spec", type=int, default=0, metavar="K",
                     help="engine: speculative decoding with K drafted tokens "
                          "per verify dispatch (0 = off; greedy lanes only)")
@@ -350,6 +359,13 @@ def main():
                     help="SLO: per-request deadline in seconds from submit; "
                          "finished-late requests count as misses and drop "
                          "out of goodput")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard params, attention "
+                         "heads, experts and the paged KV pool over a "
+                         "'model' mesh axis (repro/shard). Needs "
+                         "jax.device_count() divisible by tp; use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                         "to fake a multi-device host mesh")
     args = ap.parse_args()
 
     runtime = (load_runtime(args.runtime) if args.runtime
@@ -362,6 +378,8 @@ def main():
         obs = _obs_from_args(args)
         if obs != ObsConfig():
             runtime = dataclasses.replace(runtime, obs=obs)
+        if args.tp != 1:
+            runtime = dataclasses.replace(runtime, mesh=MeshConfig(tp=args.tp))
     llm = LLM(arch=args.arch, runtime=runtime)
     cfg = llm.config
     engine_capable = not cfg.is_encoder_decoder and cfg.frontend is None

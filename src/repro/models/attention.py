@@ -173,9 +173,9 @@ def _decode_qkv(x_t, p, cfg: ModelConfig, pos):
     k = linear(x_t, p["wk"], qm, be).reshape(b, 1, hkv, hd)
     v = linear(x_t, p["wv"], qm, be).reshape(b, 1, hkv, hd)
     posb = pos[:, None]
-    q = apply_rope(q, posb, cfg.rope_theta)
-    k = apply_rope(k, posb, cfg.rope_theta)
-    return q, k, v
+    q = _constrain_heads(apply_rope(q, posb, cfg.rope_theta))
+    k = _constrain_heads(apply_rope(k, posb, cfg.rope_theta))
+    return q, k, _constrain_heads(v)
 
 
 def _verify_qkv(x, p, cfg: ModelConfig, pos):
@@ -188,9 +188,9 @@ def _verify_qkv(x, p, cfg: ModelConfig, pos):
     k = linear(x, p["wk"], qm, be).reshape(b, w, hkv, hd)
     v = linear(x, p["wv"], qm, be).reshape(b, w, hkv, hd)
     positions = pos[:, None] + jnp.arange(w)[None, :]
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
-    return q, k, v
+    q = _constrain_heads(apply_rope(q, positions, cfg.rope_theta))
+    k = _constrain_heads(apply_rope(k, positions, cfg.rope_theta))
+    return q, k, _constrain_heads(v)
 
 
 def _verify_valid(pos, w, smax):

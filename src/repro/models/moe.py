@@ -151,6 +151,7 @@ def moe_ffn(x, p, cfg: ModelConfig):
     bufs = _constrain_ep(bufs)                              # B->data, E->model
 
     y = _grouped_glu(bufs, p, cfg.act, cfg.quant_mode, backend=cfg.gemm_backend)      # (B, E, C, d)
+    y = _constrain_ep(y)  # keep expert outputs EP-sharded until combine
 
     def combine_row(y_row, dest_row, sort_idx_row, topw_row):
         y_flat = jnp.concatenate(

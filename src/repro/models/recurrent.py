@@ -96,6 +96,58 @@ def rglru_block(x, p, cfg: ModelConfig, state=None):
     return out, new_state
 
 
+def rglru_chunk(x, p, cfg: ModelConfig, state, n_valid):
+    """Chunked prefill step: (1, C, d) chunk with only the first
+    ``n_valid`` rows real, carrying cell state across chunks.
+
+    ``state`` holds the previous chunk's carry — ``h`` (B, lru) and
+    ``conv`` (B, W-1, lru), the last W-1 *raw* pre-conv branch rows in
+    fp32 (zeros for the first chunk ≡ ``causal_conv1d``'s left padding).
+    Pad rows are forced to the identity recurrence (a=1, b=0) so the
+    hidden state holds its last valid value past the boundary: ``h_last``
+    and the conv carry are exact regardless of padding, and pad-row
+    outputs are garbage confined to rows no later block ever reads (the
+    same argument chunked attention makes for its padded tail)."""
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    w = cfg.conv_width
+    c = x.shape[1]
+    gate = jax.nn.gelu(linear(x, p["w_gate_branch"], qm, be).astype(jnp.float32))
+    xb_raw = linear(x, p["w_x_branch"], qm, be)
+    # depthwise causal conv with carried context in place of zero padding
+    full_raw = jnp.concatenate(
+        [state["conv"].astype(jnp.float32), xb_raw.astype(jnp.float32)],
+        axis=1)                                           # (B, W-1+C, lru)
+    xb = jnp.zeros_like(full_raw[:, w - 1:, :])
+    for i in range(w):  # width is tiny (4); matches causal_conv1d's order
+        xb = xb + full_raw[:, i: i + c, :] * p["conv_w"][i]
+    xb = xb.astype(xb_raw.dtype)
+    a, bcoef = _rglru_coeffs(xb, p, qm, be)
+    valid = (jnp.arange(c) < n_valid)[None, :, None]
+    a = jnp.where(valid, a, 1.0)
+    bcoef = jnp.where(valid, bcoef, 0.0)
+    h, h_last = rglru_scan_coeffs(a, bcoef, state["h"])
+    y = (gate * h).astype(x.dtype)
+    out = linear(y, p["w_out"], qm, be)
+    # conv carry: raw rows at positions [n_valid - W + 1, n_valid) of the
+    # ctx+chunk concat — the last W-1 rows ending at the chunk's last
+    # valid token (n_valid >= 1 always; the engine never feeds empty chunks)
+    new_conv = jax.lax.dynamic_slice_in_dim(full_raw, n_valid, w - 1, axis=1)
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def rglru_scan_coeffs(a, b, h0):
+    """The associative scan over precomputed (a, b) with carried ``h0``."""
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
 def rglru_decode(x_t, p, cfg: ModelConfig, state):
     """One step. x_t: (B, 1, d); state {"h": (B,lru), "conv": (B,W-1,lru)}."""
     qm, be = cfg.quant_mode, cfg.gemm_backend
@@ -208,6 +260,62 @@ def mlstm_block(x, p, cfg: ModelConfig, state=None):
     return out, new_state
 
 
+def mlstm_chunk(x, p, cfg: ModelConfig, state, n_valid):
+    """Chunked prefill step: (1, C, d) chunk, first ``n_valid`` rows real,
+    carrying the (C, n) matrix memory across chunks.
+
+    Pad rows are neutralized in the gate domain — ``log f = 0`` (decay 1:
+    cumulative products past the boundary are unchanged) and
+    ``log i = -inf`` (zero injection: exp() zeroes every pad contribution
+    to the intra-chunk D matrix and the chunk-boundary carry) — so the
+    carried (C, n) equal the exact-length computation's."""
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+
+    def heads(t):
+        return t.reshape(b, s, h_heads, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q = heads(linear(x, p["wq"], qm, be)) * (dh ** -0.5)
+    k = heads(linear(x, p["wk"], qm, be)) * (dh ** -0.5)
+    v = heads(linear(x, p["wv"], qm, be))
+    logi = jax.nn.log_sigmoid(
+        linear(x, p["w_igate"], qm, be).astype(jnp.float32)
+    ).transpose(0, 2, 1)
+    logf = jax.nn.log_sigmoid(
+        linear(x, p["w_fgate"], qm, be).astype(jnp.float32)
+    ).transpose(0, 2, 1)
+    valid = (jnp.arange(s) < n_valid)[None, None, :]      # (1, 1, S)
+    logf = jnp.where(valid, logf, 0.0)
+    logi = jnp.where(valid, logi, -jnp.inf)
+
+    L = min(_MLSTM_CHUNK, s)
+    assert s % L == 0, f"seq {s} not divisible by mLSTM chunk {L}"
+    nc = s // L
+
+    def to_chunks(t):
+        return t.reshape(b, h_heads, nc, L, *t.shape[3:]).transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    fic = logi.reshape(b, h_heads, nc, L).transpose(2, 0, 1, 3)
+    ffc = logf.reshape(b, h_heads, nc, L).transpose(2, 0, 1, 3)
+
+    def body(carry, xs):
+        C, n = carry
+        qi, ki, vi, lfi, lii = xs
+        h, C1, n1 = _mlstm_chunk_math(qi, ki, vi, lfi, lii, C, n)
+        return (C1, n1), h
+
+    (C_f, n_f), hs = jax.lax.scan(body, (state["C"], state["n"]),
+                                  (qc, kc, vc, ffc, fic))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, h_heads, s, dh)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, d)
+    o = jax.nn.sigmoid(linear(x, p["w_ogate"], qm, be).astype(jnp.float32))
+    out = linear((o * h).astype(x.dtype), p["w_out"], qm, be)
+    return out, {"C": C_f, "n": n_f}
+
+
 def mlstm_decode(x_t, p, cfg: ModelConfig, state):
     """One step recurrent mLSTM. state: {"C": (B,H,dh,dh), "n": (B,H,dh)}."""
     qm, be = cfg.quant_mode, cfg.gemm_backend
@@ -283,6 +391,33 @@ def slstm_block(x, p, cfg: ModelConfig, state=None):
     out = linear(h, p["w_out"], qm, be)
     new_state = None if state is None else {"c": c, "n": n, "h": h_last}
     return out, new_state
+
+
+def slstm_chunk(x, p, cfg: ModelConfig, state, n_valid):
+    """Chunked prefill step: (1, C, d) chunk, first ``n_valid`` rows real.
+    The scan is inherently sequential, so masking is a per-step carry
+    freeze: pad steps compute and discard, keeping the carried (c, n, h)
+    bitwise the exact-length run's (identical op sequence on valid rows)."""
+    qm, be = cfg.quant_mode, cfg.gemm_backend
+    b, s, d = x.shape
+    hh = cfg.n_heads
+    dh = d // hh
+    zifo = linear(x, p["w_zifo"], qm, be).astype(jnp.float32).reshape(b, s, 4, hh, dh)
+    carry0 = (state["c"], state["n"], state["h"])
+
+    def step(carry, xs):
+        z_t, t = xs
+        stepped, h1 = _slstm_step(p, cfg, carry, z_t)
+        keep = t < n_valid
+        return tuple(jnp.where(keep, sc, c)
+                     for sc, c in zip(stepped, carry)), h1
+
+    (c, n, h_last), hs = jax.lax.scan(
+        step, carry0,
+        (zifo.transpose(1, 0, 2, 3, 4), jnp.arange(s, dtype=jnp.int32)))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    out = linear(h, p["w_out"], qm, be)
+    return out, {"c": c, "n": n, "h": h_last}
 
 
 def slstm_decode(x_t, p, cfg: ModelConfig, state):

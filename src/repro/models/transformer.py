@@ -264,10 +264,12 @@ def apply_block_verify(x, p, kind: str, cfg: ModelConfig, cache, pos,
 
 def scan_periods_verify(x, stacked_params, stacked_cache, cfg: ModelConfig, pos,
                         tables=None, active=None):
+    from repro.runtime.sharding import constrain_decode_carry
+
     pattern = cfg.block_pattern
 
     def period_fn(carry, xs):
-        h = carry
+        h = constrain_decode_carry(carry)  # TP: see scan_periods_decode
         slot_params, slot_cache = xs
         new_cache = []
         for s, kind in enumerate(pattern):
@@ -347,10 +349,14 @@ def scan_periods(x, stacked_params, cfg: ModelConfig, positions, *, causal=True)
 
 def scan_periods_decode(x_t, stacked_params, stacked_cache, cfg: ModelConfig, pos,
                         tables=None, active=None):
+    from repro.runtime.sharding import constrain_decode_carry
+
     pattern = cfg.block_pattern
 
     def period_fn(carry, xs):
-        h = carry
+        # TP: pin the (B, 1, d) carry replicated-over-model between periods
+        # so the partitioner never round-trips it through sharded layouts
+        h = constrain_decode_carry(carry)
         slot_params, slot_cache = xs
         new_cache = []
         for s, kind in enumerate(pattern):

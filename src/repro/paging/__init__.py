@@ -19,16 +19,20 @@ from repro.paging.cache import PagedCache, paged_insert, paged_insert_many
 from repro.paging.manager import PageManager
 from repro.paging.prefill import (
     CHUNKABLE_KINDS,
+    STATEFUL_CHUNK_KINDS,
     chunkable,
+    chunkable_with_state,
     make_chunk_step,
     stack_kinds,
 )
 
 __all__ = [
     "CHUNKABLE_KINDS",
+    "STATEFUL_CHUNK_KINDS",
     "PageManager",
     "PagedCache",
     "chunkable",
+    "chunkable_with_state",
     "make_chunk_step",
     "paged_insert",
     "paged_insert_many",

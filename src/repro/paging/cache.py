@@ -170,7 +170,7 @@ class PagedCache:
     ``n_pages`` physical pages of ``page_size`` rows each."""
 
     def __init__(self, cfg: ModelConfig, n_lanes: int, cache_len: int,
-                 page_size: int, n_pages: int | None = None):
+                 page_size: int, n_pages: int | None = None, mesh=None):
         self.n_lanes = n_lanes
         self.cache_len = cache_len
         self.page_size = page_size
@@ -179,7 +179,24 @@ class PagedCache:
                         if n_pages is None else n_pages)
         shapes = model_lib.paged_cache_shapes(
             cfg, n_lanes, cache_len, page_size, self.n_pages)
-        self.cache = zeros_like_shapes(shapes)
+        self.mesh = mesh
+        self._table_sharding = None
+        if mesh is not None:
+            # sharded serving: commit the pools to their TP layout (KV
+            # heads over "model", block tables + pos replicated — see
+            # runtime/sharding.pool_specs).  Committing here, once, means
+            # every later jit (admission, decode, insert, defrag moves)
+            # inherits the layout through donation instead of re-deciding
+            # it; the host-side PageManager stays the single block-table
+            # owner and its uploads re-commit to the replicated sharding
+            # so the decode program never changes between steps.
+            from repro.runtime.sharding import named, pool_specs
+
+            shardings = named(pool_specs(shapes, mesh), mesh)
+            self.cache = jax.device_put(zeros_like_shapes(shapes), shardings)
+            self._table_sharding = shardings["block_tables"]
+        else:
+            self.cache = zeros_like_shapes(shapes)
         self.manager = PageManager(self.n_pages, page_size, n_lanes,
                                    self.max_pages)
 
@@ -196,8 +213,14 @@ class PagedCache:
     def sync_tables(self) -> None:
         """Upload the host block table if growth/free/defrag changed it."""
         if self.manager.dirty:
-            self.cache = {**self.cache,
-                          "block_tables": jnp.asarray(self.manager.block_tables)}
+            tables = jnp.asarray(self.manager.block_tables)
+            if self._table_sharding is not None:
+                # keep the upload committed-replicated: a mix of committed
+                # and uncommitted table inputs would give the decode jit
+                # two distinct input shardings (two compiles) for one
+                # logical program
+                tables = jax.device_put(tables, self._table_sharding)
+            self.cache = {**self.cache, "block_tables": tables}
             self.manager.dirty = False
 
     def free(self, lane: int) -> int:

@@ -29,6 +29,15 @@ lane must never *write* a page it shares: ``ensure_writable`` (and the
 planned forks the engine takes at admission) copy-on-write forks the page
 into a private copy first, leaving every other holder aliasing the
 original bytes.
+
+Tensor parallelism does not change anything in this file.  Under a device
+mesh the *pools* are sharded over "model" (each device holds its KV-head
+slice of every physical page — see ``cache.PagedCache``), while the block
+tables stay host-authoritative here and are uploaded **replicated** across
+the mesh: every device indexes its own pool shard through the same
+logical page numbers, so alloc / free / COW / defrag remain single-threaded
+numpy exactly as below, and prefill / decode / verify each stay one pjit
+dispatch per step with no per-device bookkeeping.
 """
 
 from __future__ import annotations

@@ -11,16 +11,27 @@ per-row computation is position-independent, the chunked admission is
 bitwise the unchunked prefill (see ``models/attention.attention_chunk``);
 the engine's exact-match tests pin that down.
 
-Chunkable kinds are the attention family whose math is strictly
-row-independent: ``attn`` (incl. the MLA rewrite) and dense FFN layers.
+Chunkable kinds come in two tiers:
+
+* ``chunkable`` — the attention family whose math is strictly
+  row-independent: ``attn`` (incl. the MLA rewrite) and dense FFN layers.
+  Chunking is *bitwise* the unchunked prefill; prefix caching and
+  speculative verify require exactly this contract.
+* ``chunkable_with_state`` — additionally the recurrent kinds
+  (``rglru``/``mlstm``/``slstm``), whose cells carry their state across
+  chunk boundaries (``models/recurrent.*_chunk``): pad rows are
+  neutralized in each cell's own algebra (identity recurrence / zero
+  gate injection / carry freeze), so the carried state is exact and
+  chunk-boundary placement only reorders float reductions (sLSTM is
+  bitwise; RG-LRU/mLSTM are allclose — the associative/chunk scans
+  regroup).  This is what lets the engine chunk-admit xLSTM-style
+  stacks instead of forcing exact-length one-shot admissions.
+
 Excluded by construction:
 
 * ``moe`` — expert capacity is ``ceil(S * k / E * cf)``: it depends on how
   many tokens share the dispatch, so chunking would change which tokens
   drop and break output-invisibility;
-* recurrent kinds (``rglru``/``mlstm``/``slstm``) — their cells integrate
-  state full-sequence here; the engine already admits those at exact
-  length, unchunked;
 * ``local_attn`` — the ring buffer is written modulo the window, which a
   partial chunk would wrap incorrectly.
 """
@@ -32,10 +43,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
+from repro.models import recurrent as rec
 from repro.models import transformer as tfm
 from repro.models.layers import embed, glu_mlp, rmsnorm, unembed
 
 CHUNKABLE_KINDS = frozenset({"attn", "mla", "dense_ffn_layer"})
+# state-carrying kinds the chunk step can ALSO run (see module docstring
+# for the weaker exactness contract)
+STATEFUL_CHUNK_KINDS = frozenset({"rglru", "mlstm", "slstm"})
 
 
 def stack_kinds(cfg: ModelConfig) -> frozenset[str]:
@@ -52,17 +67,62 @@ def stack_kinds(cfg: ModelConfig) -> frozenset[str]:
 
 
 def chunkable(cfg: ModelConfig) -> bool:
-    """Can this stack prefill in chunks without changing its outputs?"""
+    """Can this stack prefill in chunks *bitwise-identically* to the
+    unchunked prefill?  (The contract prefix caching and speculative
+    verify require.)"""
     if cfg.is_encoder_decoder or cfg.frontend is not None:
         return False
     return stack_kinds(cfg) <= CHUNKABLE_KINDS
 
 
+def chunkable_with_state(cfg: ModelConfig) -> bool:
+    """Can this stack prefill in chunks at all — allowing state-carrying
+    recurrent cells whose chunk boundaries regroup float reductions
+    (token-equivalent, not bitwise)?  This is the engine's prefill_chunk
+    gate; the stricter :func:`chunkable` still gates prefix/spec."""
+    if cfg.is_encoder_decoder or cfg.frontend is not None:
+        return False
+    return stack_kinds(cfg) <= (CHUNKABLE_KINDS | STATEFUL_CHUNK_KINDS)
+
+
+def _lane_state(cache, lane, start):
+    """Slice lane ``lane``'s per-lane state leaves (axis 0), zeroed for
+    the first chunk — a freed lane's leaves hold the previous occupant's
+    stale state, which admission must not integrate."""
+    st = jax.tree_util.tree_map(
+        lambda v: jax.lax.dynamic_slice_in_dim(v, lane, 1, axis=0), cache)
+    return jax.tree_util.tree_map(
+        lambda v: jnp.where(start[0] == 0, jnp.zeros_like(v), v), st)
+
+
+def _lane_state_update(cache, new_state, lane):
+    """Write the (1, ...) state back into lane ``lane`` of every leaf."""
+    return jax.tree_util.tree_map(
+        lambda full, part: jax.lax.dynamic_update_slice(
+            full, part.astype(full.dtype),
+            (jnp.asarray(lane, jnp.int32),) + (0,) * (full.ndim - 1)),
+        cache, new_state)
+
+
 def _apply_block_chunk(x, p, kind: str, cfg: ModelConfig, cache, table_row,
-                       start, positions):
+                       lane, start, true_len, positions):
     """One block over a (1, C, d) chunk against the paged cache."""
     kind = tfm.effective_kind(kind, cfg)
     h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind in STATEFUL_CHUNK_KINDS:
+        # recurrent cells: state lives per-lane (axis 0 — scan already
+        # peeled the stacked periods axis), carried chunk to chunk
+        cell = {"rglru": rec.rglru_chunk, "mlstm": rec.mlstm_chunk,
+                "slstm": rec.slstm_chunk}[kind]
+        a, new_state = cell(h, p["cell"], cfg,
+                            _lane_state(cache, lane, start), true_len[0])
+        x = x + a
+        cache = _lane_state_update(cache, new_state, lane)
+        if kind == "rglru":  # rglru blocks carry their own norm2+MLP;
+            h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)  # xLSTM blocks don't
+            x = x + glu_mlp(h2, p["mlp"], cfg.act, cfg.quant_mode,
+                            backend=cfg.gemm_backend)
+        return x, cache
     if kind in ("attn", "dense_ffn_layer"):
         a, cache = attn.attention_chunk(h, p["attn"], cfg, cache, table_row,
                                         start, positions=positions)
@@ -92,10 +152,10 @@ def make_chunk_step(cfg: ModelConfig, chunk_len: int):
     ``cache["pos"]`` for the lane is set to ``start + true_len`` so the
     final chunk leaves the lane decode-ready.
     """
-    if not chunkable(cfg):
+    if not chunkable_with_state(cfg):
         raise ValueError(
             f"{cfg.name}: stack has non-chunkable kinds "
-            f"{sorted(stack_kinds(cfg) - CHUNKABLE_KINDS)}")
+            f"{sorted(stack_kinds(cfg) - CHUNKABLE_KINDS - STATEFUL_CHUNK_KINDS)}")
 
     lead, n_periods, tail_kinds = tfm.layer_layout(cfg)
 
@@ -111,7 +171,7 @@ def make_chunk_step(cfg: ModelConfig, chunk_len: int):
         for i, p in enumerate(params.get("head_blocks", [])):
             x, c = _apply_block_chunk(x, p, "dense_ffn_layer", cfg,
                                       cache["head_blocks"][i], table_row,
-                                      start, positions)
+                                      lane, start, true_len, positions)
             new_cache["head_blocks"][i] = c
 
         if params.get("blocks", ()):
@@ -123,7 +183,8 @@ def make_chunk_step(cfg: ModelConfig, chunk_len: int):
                 for s, kind in enumerate(pattern):
                     h, c = _apply_block_chunk(h, slot_params[s], kind, cfg,
                                               slot_cache[s], table_row,
-                                              start, positions)
+                                              lane, start, true_len,
+                                              positions)
                     out.append(c)
                 return h, tuple(out)
 
@@ -136,7 +197,7 @@ def make_chunk_step(cfg: ModelConfig, chunk_len: int):
         for i, p in enumerate(params.get("tail_blocks", [])):
             x, c = _apply_block_chunk(x, p, tail_kinds[i], cfg,
                                       cache["tail_blocks"][i], table_row,
-                                      start, positions)
+                                      lane, start, true_len, positions)
             new_cache["tail_blocks"][i] = c
 
         new_cache["pos"] = cache["pos"].at[lane].set(

@@ -210,6 +210,54 @@ def opt_state_specs(opt_shapes, p_specs, mesh, zero1: bool = True):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Paged-pool specs (serving: repro/paging/cache.py page pools)
+# ---------------------------------------------------------------------------
+
+# pool leaves carrying a KV-head axis: kp/vp are (n_pages, page_size, Hkv,
+# head_dim) (stacked variants prepend n_periods), their int8 scales drop
+# the trailing head_dim
+_POOL_HEAD_AXIS = {"kp": -2, "vp": -2, "kp_scale": -1, "vp_scale": -1}
+
+
+def pool_specs(cache_shapes_tree, mesh):
+    """PartitionSpecs for a paged serving cache (``paged_cache_shapes``).
+
+    Page pools shard their KV-head axis over "model" — the axis the
+    attention shards its heads over, so each device's pool slice feeds its
+    own head shard with no gather traffic.  MLA latent pools (``ckvp``)
+    shard the latent rank; the shared rope pool (``krp``) is replicated
+    (every head shard reads all rope dims).  ``pos`` and ``block_tables``
+    replicate: the host-side ``PageManager`` stays the single source of
+    truth and every device sees the same table.  Per-lane leaves
+    (recurrent state, local-attention rings) shard their trailing width.
+    Any non-divisible dim falls back to replication — never an error.
+    """
+    model = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(path)
+        nd = len(shape)
+        axes = [None] * nd
+        if name in ("pos", "block_tables") or nd < 2:
+            return P(*axes)
+        if name in _POOL_HEAD_AXIS:
+            dim = nd + _POOL_HEAD_AXIS[name]
+            if shape[dim] % model == 0:
+                axes[dim] = "model"
+            return P(*axes)
+        if name == "krp":
+            return P(*axes)
+        # ckvp latent pools and per-lane leaves (recurrent h/conv/C/n/c,
+        # local-attn rings): trailing width over "model" when divisible
+        if shape[-1] % model == 0:
+            axes[-1] = "model"
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes_tree)
+
+
 def _sp_constrain(x, seq_axis):
     """Internal: pin (B, S, d) to batch-over-DP with the given seq sharding."""
     try:
@@ -273,6 +321,16 @@ def constrain_activations(x):
         return jax.lax.with_sharding_constraint(x, P(first, second, None))
     except Exception:  # pragma: no cover — never fail a model for sharding
         return x
+
+
+def constrain_decode_carry(x):
+    """Serving decode/verify activations (B, 1..k, d): batch over DP,
+    sequence and features replicated.  One decode row per lane is too
+    narrow to seq-shard; pinning the carry keeps XLA's SPMD partitioner
+    from round-tripping it through "model"-sharded layouts between the
+    row-parallel reduce of one layer and the column-parallel matmul of the
+    next.  No-op outside a mesh context (the unsharded engine)."""
+    return _sp_constrain(x, None)
 
 
 def named(tree_of_specs, mesh):

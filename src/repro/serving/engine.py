@@ -87,6 +87,7 @@ from repro.obs import DISABLED, Observability
 from repro.paging import (
     PagedCache,
     chunkable,
+    chunkable_with_state,
     make_chunk_step,
     paged_insert,
     paged_insert_many,
@@ -116,12 +117,32 @@ def _roundup(n: int, m: int) -> int:
     return pages_for(n, m) * m
 
 
-# jit wrappers are cached per (cfg, cache_len) so spinning up a new engine
-# (benchmark sweeps, tests) reuses compiled traces instead of re-jitting —
-# ``make_*_step`` returns a fresh closure per call, which defeats jax's own
-# cache if wrapped naively per instance.
+def _with_mesh(mesh, fn):
+    """Dispatch ``fn`` inside ``with mesh:`` so the trace-time sharding
+    constraints (``runtime/sharding.sp_enter`` and friends) activate and
+    pjit partitions the step across the mesh.  Identity when ``mesh`` is
+    None — the unsharded engine pays nothing.  The mesh context is part of
+    pjit's cache key, so meshed and unmeshed engines sharing one lru-cached
+    jit object still get distinct compiled programs."""
+    if mesh is None:
+        return fn
+
+    @functools.wraps(fn)
+    def run(*args, **kwargs):
+        with mesh:
+            return fn(*args, **kwargs)
+
+    return run
+
+
+# jit wrappers are cached per (cfg, cache_len[, mesh]) so spinning up a new
+# engine (benchmark sweeps, tests) reuses compiled traces instead of
+# re-jitting — ``make_*_step`` returns a fresh closure per call, which
+# defeats jax's own cache if wrapped naively per instance.  ``mesh`` (a
+# hashable jax.sharding.Mesh, or None) keys the cache too so sharded and
+# unsharded engines never swap wrappers.
 @functools.lru_cache(maxsize=None)
-def _jitted_admit(cfg: ModelConfig, cache_len: int):
+def _jitted_admit(cfg: ModelConfig, cache_len: int, mesh=None):
     """Fused admission: prefill + first-token sample + lane scatter in ONE
     dispatch (the batch=1 cache never materializes as a standalone output).
     Single prefills are the engine's per-request overhead; at small scale
@@ -136,11 +157,12 @@ def _jitted_admit(cfg: ModelConfig, cache_len: int):
         tok = sample_tokens(logits, temp, topk, greedy, key)
         return tok, scatter_lane(pool, single, slot, axes_flat)
 
-    return jax.jit(admit, donate_argnums=(0,), static_argnums=(9,))
+    return _with_mesh(mesh, jax.jit(admit, donate_argnums=(0,),
+                                    static_argnums=(9,)))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_admit_group(cfg: ModelConfig, cache_len: int, k: int):
+def _jitted_admit_group(cfg: ModelConfig, cache_len: int, k: int, mesh=None):
     """Stacked admission (slot mode): ``k`` same-bucket prompts prefill as
     ONE batch=``k`` dispatch — prefill + per-lane first-token sample + lane
     scatter fused, amortizing the per-admission dispatch cost that
@@ -157,11 +179,12 @@ def _jitted_admit_group(cfg: ModelConfig, cache_len: int, k: int):
         toks = sample_tokens(logits, temps, topk, greedy, keys)
         return toks, scatter_lanes(pool, multi, slots, axes_flat, k)
 
-    return jax.jit(admit, donate_argnums=(0,), static_argnums=(9,))
+    return _with_mesh(mesh, jax.jit(admit, donate_argnums=(0,),
+                                    static_argnums=(9,)))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_admit_paged(cfg: ModelConfig, single_len: int):
+def _jitted_admit_paged(cfg: ModelConfig, single_len: int, mesh=None):
     """Paged fused admission: the batch=1 prefill allocates only
     ``single_len`` rows (the bucket rounded up to whole pages, not the full
     ``cache_len``) and its cache is scattered straight into the lane's
@@ -176,11 +199,12 @@ def _jitted_admit_paged(cfg: ModelConfig, single_len: int):
         return tok, paged_insert(pool, single, lane, page_ids, table_row,
                                  lengths[0])
 
-    return jax.jit(admit, donate_argnums=(0,))
+    return _with_mesh(mesh, jax.jit(admit, donate_argnums=(0,)))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_admit_paged_group(cfg: ModelConfig, single_len: int, k: int):
+def _jitted_admit_paged_group(cfg: ModelConfig, single_len: int, k: int,
+                              mesh=None):
     """Stacked admission (paged mode): ``k`` same-bucket prompts prefill as
     ONE batch=``k`` dispatch whose cache rows scatter into each lane's own
     pages (``paged_insert_many``), with every block-table row written in
@@ -197,11 +221,11 @@ def _jitted_admit_paged_group(cfg: ModelConfig, single_len: int, k: int):
         return toks, paged_insert_many(pool, multi, lanes, page_ids,
                                        table_rows, lengths, k)
 
-    return jax.jit(admit, donate_argnums=(0,))
+    return _with_mesh(mesh, jax.jit(admit, donate_argnums=(0,)))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_decode_sample(cfg: ModelConfig):
+def _jitted_decode_sample(cfg: ModelConfig, mesh=None):
     """Fused decode+sample: one jit dispatch per engine step.
 
     ``any_stochastic`` is static so the all-greedy trace (the default, and
@@ -219,14 +243,16 @@ def _jitted_decode_sample(cfg: ModelConfig):
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return toks, cache
 
-    return jax.jit(step, donate_argnums=(2,), static_argnums=(8,))
+    return _with_mesh(mesh, jax.jit(step, donate_argnums=(2,),
+                                    static_argnums=(8,)))
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_chunk_step(cfg: ModelConfig, chunk_len: int):
+def _jitted_chunk_step(cfg: ModelConfig, chunk_len: int, mesh=None):
     """One chunked-prefill step (see ``paging.prefill.make_chunk_step``),
     donating the pool so chunk writes are in-place."""
-    return jax.jit(make_chunk_step(cfg, chunk_len), donate_argnums=(1,))
+    return _with_mesh(mesh, jax.jit(make_chunk_step(cfg, chunk_len),
+                                    donate_argnums=(1,)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,7 +303,8 @@ class EngineConfig:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, engine_cfg: EngineConfig,
                  policies: Optional[EnginePolicies] = None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 mesh=None):
         if cfg.is_encoder_decoder or cfg.frontend is not None:
             raise ValueError(
                 "ServingEngine handles decoder-only token-input models; "
@@ -298,6 +325,11 @@ class ServingEngine:
         self.engine_cfg = engine_cfg
         self.buckets = buckets
         self.paged = engine_cfg.cache_mode == "paged"
+        # tensor-parallel serving (repro/shard/): every jitted dispatch
+        # below runs under ``with mesh:`` so trace-time sharding
+        # constraints activate; params arrive pre-committed (api/llm.py)
+        # and the paged pool commits its own layout in PagedCache
+        self.mesh = mesh
 
         self.policies = policies if policies is not None else EnginePolicies()
         # observability bundle (repro/obs/): the DISABLED singleton's null
@@ -330,13 +362,13 @@ class ServingEngine:
                 if engine_cfg.prefill_chunk % ps:
                     raise ValueError("prefill_chunk must be a multiple of "
                                      "page_size (chunks are page-aligned)")
-                if not chunkable(cfg):
+                if not chunkable_with_state(cfg):
                     raise ValueError(
-                        f"{cfg.name}: chunked prefill needs a stack of "
-                        "strictly row-independent kinds (attn/MLA/dense); "
-                        "use prefill_chunk=None")
+                        f"{cfg.name}: chunked prefill needs row-independent "
+                        "kinds (attn/MLA/dense) or state-carrying recurrent "
+                        "cells (rglru/mlstm/slstm); use prefill_chunk=None")
             self.store = PagedCache(cfg, n, engine_cfg.cache_len, ps,
-                                    engine_cfg.n_pages)
+                                    engine_cfg.n_pages, mesh=mesh)
             self.metrics.set_gauge("pages_total", self.store.n_pages)
             self.metrics.set_gauge("page_size", ps)
             # chunk length for BOTH long-prompt chunking and shared-prefix
@@ -366,7 +398,7 @@ class ServingEngine:
             else:
                 self.prefix = None
             self._chunk_fn = (
-                _jitted_chunk_step(cfg, self._chunk_len)
+                _jitted_chunk_step(cfg, self._chunk_len, mesh)
                 if self._chunk_len is not None else None)
         else:
             if engine_cfg.prefill_chunk is not None:
@@ -379,8 +411,8 @@ class ServingEngine:
             self._chunk_len = None
 
         self._admit_fn = (None if self.paged
-                          else _jitted_admit(cfg, engine_cfg.cache_len))
-        self._decode_sample = _jitted_decode_sample(cfg)
+                          else _jitted_admit(cfg, engine_cfg.cache_len, mesh))
+        self._decode_sample = _jitted_decode_sample(cfg, mesh)
 
         # speculative decoding (repro/spec/): verify jit + drafter.  The
         # verify window needs every row-independent property the chunked
@@ -396,7 +428,8 @@ class ServingEngine:
                     f"contract; got {sorted(stack_kinds(cfg))}")
             from repro.spec import make_drafter
 
-            self._verify_fn = jitted_verify(cfg, self._spec.width)
+            self._verify_fn = _with_mesh(mesh,
+                                         jitted_verify(cfg, self._spec.width))
             self._drafter = make_drafter(
                 self._spec, cfg, n, engine_cfg.cache_len,
                 tree=self.prefix.tree if self.prefix is not None else None)
@@ -569,7 +602,8 @@ class ServingEngine:
             self.obs.events.emit("admitted", req.req_id, slot=slot,
                                  mode="stacked", group=k,
                                  queue_wait_s=req.queue_wait_s)
-        admit_fn = _jitted_admit_group(self.cfg, self.engine_cfg.cache_len, k)
+        admit_fn = _jitted_admit_group(self.cfg, self.engine_cfg.cache_len, k,
+                                       self.mesh)
         t0 = time.perf_counter()
         with self.obs.tracer.span("prefill_stacked", lanes=slots.tolist(),
                                   k=k, tokens=padded_len) as sp:
@@ -624,7 +658,8 @@ class ServingEngine:
             self.obs.events.emit("admitted", req.req_id, slot=slot,
                                  mode="stacked", group=k,
                                  queue_wait_s=req.queue_wait_s)
-        admit_fn = _jitted_admit_paged_group(self.cfg, single_len, k)
+        admit_fn = _jitted_admit_paged_group(self.cfg, single_len, k,
+                                             self.mesh)
         t0 = time.perf_counter()
         with self.obs.tracer.span("prefill_stacked", lanes=lanes.tolist(),
                                   k=k, tokens=padded_len) as sp:
@@ -796,7 +831,7 @@ class ServingEngine:
         mgr.admit(slot, self._reserve_tokens(req) if self._has_paged_kinds else 0)
         page_ids = mgr.alloc(slot, n_pages) if n_pages else []
         mgr.set_length(slot, req.prompt_len)
-        admit_fn = _jitted_admit_paged(self.cfg, single_len)
+        admit_fn = _jitted_admit_paged(self.cfg, single_len, self.mesh)
         return admit_fn(
             self.store.cache, self.params, tokens,
             np.asarray([req.prompt_len], np.int32), jnp.int32(slot),
@@ -843,7 +878,11 @@ class ServingEngine:
     def _begin_chunked(self, req: Request, slot: int,
                        finished: list[Request]) -> None:
         mgr = self.store.manager
-        mgr.admit(slot, self._reserve_tokens(req))
+        # pure-recurrent chunked stacks keep all state per-lane: reserve no
+        # pages (mirrors _paged_admit), or the pool gate would veto chunked
+        # admissions that touch no pool rows at all
+        mgr.admit(slot, self._reserve_tokens(req)
+                  if self._has_paged_kinds else 0)
         self.obs.events.emit("admitted", req.req_id, slot=slot,
                              mode="chunked", queue_wait_s=req.queue_wait_s)
         self.scheduler.begin_chunked(slot)
@@ -892,7 +931,8 @@ class ServingEngine:
             move = mgr.ensure_writable(slot, start)
             if move is not None:
                 self._cow(slot, move)
-        mgr.ensure(slot, start + c)  # the padded tail also lands in pages
+        if self._has_paged_kinds:
+            mgr.ensure(slot, start + c)  # the padded tail lands in pages
         self.store.sync_tables()
         tokens = np.zeros((1, c), np.int32)
         tokens[0, :n] = req.prompt[start:start + n]
@@ -951,6 +991,7 @@ class ServingEngine:
         self._step_idx += 1
         self.metrics.inc("steps")
         finished: list[Request] = []
+        self._shed_late(finished)
         budget = self.engine_cfg.max_prefills_per_step
 
         t0 = time.perf_counter()
@@ -1179,6 +1220,30 @@ class ServingEngine:
             self._tokens[slot] = req.output_tokens[-1]
             if self._should_evict(req):
                 self._evict(slot, finished)
+
+    def _shed_late(self, finished: list[Request]) -> None:
+        """Deadline admission pre-pass: a request whose deadline already
+        passed while it sat in the queue can only produce dead tokens, so
+        shed it at ingress — before it burns a prefill dispatch and a lane
+        another request could use.  Only policies exposing ``shed`` (e.g.
+        ``DeadlineAdmission``) trigger this; FIFO et al. cost nothing."""
+        shed = getattr(self.policies.admission, "shed", None)
+        if shed is None or not self.scheduler.waiting:
+            return
+        now = time.perf_counter()
+        idxs = shed(self.scheduler.waiting, now)
+        if not idxs:
+            return
+        for req in self.scheduler.drop(idxs):
+            req.finish_reason_override = "deadline"
+            self._plan_cache.pop(req.req_id, None)
+            self.metrics.inc("deadline_shed")
+            self.metrics.record_finished(req)
+            self.obs.events.emit(
+                "rejected", req.req_id, reason="deadline",
+                waited_s=now - req.submit_time,
+                deadline_s=req.deadline_s)
+            finished.append(req)
 
     def _should_evict(self, req: Request) -> bool:
         return self.policies.eviction.should_evict(req)

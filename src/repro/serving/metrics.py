@@ -49,6 +49,9 @@ _COUNTERS = (
     # request's contribution)
     "deadline_hits", "deadline_misses", "deadline_late_admissions",
     "goodput_tokens",
+    # requests dropped at ingress by DeadlineAdmission (already late in
+    # queue; they finish with reason="deadline" without holding a lane)
+    "deadline_shed",
 )
 # float time accumulators (counters that add seconds)
 _TIMERS = ("prefill_s", "decode_s")
@@ -249,6 +252,7 @@ class EngineMetrics:
             "accept_len_p99": self._pct("accept_len", 99, 2),
             "deadline_hits": self.deadline_hits,
             "deadline_misses": self.deadline_misses,
+            "deadline_shed": self.deadline_shed,
             "deadline_hit_rate": round(
                 self.deadline_hits / (self.deadline_hits
                                       + self.deadline_misses), 4)

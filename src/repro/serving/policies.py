@@ -13,6 +13,9 @@ policy class:
   request per dispatch (exactly the old behaviour).
   ``BucketBatchedAdmission`` stacks same-bucket prompts into ONE batched
   prefill dispatch, amortizing admission cost under bursty arrivals.
+  ``DeadlineAdmission`` additionally *sheds* requests whose deadline
+  already expired in queue (``rejected(reason="deadline")``), so doomed
+  work never occupies a lane.
 * ``EvictionPolicy`` — when a running request leaves its lane.  The
   default ``BudgetOrEOSEviction`` evicts on length budget or EOS
   (``Request.done``).
@@ -139,6 +142,41 @@ class BucketBatchedAdmission:
             if bucket_of(waiting[i]) == head_bucket and admit_ok(waiting[i]):
                 group.append(i)
         return group
+
+
+class DeadlineAdmission:
+    """FIFO admission that sheds already-late requests at ingress.
+
+    A request whose deadline expired while it sat in the queue cannot
+    count toward goodput no matter how it is served — admitting it burns
+    a prefill dispatch and a lane that an on-time request could have used
+    (the ``late_at_admission`` pathology the SLO metrics record).  The
+    engine calls ``shed`` once per step *before* admission; dropped
+    requests finish immediately with reason ``"deadline"`` and a
+    ``rejected`` event, and everything still inside its deadline admits
+    in plain FIFO order.  No-deadline requests are never shed.
+
+    ``slack_s`` optionally sheds requests that are not yet late but are
+    guaranteed to be (e.g. known prefill floor); the default 0.0 sheds
+    only requests already past their deadline, which keeps the policy
+    strictly work-conserving.
+    """
+
+    def __init__(self, slack_s: float = 0.0):
+        if slack_s < 0.0:
+            raise ValueError("slack_s must be >= 0")
+        self.slack_s = slack_s
+
+    def next_group(self, waiting, max_group, admit_ok, bucket_of):
+        if waiting and admit_ok(waiting[0]):
+            return [0]
+        return []
+
+    def shed(self, waiting, now: float) -> list[int]:
+        """Indices of waiting requests already past their deadline."""
+        return [i for i, r in enumerate(waiting)
+                if r.deadline_s is not None
+                and now - r.submit_time > r.deadline_s - self.slack_s]
 
 
 class PrefixAwareAdmission:

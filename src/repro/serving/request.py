@@ -96,6 +96,9 @@ class Request:
     # stamped by the scheduler when the deadline already expired in queue
     # (the request was doomed before it ever held a slot)
     late_at_admission: bool = False
+    # engine-stamped terminal reason that overrides the eos/length
+    # inference (e.g. "deadline" for requests shed at ingress)
+    finish_reason_override: Optional[str] = None
 
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
@@ -174,10 +177,12 @@ class Request:
 
     @property
     def finish_reason(self) -> Optional[str]:
-        """Why generation stopped: ``"eos"`` or ``"length"`` (None while
-        still in flight)."""
+        """Why generation stopped: ``"eos"``, ``"length"`` or an engine
+        override like ``"deadline"`` (None while still in flight)."""
         if self.state is not RequestState.FINISHED:
             return None
+        if self.finish_reason_override is not None:
+            return self.finish_reason_override
         if (self.eos_token is not None and self.output_tokens
                 and self.output_tokens[-1] == self.eos_token):
             return "eos"

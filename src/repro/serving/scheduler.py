@@ -112,6 +112,18 @@ class Scheduler:
             admitted.extend(group)
         return admitted
 
+    def drop(self, idxs: list[int]) -> list[Request]:
+        """Remove waiting requests by index (deadline shedding): they
+        finish without ever holding a slot.  Returns the dropped requests
+        in queue order; the engine stamps reason/metrics/events."""
+        idxs = sorted(set(idxs))
+        dropped = [self.waiting[i] for i in idxs]
+        for i in reversed(idxs):
+            del self.waiting[i]
+        for req in dropped:
+            req.state = RequestState.FINISHED
+        return dropped
+
     def begin_chunked(self, slot: int) -> Request:
         """Move a just-admitted request into the chunked-prefill state."""
         req = self.running.pop(slot)

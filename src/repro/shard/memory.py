@@ -1,0 +1,58 @@
+"""Per-device footprint math for sharded trees.
+
+Analytic, not measured: given abstract shapes (``jax.eval_shape``) and
+their PartitionSpecs, compute what one device holds.  This is how the
+acceptance test checks a ``mistral_large_123b``-scale config fits a tp=4
+mesh (per-device params + KV < unsharded/2) without allocating 123B
+params, and how the serve CLI prints the mesh memory plan.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def _axis_product(mesh, entry) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        size *= mesh.shape.get(n, 1)
+    return size
+
+
+def shard_denominator(spec, shape, mesh) -> int:
+    """How many ways this leaf is split across the mesh (1 = replicated)."""
+    denom = 1
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            continue
+        size = _axis_product(mesh, entry)
+        if size > 1 and shape[i] % size == 0:
+            denom *= size
+    return denom
+
+
+def leaf_device_bytes(leaf, spec, mesh) -> int:
+    total = math.prod(leaf.shape) * jax.numpy.dtype(leaf.dtype).itemsize
+    return total // shard_denominator(spec, leaf.shape, mesh)
+
+
+def tree_device_bytes(shapes_tree, specs_tree, mesh) -> int:
+    """Bytes ONE device holds for the tree under the given specs."""
+    leaves = jax.tree_util.tree_leaves(shapes_tree)
+    specs = jax.tree_util.tree_leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    if len(leaves) != len(specs):
+        raise ValueError(f"shape/spec trees disagree: {len(leaves)} leaves "
+                         f"vs {len(specs)} specs")
+    return sum(leaf_device_bytes(l, s, mesh) for l, s in zip(leaves, specs))
+
+
+def describe_mesh(mesh) -> str:
+    if mesh is None:
+        return "unsharded (no mesh)"
+    shape = dict(mesh.shape)
+    return (f"mesh {shape} over {mesh.size} device(s): "
+            + ", ".join(f"{a}={n}" for a, n in shape.items()))

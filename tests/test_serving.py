@@ -444,3 +444,153 @@ def test_int8_kv_cache_close_to_bf16():
     np.testing.assert_allclose(outs["int8"], ref, atol=0.08 * scale)
     # argmax (greedy token) should agree for nearly all positions
     assert (outs["int8"].argmax(-1) == ref.argmax(-1)).mean() >= 0.95
+
+
+# -- chunked prefill for recurrent stacks (repro/paging/prefill.py) ---------
+
+def _zero_cell_state(kind, cfg, p, b=1):
+    d, hh = cfg.d_model, cfg.n_heads
+    dh = d // hh
+    f32 = jnp.float32
+    if kind == "rglru":
+        lru = p["conv_w"].shape[-1]
+        return {"h": jnp.zeros((b, lru), f32),
+                "conv": jnp.zeros((b, cfg.conv_width - 1, lru), f32)}
+    if kind == "mlstm":
+        return {"C": jnp.zeros((b, hh, dh, dh), f32),
+                "n": jnp.zeros((b, hh, dh), f32)}
+    return {"c": jnp.zeros((b, hh, dh), f32),
+            "n": jnp.zeros((b, hh, dh), f32),
+            "h": jnp.zeros((b, hh, dh), f32)}
+
+
+@pytest.mark.parametrize("kind,arch", [
+    ("rglru", "recurrentgemma-9b"),
+    ("mlstm", "xlstm-125m"),
+    ("slstm", "xlstm-125m"),
+])
+def test_recurrent_chunk_cells_match_block(kind, arch):
+    """Unit contract for the state-carrying chunk cells: running a sequence
+    through ``*_chunk`` in pieces (with a ragged, padded final chunk)
+    matches the one-shot ``*_block`` on the valid prefix.  sLSTM is
+    bitwise (identical sequential op order under the carry freeze);
+    RG-LRU / mLSTM regroup their scans at chunk boundaries -> allclose."""
+    from repro.models import recurrent as rec
+
+    cfg = reduced(get_config(arch)).with_(remat=False)
+    init = {"rglru": rec.init_rglru, "mlstm": rec.init_mlstm,
+            "slstm": rec.init_slstm}[kind]
+    block = {"rglru": rec.rglru_block, "mlstm": rec.mlstm_block,
+             "slstm": rec.slstm_block}[kind]
+    chunk = {"rglru": rec.rglru_chunk, "mlstm": rec.mlstm_chunk,
+             "slstm": rec.slstm_chunk}[kind]
+    p = init(jax.random.PRNGKey(0), cfg)
+    s_valid, c_len = 21, 8  # 3 chunks, last one ragged (5 valid + 3 pad)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, s_valid, cfg.d_model),
+                          jnp.bfloat16)
+    ref, _ = block(x, p, cfg, None)
+
+    state = _zero_cell_state(kind, cfg, p)
+    outs = []
+    for start in range(0, s_valid, c_len):
+        n_valid = min(c_len, s_valid - start)
+        xc = jnp.zeros((1, c_len, cfg.d_model), x.dtype)
+        xc = xc.at[:, :n_valid].set(x[:, start:start + n_valid])
+        o, state = chunk(xc, p, cfg, state, jnp.int32(n_valid))
+        outs.append(np.asarray(o[:, :n_valid], np.float32))
+    got = np.concatenate(outs, axis=1)
+    ref = np.asarray(ref, np.float32)
+    scale = max(np.abs(ref).max(), 1e-6)
+    np.testing.assert_allclose(got, ref, atol=2e-2 * scale, rtol=0)
+
+
+def test_engine_chunked_xlstm_matches_unchunked():
+    """Satellite acceptance: an xLSTM stack admits long prompts in chunks
+    (state carried across chunk boundaries, ragged lengths, lane reuse
+    zeroing a freed lane's stale cell state) and produces the same greedy
+    tokens as one-shot exact-length admission."""
+    cfg = reduced(get_config("xlstm-125m")).with_(remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # lengths straddle chunk multiples; > n_slots requests force lane reuse
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (13, 21, 8, 17)]
+    outs = {}
+    for chunk in (None, 8):
+        engine = ServingEngine(params=params, cfg=cfg, engine_cfg=EngineConfig(
+            n_slots=2, cache_len=48, cache_mode="paged", page_size=8,
+            prefill_chunk=chunk))
+        metrics = engine.run([(i, p, 6) for i, p in enumerate(prompts)])
+        outs[chunk] = [r.output_tokens
+                       for r in sorted(metrics.finished,
+                                       key=lambda r: r.req_id)]
+        if chunk:
+            assert metrics.chunk_steps >= 6  # 13->2, 21->3, 8->1, 17->3
+    assert outs[None] == outs[8], "chunked xLSTM diverged from one-shot"
+
+
+def test_chunked_prefill_gate_tiers():
+    """``chunkable_with_state`` admits pure-recurrent stacks to chunked
+    prefill while the bitwise ``chunkable`` contract still excludes them
+    (prefix cache / spec); local_attn ring buffers stay unchunkable."""
+    from repro.paging import chunkable, chunkable_with_state
+
+    xl = reduced(get_config("xlstm-125m")).with_(remat=False)
+    assert not chunkable(xl) and chunkable_with_state(xl)
+    rg = reduced(get_config("recurrentgemma-9b")).with_(remat=False)
+    assert not chunkable_with_state(rg)  # local_attn in the pattern
+    with pytest.raises(ValueError, match="chunk"):
+        ServingEngine(rg, init_params(rg, jax.random.PRNGKey(0)),
+                      EngineConfig(cache_mode="paged", page_size=8,
+                                   prefill_chunk=8))
+
+
+# -- DeadlineAdmission (ingress shedding) -----------------------------------
+
+def test_deadline_admission_sheds_late():
+    """Requests already past their deadline in the queue are shed at
+    ingress: reason="deadline", a deadline_shed count, and the ordinary
+    finish accounting (miss + zero goodput) — without ever holding a lane."""
+    from repro.serving.policies import DeadlineAdmission, EnginePolicies
+
+    cfg = reduced(get_config("llama3.2-1b")).with_(remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        cfg, params, EngineConfig(n_slots=1, cache_len=32),
+        policies=EnginePolicies(admission=DeadlineAdmission()))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 8).tolist()
+    # 1 lane, 3 requests, an impossible deadline: everything queued goes
+    # stale immediately and must be shed rather than decoded late
+    sp = SamplingParams(deadline_s=1e-6)
+    metrics = engine.run([(0, prompt, 6, sp) for _ in range(3)])
+    rep = metrics.report()
+    assert rep["deadline_shed"] >= 2
+    assert rep["requests"] == 3
+    shed = [r for r in metrics.finished if r.finish_reason == "deadline"]
+    assert len(shed) >= 2 and all(not r.output_tokens for r in shed)
+    # shed requests are misses with zero goodput contribution
+    assert rep["deadline_misses"] >= len(shed)
+    # a generous deadline sheds nothing and finishes normally
+    engine2 = ServingEngine(
+        cfg, params, EngineConfig(n_slots=1, cache_len=32),
+        policies=EnginePolicies(admission=DeadlineAdmission()))
+    m2 = engine2.run([(0, prompt, 6, SamplingParams(deadline_s=300.0))
+                      for _ in range(2)])
+    assert m2.report()["deadline_shed"] == 0
+    assert all(len(r.output_tokens) == 6 for r in m2.finished)
+
+
+def test_deadline_admission_slack_and_validation():
+    from repro.serving.policies import DeadlineAdmission
+
+    with pytest.raises(ValueError):
+        DeadlineAdmission(slack_s=-1.0)
+    pol = DeadlineAdmission(slack_s=0.5)
+    now = 100.0
+    mk = lambda submit, dl: Request(req_id=0, prompt=[1], max_new_tokens=1,
+                                    submit_time=submit, deadline_s=dl)
+    # 0.4s left > would finish inside slack? shed when remaining < slack
+    assert pol.shed([mk(99.0, 1.2)], now) == [0]   # 0.2s left < 0.5 slack
+    assert pol.shed([mk(99.0, 2.0)], now) == []    # 1.0s left
+    assert pol.shed([mk(99.0, None)], now) == []   # no deadline: never shed
