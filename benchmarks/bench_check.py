@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import statistics
 import sys
@@ -57,20 +58,29 @@ GATED_METRICS_LOWER = (
 
 def check_metric(path: pathlib.Path, runs: list, metric: str,
                  threshold: float, min_priors: int,
-                 lower_is_better: bool = False) -> bool:
-    """Gate one headline metric's trajectory.  True = pass."""
+                 lower_is_better: bool = False) -> dict | None:
+    """Gate one headline metric's trajectory.
+
+    Returns a verdict row (``{"file", "metric", "value", "baseline",
+    "bound", "verdict"}``) for the summary table, or None when no run in
+    this trajectory carries the metric.  ``verdict`` is one of ``pass``,
+    ``FAIL`` or ``building`` (too few comparable priors to gate).
+    """
     series = [r for r in runs if r.get(metric) is not None]
     if not series:
-        return True
+        return None
     newest = series[-1]
     value = newest[metric]
+    row = {"file": path.name, "metric": metric, "value": value,
+           "baseline": None, "bound": None}
     priors = [r[metric] for r in series[:-1]
               if r.get("platform") == newest.get("platform")]
     if len(priors) < min_priors:
         print(f"[bench_check] {path.name}: {metric}={value:.3f}, only "
               f"{len(priors)} comparable prior run(s) (< {min_priors}) "
               f"-- pass (building trajectory)")
-        return True
+        row["verdict"] = "building"
+        return row
     baseline = statistics.median(priors)
     if lower_is_better:
         bound = baseline * (1.0 + threshold)
@@ -84,32 +94,70 @@ def check_metric(path: pathlib.Path, runs: list, metric: str,
     print(f"[bench_check] {path.name}: {metric}={value:.3f} vs trailing "
           f"median {baseline:.3f} over {len(priors)} runs "
           f"({edge} {bound:.3f}) -- {verdict}")
-    return ok
+    row.update(baseline=baseline, bound=f"{edge} {bound:.3f}",
+               verdict=verdict)
+    return row
 
 
-def check_file(path: pathlib.Path, threshold: float, min_priors: int) -> bool:
+def check_file(path: pathlib.Path, threshold: float,
+               min_priors: int) -> list[dict]:
+    """All verdict rows for one trajectory file (empty = nothing to gate)."""
     # a missing or zero-byte trajectory is a fresh start, not a failure —
     # CI on a new branch has nothing to gate against; only a file that
     # EXISTS with content but cannot parse is treated as corruption
     if not path.exists() or path.stat().st_size == 0:
         print(f"[bench_check] {path.name}: missing or empty -- skipped "
               f"(fresh trajectory)")
-        return True
+        return []
     try:
         doc = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
         print(f"[bench_check] {path.name}: unreadable ({e}) -- FAIL")
-        return False
+        return [{"file": path.name, "metric": "(parse)", "value": None,
+                 "baseline": None, "bound": None, "verdict": "FAIL"}]
     runs = doc.get("runs") or []
     if not runs:
         print(f"[bench_check] {path.name}: no runs -- skipped")
-        return True
-    results = [check_metric(path, runs, m, threshold, min_priors)
-               for m in GATED_METRICS]
-    results += [check_metric(path, runs, m, threshold, min_priors,
-                             lower_is_better=True)
-                for m in GATED_METRICS_LOWER]
-    return all(results)
+        return []
+    rows = [check_metric(path, runs, m, threshold, min_priors)
+            for m in GATED_METRICS]
+    rows += [check_metric(path, runs, m, threshold, min_priors,
+                          lower_is_better=True)
+             for m in GATED_METRICS_LOWER]
+    return [r for r in rows if r is not None]
+
+
+def _fmt(x) -> str:
+    return "—" if x is None else (f"{x:.3f}" if isinstance(x, float) else str(x))
+
+
+def summary_table(rows: list[dict]) -> str:
+    """The verdict table as GitHub-flavoured markdown (for
+    ``$GITHUB_STEP_SUMMARY``)."""
+    lines = ["## Benchmark regression gate", "",
+             "| file | metric | value | trailing median | gate | verdict |",
+             "| --- | --- | --- | --- | --- | --- |"]
+    for r in rows:
+        mark = {"pass": "✅ pass", "FAIL": "❌ FAIL",
+                "building": "🏗️ building"}.get(r["verdict"], r["verdict"])
+        lines.append(f"| {r['file']} | `{r['metric']}` | {_fmt(r['value'])} "
+                     f"| {_fmt(r['baseline'])} | {_fmt(r['bound'])} "
+                     f"| {mark} |")
+    if not rows:
+        lines.append("| — | — | — | — | — | nothing to gate |")
+    return "\n".join(lines) + "\n"
+
+
+def write_step_summary(rows: list[dict]) -> None:
+    """Append the verdict table to GitHub Actions' job summary, if any."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    try:
+        with open(path, "a") as f:
+            f.write(summary_table(rows) + "\n")
+    except OSError as e:  # a broken summary file must not flip the gate
+        print(f"[bench_check] could not write GITHUB_STEP_SUMMARY: {e}")
 
 
 def main() -> int:
@@ -132,9 +180,12 @@ def main() -> int:
              else sorted(here.glob("BENCH_serve*.json")))
     if not files:
         print("[bench_check] no trajectory files found -- nothing to gate")
+        write_step_summary([])
         return 0
-    ok = all([check_file(f, args.threshold, args.min_priors) for f in files])
-    return 0 if ok else 1
+    rows = [r for f in files
+            for r in check_file(f, args.threshold, args.min_priors)]
+    write_step_summary(rows)
+    return 0 if all(r["verdict"] != "FAIL" for r in rows) else 1
 
 
 if __name__ == "__main__":

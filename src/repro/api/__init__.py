@@ -79,6 +79,7 @@ from repro.serving.policies import (
     AdmissionPolicy,
     BucketBatchedAdmission,
     BudgetOrEOSEviction,
+    DeadlinePreemption,
     DeadlineAdmission,
     DefragPolicy,
     EnginePolicies,
@@ -99,6 +100,7 @@ __all__ = [
     "AdmissionPolicy",
     "BucketBatchedAdmission",
     "BudgetOrEOSEviction",
+    "DeadlinePreemption",
     "DeadlineAdmission",
     "DefragPolicy",
     "EnginePolicies",

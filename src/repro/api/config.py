@@ -40,6 +40,7 @@ from repro.serving.policies import (
     BucketBatchedAdmission,
     BudgetOrEOSEviction,
     DeadlineAdmission,
+    DeadlinePreemption,
     EnginePolicies,
     FIFOAdmission,
     NeverDefrag,
@@ -189,6 +190,11 @@ class SchedulerConfig:
     # "deadline" (FIFO that SHEDS already-late requests at ingress —
     # the SLO-aware half of PR 8's late_admissions accounting)
     admission: str = "fifo"
+    # eviction policy: "budget" (token budget / EOS — the default) |
+    # "deadline-preempt" (budget/EOS plus SLO preemption: lanes whose
+    # request already missed its deadline yield to queued requests that
+    # can still hit theirs; forces per-step token syncs)
+    eviction: str = "budget"
     # paged mode: compact the pool when fragmentation (1 - used/span)
     # crosses this threshold; None disables auto-defrag
     defrag_threshold: Optional[float] = 0.5
@@ -203,6 +209,9 @@ class SchedulerConfig:
             raise ValueError("SchedulerConfig.admission must be 'fifo', "
                              f"'priority', 'prefix-aware' or 'deadline', got "
                              f"{self.admission!r}")
+        if self.eviction not in ("budget", "deadline-preempt"):
+            raise ValueError("SchedulerConfig.eviction must be 'budget' or "
+                             f"'deadline-preempt', got {self.eviction!r}")
         if self.admission != "fifo" and self.batched_admission:
             raise ValueError("batched_admission stacks FIFO bucket-mates; "
                              "combine it with admission='fifo'")
@@ -391,9 +400,12 @@ class RuntimeConfig:
             admission = BucketBatchedAdmission()
         else:
             admission = FIFOAdmission()
+        eviction = (DeadlinePreemption()
+                    if self.scheduler.eviction == "deadline-preempt"
+                    else BudgetOrEOSEviction())
         return EnginePolicies(
             admission=admission,
-            eviction=BudgetOrEOSEviction(),
+            eviction=eviction,
             defrag=(ThresholdDefrag(self.scheduler.defrag_threshold)
                     if self.scheduler.defrag_threshold is not None
                     else NeverDefrag()),

@@ -84,6 +84,12 @@ class LLM:
         # (spans/events accumulate across them, like metrics), and
         # ``llm.obs.save()`` writes the configured trace/event sinks
         self.obs = self.runtime.obs.build()
+        if self.obs.recorder is not None:
+            # flight recorder armed: stamp everything replay needs to
+            # rebuild this model (repro/obs/recorder.py bundle manifest)
+            self.obs.recorder.set_run_info(
+                arch=arch, runtime=self.runtime, seed=seed,
+                checkpoint_dir=checkpoint_dir)
         self._engine: Optional[ServingEngine] = None
         # live telemetry frontend: a stdlib HTTP server polling the engine's
         # registry (plus the numerics watchdog's, when armed) on each
@@ -94,7 +100,8 @@ class LLM:
 
             self.metrics_server = MetricsServer(
                 self._collect_metrics,
-                port=self.runtime.obs.metrics_port).start()
+                port=self.runtime.obs.metrics_port,
+                events=lambda: self.obs.events).start()
 
     def _collect_metrics(self):
         """Scrape-time collector: registries + cheap derived gauges.
@@ -127,6 +134,21 @@ class LLM:
             self.metrics_server.close()
             self.metrics_server = None
         self.obs.close()
+
+    @staticmethod
+    def replay(bundle_path: str, runtime_transform=None,
+               max_steps: int = 100_000):
+        """Replay a flight-recorder bundle (``ObsConfig.record_path`` /
+        ``serve --record DIR``): rebuild the recorded engine, re-feed the
+        recorded arrivals on their step schedule, and compare token
+        streams + decision journal bitwise.  Returns a
+        ``repro.obs.replay.ReplayResult``; ``runtime_transform`` perturbs
+        the rebuilt ``RuntimeConfig`` on purpose so the divergence differ
+        can name the first decision that changes."""
+        from repro.obs.replay import replay_bundle
+
+        return replay_bundle(bundle_path, runtime_transform=runtime_transform,
+                             max_steps=max_steps)
 
     # -- engine lifecycle --------------------------------------------------
     def _ensure_engine(self, prompt_len: int, gen_tokens: int) -> ServingEngine:

@@ -197,6 +197,10 @@ def _engine_main(llm: LLM, args) -> None:
     for path in llm.obs.save():
         print(f"[obs] wrote {path}")
     llm.close()
+    if llm.obs.recorder is not None:
+        print(f"[obs] flight recorder: bundle at {llm.obs.recorder.path} "
+              f"(replay with `python -m repro.launch.replay "
+              f"{llm.obs.recorder.path}`)")
 
 
 def _obs_from_args(args) -> ObsConfig:
@@ -210,6 +214,7 @@ def _obs_from_args(args) -> ObsConfig:
         metrics_port=args.metrics_port,
         events_max_mb=args.events_max_mb,
         watchdog=args.watchdog,
+        record_path=args.record,
     )
 
 
@@ -235,6 +240,7 @@ def _runtime_from_args(args) -> RuntimeConfig:
             prefill_chunk=args.prefill_chunk,
             batched_admission=args.batched_admission,
             admission=args.admission,
+            eviction=args.eviction,
             defrag_threshold=(None if args.defrag_threshold < 0
                               else args.defrag_threshold),
         ),
@@ -282,6 +288,12 @@ def main():
                          "prefix-aware = requests sharing a hot cached "
                          "prefix admit back-to-back; deadline = FIFO that "
                          "also sheds already-late requests at ingress)")
+    ap.add_argument("--eviction", default="budget",
+                    choices=["budget", "deadline-preempt"],
+                    help="engine: eviction policy (deadline-preempt = "
+                         "budget/EOS plus SLO preemption of lanes whose "
+                         "request already missed its deadline while queued "
+                         "work can still hit)")
     ap.add_argument("--spec", type=int, default=0, metavar="K",
                     help="engine: speculative decoding with K drafted tokens "
                          "per verify dispatch (0 = off; greedy lanes only)")
@@ -350,6 +362,11 @@ def main():
                          "(0 = ephemeral; URL printed at startup)")
     ap.add_argument("--events-max-mb", type=float, default=64.0,
                     help="obs: rotate the --events JSONL stream past this size")
+    ap.add_argument("--record", default=None, metavar="DIR",
+                    help="obs: arm the flight recorder — capture the run "
+                         "(config fingerprint, arrivals, decision journal, "
+                         "outputs, decision-clock tape) into DIR; replay "
+                         "with `python -m repro.launch.replay DIR`")
     ap.add_argument("--watchdog", action="store_true",
                     help="obs: numerics watchdog — per-layer saturation/"
                          "clip counters and amax/quant-error histograms "

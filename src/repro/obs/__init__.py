@@ -24,6 +24,13 @@ layer instead of a bag of mean-only counters:
   over ``MetricsRegistry`` (histograms as native ``_bucket/_sum/_count``
   series), a grammar validator, and the stdlib ``MetricsServer`` serving
   ``/metrics`` + ``/healthz`` + ``/snapshot`` from a daemon thread.
+* ``recorder`` / ``replay`` — the flight recorder: arm with
+  ``ObsConfig(record_path=DIR)`` to capture a run (config fingerprint,
+  arrival schedule, decision journal, token outputs, decision-clock
+  tape) into a bundle that ``replay_bundle``/``LLM.replay``/``python -m
+  repro.launch.replay`` reproduces bitwise offline, diffing any
+  divergence to the first bad decision.  (``repro.obs.replay`` imports
+  the api layer, so it is imported lazily, not re-exported here.)
 * ``watchdog`` — the numerics watchdog: per-layer saturation / amax /
   quant-error / accumulator-headroom stats from every quantized GEMM,
   staged in-jit through ``jax.debug.callback`` (off: zero overhead; on:
@@ -41,6 +48,7 @@ from repro.obs.events import NULL_EVENTS, EventLog, NullEventLog
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                labeled, split_labels)
 from repro.obs.profile import NULL_PROFILER, NullStepProfiler, StepProfiler
+from repro.obs.recorder import FlightRecorder
 from repro.obs.server import (MetricsServer, render_exposition,
                               validate_exposition)
 from repro.obs.trace import NULL_TRACER, NullTracer, Span, Tracer
@@ -49,6 +57,7 @@ __all__ = [
     "Counter",
     "DISABLED",
     "EventLog",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "MetricsRegistry",

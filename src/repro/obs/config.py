@@ -53,6 +53,11 @@ class ObsConfig:
     # numerics watchdog: per-layer saturation/amax/quant-error stats from
     # every quantized GEMM (threaded onto ModelConfig so jits re-key)
     watchdog: bool = False
+    # flight recorder: write a replayable bundle (manifest + arrivals +
+    # decision journal + outputs + decision-clock tape) into this
+    # directory; replay with `python -m repro.launch.replay DIR`.
+    # Arming it forces events on — the journal IS the event stream.
+    record_path: Optional[str] = None
 
     def __post_init__(self):
         if self.profile_steps < 1:
@@ -68,13 +73,24 @@ class ObsConfig:
         if self.enabled is not None:
             return self.enabled
         return bool(self.trace or self.events or self.fence_spans
-                    or self.debug_invariants)
+                    or self.debug_invariants or self.record_path)
 
     def build(self) -> "Observability":
         """The live bundle this config describes (null sinks when off)."""
         on = self.resolved_enabled
+        recorder = None
+        if self.record_path is not None:
+            from repro.obs.recorder import FlightRecorder
+
+            recorder = FlightRecorder(self.record_path)
         if not on:
             events = NULL_EVENTS
+        elif recorder is not None:
+            # the recorder owns the stream: the decision journal is the
+            # event log, written straight into the bundle (an --events
+            # sink, if also set, gets the in-memory window via save())
+            events = EventLog(stream_path=recorder.journal_path,
+                              max_bytes=int(self.events_max_mb * 2 ** 20))
         elif self.events:
             # a file sink streams incrementally with bounded memory
             events = EventLog(stream_path=self.events,
@@ -89,6 +105,7 @@ class ObsConfig:
             debug_invariants=self.debug_invariants,
             enabled=on,
             config=self,
+            recorder=recorder,
         )
 
 
@@ -108,6 +125,9 @@ class Observability:
     debug_invariants: bool = False
     enabled: bool = False
     config: Optional[ObsConfig] = None
+    # armed flight recorder (repro.obs.recorder.FlightRecorder) or None;
+    # the engine checks `is not None` on host-side request paths only
+    recorder: object = None
 
     def save(self, trace_path: Optional[str] = None,
              events_path: Optional[str] = None) -> list[str]:
@@ -126,6 +146,8 @@ class Observability:
     def close(self) -> None:
         self.profiler.close()
         self.events.close()
+        if self.recorder is not None:
+            self.recorder.close()
 
 
 # the shared disabled bundle: stateless null sinks, safe to share between

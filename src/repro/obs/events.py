@@ -3,9 +3,12 @@
 Every scheduling *decision* the engine takes — queued / admitted /
 rejected (with the reason) / chunk fed / promoted / first token / CoW fork
 / prefix hit / defrag / spec fallback / finished — lands here as one
-dict: a monotonic ``seq``, a wall-clock ``t`` (``time.perf_counter``, the
-same clock every ``Request`` timestamp uses), the ``kind``, an optional
-``req_id``, and free-form fields.  ``to_jsonl`` writes one JSON object
+dict: a monotonic ``seq`` (the replay total order — it keeps counting
+across JSONL rotation, so a rotated stream stays contiguous), a
+monotonic-clock ``t`` (``time.perf_counter``, the same clock every
+``Request`` timestamp uses), a wall-clock ``wall`` (``time.time``, for
+correlating with external logs), the ``kind``, an optional ``req_id``,
+and free-form fields.  ``to_jsonl`` writes one JSON object
 per line; ``timeline(req_id)`` reassembles one request's
 queued → admitted → chunks → first-token → finished history, which the
 API surfaces on ``RequestOutput.timeline``.
@@ -52,7 +55,8 @@ class EventLog:
         self.rotations = 0
 
     def emit(self, kind: str, req_id: Optional[int] = None, **fields) -> dict:
-        ev = {"seq": self._seq, "t": time.perf_counter(), "kind": kind}
+        ev = {"seq": self._seq, "t": time.perf_counter(),
+              "wall": time.time(), "kind": kind}
         self._seq += 1
         if req_id is not None:
             ev["req_id"] = int(req_id)
@@ -88,6 +92,13 @@ class EventLog:
             counts[ev["kind"]] = counts.get(ev["kind"], 0) + 1
         return counts
 
+    def tail(self, n: int) -> list[dict]:
+        """The newest ``n`` events from the in-memory window."""
+        if n <= 0:
+            return []
+        evs = list(self.events)
+        return evs[-n:]
+
     # -- export ------------------------------------------------------------
     def to_jsonl(self, path: str) -> str:
         if self._fh is not None and path == self.stream_path:
@@ -122,6 +133,9 @@ class NullEventLog:
 
     def kinds(self) -> dict:
         return {}
+
+    def tail(self, n: int) -> list:
+        return []
 
     def to_jsonl(self, path: str) -> Optional[str]:
         return None

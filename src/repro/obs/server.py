@@ -31,6 +31,7 @@ import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Callable, Iterable, Mapping, Optional, Sequence
+from urllib.parse import parse_qs
 
 from repro.obs.metrics import MetricsRegistry, split_labels
 
@@ -276,11 +277,17 @@ class MetricsServer:
     ``(registries, derived_gauges)`` — typically a closure over the LLM
     that reads whatever engine is currently live.  ``port=0`` binds an
     ephemeral port (read it back from ``.port``).
+
+    ``events`` (optional) returns the live ``EventLog``; when given, the
+    server also answers ``/events?n=N`` with the newest N scheduler
+    decisions from the in-memory window as JSON — a fleet scrape can grab
+    recent decisions without tailing the JSONL sink.
     """
 
     def __init__(self, collect: Collector, port: int = 0,
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", events=None):
         self._collect = collect
+        self._events = events
         self._host = host
         self._requested_port = port
         self._httpd: Optional[ThreadingHTTPServer] = None
@@ -295,6 +302,7 @@ class MetricsServer:
         if self._httpd is not None:
             return self
         collect = self._collect
+        events = self._events
 
         class Handler(BaseHTTPRequestHandler):
             def log_message(self, fmt, *args):  # noqa: N802 - stdlib name
@@ -308,7 +316,7 @@ class MetricsServer:
                 self.wfile.write(body)
 
             def do_GET(self):  # noqa: N802 - stdlib name
-                path = self.path.split("?", 1)[0]
+                path, _, query = self.path.partition("?")
                 try:
                     if path == "/metrics":
                         regs, gauges = collect()
@@ -320,6 +328,22 @@ class MetricsServer:
                         regs, gauges = collect()
                         doc = {"registries": [r.snapshot() for r in regs],
                                "derived": dict(gauges)}
+                        self._send(200, json.dumps(doc).encode(),
+                                   "application/json")
+                    elif path == "/events" and events is not None:
+                        n = 100
+                        qs = parse_qs(query)
+                        if "n" in qs:
+                            try:
+                                n = int(qs["n"][0])
+                            except (ValueError, IndexError):
+                                self._send(400, b"bad n\n",
+                                           "text/plain; charset=utf-8")
+                                return
+                        log = events()
+                        tail = log.tail(n) if log is not None else []
+                        doc = {"events": tail, "returned": len(tail),
+                               "window": len(log) if log is not None else 0}
                         self._send(200, json.dumps(doc).encode(),
                                    "application/json")
                     else:

@@ -237,15 +237,16 @@ class PagedCache:
             self.cache, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32))
         self.sync_tables()
 
-    def defrag(self) -> int:
-        """Compact the pool; returns the number of pages moved."""
+    def defrag(self) -> list:
+        """Compact the pool; returns the ``(src, dst)`` move pairs applied
+        (the flight recorder journals them as the defrag's operands)."""
         moves = self.manager.defrag()
         if moves:
             src = jnp.asarray([s for s, _ in moves], jnp.int32)
             dst = jnp.asarray([d for _, d in moves], jnp.int32)
             self.cache = _move_pages_jit(self.cache, src, dst)
             self.sync_tables()
-        return len(moves)
+        return moves
 
     @property
     def pos(self):

@@ -12,6 +12,7 @@ from repro.serving.policies import (
     AdmissionPolicy,
     BucketBatchedAdmission,
     BudgetOrEOSEviction,
+    DeadlinePreemption,
     DefragPolicy,
     EnginePolicies,
     EvictionPolicy,
@@ -33,6 +34,7 @@ __all__ = [
     "AdmissionPolicy",
     "BucketBatchedAdmission",
     "BudgetOrEOSEviction",
+    "DeadlinePreemption",
     "DefragPolicy",
     "EngineConfig",
     "EngineMetrics",

@@ -342,6 +342,17 @@ class ServingEngine:
                                    admission=self.policies.admission)
         self.metrics = EngineMetrics()
 
+        # flight recorder (repro/obs/recorder.py): None when disarmed;
+        # every hook below guards on that, and all of them sit on
+        # per-request host paths — no device syncs, no jaxpr changes.
+        # Armed, the decision clock tapes its readings so a replay can
+        # script time-dependent decisions (deadline sheds/preemptions).
+        self._recorder = getattr(self.obs, "recorder", None)
+        self.set_clock(self._recorder.wrap_clock()
+                       if self._recorder is not None else time.perf_counter)
+        if self._recorder is not None:
+            self._recorder.record_engine(engine_cfg)
+
         # whole-stack effective kinds (lead + periods + tail) from the one
         # layout-owning helper; a windowless local_attn block caches like
         # full attention (models/kvcache.py), so it pages too
@@ -459,6 +470,22 @@ class ServingEngine:
         self._step_idx = 0
 
     # ------------------------------------------------------------------
+    # Decision clock
+    # ------------------------------------------------------------------
+    def set_clock(self, clock) -> None:
+        """Install the decision clock: every wall-time reading that can
+        change a scheduling decision (submit stamps, admission lateness,
+        deadline shedding/preemption) goes through it.  Recording wraps
+        ``time.perf_counter`` to tape each reading; replay installs a
+        ``ReplayClock`` that scripts the tape back.  Metric timestamps
+        (TTFT, latency, dispatch timers) intentionally stay on real
+        time — they measure the run, they don't steer it."""
+        self._clock = clock
+        self.scheduler.clock = clock
+        if hasattr(self.policies.eviction, "bind"):
+            self.policies.eviction.bind(clock, lambda: self.scheduler.waiting)
+
+    # ------------------------------------------------------------------
     # Admission
     # ------------------------------------------------------------------
     def add_request(self, prompt: Sequence[int], max_new_tokens: int,
@@ -507,7 +534,7 @@ class ServingEngine:
             detokenizer=detokenizer,
             priority=priority,
             deadline_s=deadline_s,
-            submit_time=time.perf_counter(),
+            submit_time=self._clock(),
         )
         self._next_id += 1
         self.scheduler.submit(req)
@@ -516,6 +543,8 @@ class ServingEngine:
                              priority=priority,
                              **({"deadline_s": deadline_s}
                                 if deadline_s is not None else {}))
+        if self._recorder is not None:
+            self._recorder.record_arrival(req, self._step_idx)
         return req
 
     def _bucket_len(self, prompt_len: int) -> int:
@@ -557,14 +586,24 @@ class ServingEngine:
             np.asarray([s.greedy]),
             self._lane_key(req)[None],
         )
-        self.obs.events.emit("admitted", req.req_id, slot=slot, mode="cold",
-                             queue_wait_s=req.queue_wait_s)
+        reserved = None
+        if self.paged:
+            # reserve/alloc BEFORE the admitted event so it journals the
+            # page assignment (the operands a replay diff reports)
+            reserved = self._paged_reserve(req, slot, padded_len)
+            self.obs.events.emit("admitted", req.req_id, slot=slot,
+                                 mode="cold",
+                                 pages=[int(p) for p in reserved[1]],
+                                 queue_wait_s=req.queue_wait_s)
+        else:
+            self.obs.events.emit("admitted", req.req_id, slot=slot,
+                                 mode="cold", queue_wait_s=req.queue_wait_s)
         t0 = time.perf_counter()
         with self.obs.tracer.span("prefill", lane=slot, req=req.req_id,
                                   slot=slot, tokens=padded_len) as sp:
             if self.paged:
                 tok_dev, self.store.cache = self._paged_admit(
-                    req, slot, tokens, padded_len, common)
+                    req, slot, tokens, padded_len, common, reserved=reserved)
                 self._record_miss(req)
                 self._maybe_publish(req, slot)
             else:
@@ -654,9 +693,10 @@ class ServingEngine:
             keys[i] = self._lane_key(req)
             table_rows[i] = mgr.block_tables[slot]
         lanes = np.asarray([slot for _, slot in group], np.int32)
-        for req, slot in group:
+        for i, (req, slot) in enumerate(group):
             self.obs.events.emit("admitted", req.req_id, slot=slot,
                                  mode="stacked", group=k,
+                                 pages=[int(p) for p in page_ids[i]],
                                  queue_wait_s=req.queue_wait_s)
         admit_fn = _jitted_admit_paged_group(self.cfg, single_len, k,
                                              self.mesh)
@@ -824,13 +864,24 @@ class ServingEngine:
             return -(req.req_id + 1)
         return self._bucket_len(req.prompt_len)
 
-    def _paged_admit(self, req: Request, slot: int, tokens, padded_len, common):
+    def _paged_reserve(self, req: Request, slot: int, padded_len: int):
+        """Pool-side bookkeeping for a cold paged admission: reserve the
+        worst case, allocate the prefill's pages, stamp the prompt
+        length.  Returns ``(single_len, page_ids)`` — the page assignment
+        the admitted event journals."""
         mgr = self.store.manager
         single_len = self._single_len(padded_len)
         n_pages = single_len // self.engine_cfg.page_size if self._has_paged_kinds else 0
         mgr.admit(slot, self._reserve_tokens(req) if self._has_paged_kinds else 0)
         page_ids = mgr.alloc(slot, n_pages) if n_pages else []
         mgr.set_length(slot, req.prompt_len)
+        return single_len, page_ids
+
+    def _paged_admit(self, req: Request, slot: int, tokens, padded_len,
+                     common, reserved=None):
+        mgr = self.store.manager
+        single_len, page_ids = (reserved if reserved is not None
+                                else self._paged_reserve(req, slot, padded_len))
         admit_fn = _jitted_admit_paged(self.cfg, single_len, self.mesh)
         return admit_fn(
             self.store.cache, self.params, tokens,
@@ -884,7 +935,10 @@ class ServingEngine:
         mgr.admit(slot, self._reserve_tokens(req)
                   if self._has_paged_kinds else 0)
         self.obs.events.emit("admitted", req.req_id, slot=slot,
-                             mode="chunked", queue_wait_s=req.queue_wait_s)
+                             mode="chunked",
+                             reserved=int(self._reserve_tokens(req))
+                             if self._has_paged_kinds else 0,
+                             queue_wait_s=req.queue_wait_s)
         self.scheduler.begin_chunked(slot)
         req.prefill_done = 0
         self._record_miss(req)
@@ -903,7 +957,9 @@ class ServingEngine:
         self.obs.events.emit("admitted", req.req_id, slot=slot, mode="prefix",
                              cached_tokens=plan.resume,
                              cached_pages=len(plan.pages),
+                             pages=[int(p) for p in plan.pages],
                              fork=plan.fork_index is not None,
+                             fork_index=plan.fork_index,
                              queue_wait_s=req.queue_wait_s)
         if plan.fork_index is not None:
             self._cow(slot, mgr.cow_fork(slot, plan.fork_index))
@@ -1114,12 +1170,13 @@ class ServingEngine:
         if (self.paged and self._has_paged_kinds
                 and self.policies.defrag.should_defrag(self.store.manager)):
             with self.obs.tracer.span("defrag") as sp:
-                moved = self.store.defrag()
-                sp.set(pages_moved=moved)
-            if moved:
+                moves = self.store.defrag()
+                sp.set(pages_moved=len(moves))
+            if moves:
                 self.metrics.inc("defrag_count")
-                self.metrics.inc("defrag_pages_moved", moved)
-                self.obs.events.emit("defrag", pages_moved=moved,
+                self.metrics.inc("defrag_pages_moved", len(moves))
+                self.obs.events.emit("defrag", pages_moved=len(moves),
+                                     moves=[[int(s), int(d)] for s, d in moves],
                                      step=self._step_idx)
         return finished
 
@@ -1199,6 +1256,12 @@ class ServingEngine:
         self.metrics.inc("decode_steps")
         targets = np.asarray(targets)
         accepted = np.asarray(accepted)
+        # journal the verify round's operands before the per-lane accept
+        # loop below emits its own (eviction) events
+        self.obs.events.emit(
+            "spec_verify", lanes=[int(s) for s in slots],
+            n_draft=[int(n_draft[s]) for s in slots],
+            accepted=[int(accepted[s]) for s in slots])
 
         for slot in slots:
             req = running[slot]
@@ -1230,7 +1293,7 @@ class ServingEngine:
         shed = getattr(self.policies.admission, "shed", None)
         if shed is None or not self.scheduler.waiting:
             return
-        now = time.perf_counter()
+        now = self._clock()
         idxs = shed(self.scheduler.waiting, now)
         if not idxs:
             return
@@ -1243,6 +1306,8 @@ class ServingEngine:
                 "rejected", req.req_id, reason="deadline",
                 waited_s=now - req.submit_time,
                 deadline_s=req.deadline_s)
+            if self._recorder is not None:
+                self._recorder.record_finish(req)
             finished.append(req)
 
     def _should_evict(self, req: Request) -> bool:
@@ -1287,8 +1352,19 @@ class ServingEngine:
         if self._drafter is not None:
             self._drafter.release(slot)
         self._greedy[slot] = True  # free lanes sample nothing
-        self.metrics.record_finished(req)
         reason_of = getattr(self.policies.eviction, "evict_reason", None)
+        reason = reason_of(req) if reason_of is not None else req.finish_reason
+        if reason == "deadline" and not req.done:
+            # SLO preemption (DeadlinePreemption): the lane was taken back
+            # from a request that already missed its deadline so queued
+            # on-time work can have it
+            req.finish_reason_override = "deadline"
+            self.metrics.inc("deadline_preempt")
+            self.obs.events.emit(
+                "evicted", req.req_id, slot=slot, reason="deadline",
+                n_tokens=len(req.output_tokens),
+                deadline_s=req.deadline_s)
+        self.metrics.record_finished(req)
         extra = {}
         if req.deadline_s is not None:
             extra["deadline_s"] = req.deadline_s
@@ -1296,8 +1372,10 @@ class ServingEngine:
         self.obs.events.emit(
             "finished", req.req_id, slot=slot,
             n_tokens=len(req.output_tokens),
-            reason=reason_of(req) if reason_of is not None else req.finish_reason,
+            reason=reason,
             latency_s=req.latency_s, **extra)
+        if self._recorder is not None:
+            self._recorder.record_finish(req)
         finished.append(req)
 
     @property

@@ -52,6 +52,9 @@ _COUNTERS = (
     # requests dropped at ingress by DeadlineAdmission (already late in
     # queue; they finish with reason="deadline" without holding a lane)
     "deadline_shed",
+    # running lanes preempted by DeadlinePreemption (deadline already
+    # missed while queued work could still hit its own)
+    "deadline_preempt",
 )
 # float time accumulators (counters that add seconds)
 _TIMERS = ("prefill_s", "decode_s")
@@ -253,6 +256,7 @@ class EngineMetrics:
             "deadline_hits": self.deadline_hits,
             "deadline_misses": self.deadline_misses,
             "deadline_shed": self.deadline_shed,
+            "deadline_preempt": self.deadline_preempt,
             "deadline_hit_rate": round(
                 self.deadline_hits / (self.deadline_hits
                                       + self.deadline_misses), 4)

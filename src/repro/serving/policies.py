@@ -39,6 +39,7 @@ in the same step).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional, Protocol, Sequence, runtime_checkable
 
 from repro.serving.request import Request
@@ -290,6 +291,60 @@ class BudgetOrEOSEviction:
                 and req.output_tokens[-1] == req.eos_token):
             return "eos"
         return "length"
+
+
+class DeadlinePreemption(BudgetOrEOSEviction):
+    """SLO-aware eviction: preempt lanes that already missed their
+    deadline when queued work can still hit its own.
+
+    ``DeadlineAdmission`` sheds late requests at *ingress*; this is the
+    eviction-side half (the carried ROADMAP follow-up).  A running
+    request past its deadline can only produce dead (non-goodput) tokens
+    — but evicting it is only a win when some waiting request could
+    actually use the lane and still make its deadline (no-deadline
+    requests always qualify).  With nothing eligible waiting, the doomed
+    request keeps running: a late answer beats an idle lane.
+
+    Preempted requests finish with reason ``"deadline"``, an
+    ``evicted(reason="deadline")`` journal event, and a
+    ``deadline_preempt`` counter bump.  The deadline check reads the
+    engine's *decision clock* (``bind``), so preemptions are taped by the
+    flight recorder and replay bitwise like every other decision.
+    ``wants_step_sync=True``: the decision is re-evaluated on wall time
+    every step, so pending tokens must reach the host every step.
+    """
+
+    wants_step_sync = True
+
+    def __init__(self):
+        self._clock = time.perf_counter
+        self._waiting = lambda: ()
+
+    def bind(self, clock, waiting) -> None:
+        """Engine hook (``set_clock``): the decision clock and a live view
+        of the waiting queue."""
+        self._clock = clock
+        self._waiting = waiting
+
+    def should_evict(self, req: Request) -> bool:
+        if req.done:
+            return True
+        if req.deadline_s is None:
+            return False
+        now = self._clock()
+        if now - req.submit_time <= req.deadline_s:
+            return False
+        # already missed: preempt iff a waiting request can still hit
+        for w in self._waiting():
+            if (w.deadline_s is None
+                    or now - w.submit_time <= w.deadline_s):
+                return True
+        return False
+
+    def evict_reason(self, req: Request) -> str:
+        if not req.done:
+            return "deadline"
+        return super().evict_reason(req)
 
 
 class NeverDefrag:

@@ -53,6 +53,10 @@ class Scheduler:
         heapq.heapify(self._free)
         self.running: dict[int, Request] = {}
         self.chunking: dict[int, Request] = {}
+        # the decision clock: admission stamps/deadline checks read time
+        # through here so the flight recorder can tape the readings and a
+        # replay can script them back (engine.set_clock swaps it)
+        self.clock: Callable[[], float] = time.perf_counter
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -81,7 +85,7 @@ class Scheduler:
         for i in reversed(idxs):
             del self.waiting[i]
         out = []
-        now = time.perf_counter()
+        now = self.clock()
         for req in reqs:
             slot = heapq.heappop(self._free)
             req.state = RequestState.RUNNING

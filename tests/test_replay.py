@@ -1,0 +1,370 @@
+"""Flight recorder + deterministic replay (``repro.obs.recorder`` /
+``repro.obs.replay``).
+
+The contract under test: a run recorded with ``ObsConfig(record_path=...)``
+replays **bitwise** — every request's greedy token stream and every
+scheduler decision in the journal — from nothing but the bundle, and a
+deliberately perturbed replay is diffed to the *first* divergent
+decision.  Plus the satellites that ride on the same machinery: the
+``DeadlinePreemption`` eviction policy (a time-dependent decision that
+must record + replay through the decision-clock tape), the
+``/events?n=N`` endpoint, event-log ``wall``/``seq`` guarantees across
+rotation, and the zero-overhead-disarmed invariant.
+"""
+
+import dataclasses
+import json
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    LLM,
+    DeadlinePreemption,
+    KVConfig,
+    ObsConfig,
+    RuntimeConfig,
+    SchedulerConfig,
+    SpecConfig,
+)
+from repro.obs.events import EventLog, NullEventLog
+from repro.obs.replay import (
+    ReplayClock,
+    canonical_event,
+    diff_journals,
+    load_bundle,
+    replay_bundle,
+)
+from repro.serving.sampling import SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# event log: wall clock + contiguous seq across rotation (satellite)
+# ---------------------------------------------------------------------------
+
+def test_event_log_emits_wall_and_monotonic_seq(tmp_path):
+    log = EventLog()
+    before = time.time()
+    evs = [log.emit("k", i, x=i) for i in range(5)]
+    after = time.time()
+    assert [e["seq"] for e in evs] == [0, 1, 2, 3, 4]
+    for e in evs:
+        assert before <= e["wall"] <= after
+        assert "t" in e
+    assert NullEventLog().tail(3) == []
+    assert log.tail(2) == evs[-2:]
+    assert log.tail(0) == []
+    assert log.tail(99) == evs
+
+
+def test_event_seq_stays_contiguous_across_rotation(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    log = EventLog(stream_path=path, max_bytes=400)
+    for i in range(40):
+        log.emit("tick", i, payload="x" * 20)
+    log.close()
+    assert log.rotations >= 1
+    lines = []
+    for p in (path + ".1", path):
+        with open(p) as f:
+            lines += [json.loads(l) for l in f]
+    seqs = [e["seq"] for e in lines]
+    # rotation renames the file but never resets or skips the counter:
+    # the surviving stream is a contiguous seq suffix (here: everything)
+    assert seqs == list(range(seqs[0], seqs[0] + len(seqs)))
+    assert all("wall" in e for e in lines)
+
+
+# ---------------------------------------------------------------------------
+# journal differ + replay clock units
+# ---------------------------------------------------------------------------
+
+def test_diff_journals_finds_first_divergence_and_ignores_volatiles():
+    a = [{"seq": 0, "t": 1.0, "wall": 9.0, "kind": "queued", "req_id": 0},
+         {"seq": 1, "t": 2.0, "wall": 9.1, "kind": "admitted", "req_id": 0,
+          "pages": [1, 2], "queue_wait_s": 0.5}]
+    b = [{"seq": 0, "t": 5.0, "wall": 99.0, "kind": "queued", "req_id": 0},
+         {"seq": 1, "t": 6.0, "wall": 99.1, "kind": "admitted", "req_id": 0,
+          "pages": [1, 2], "queue_wait_s": 0.9}]
+    assert diff_journals(a, b) is None  # timestamps/waits are volatile
+    b[1]["pages"] = [1, 3]
+    div = diff_journals(a, b)
+    assert div is not None and div.index == 1
+    msg = div.format()
+    assert "diverged at event 1" in msg
+    assert "pages=[1, 2]" in msg and "pages=[1, 3]" in msg
+    # length mismatch: the shorter journal's end is the divergence
+    div = diff_journals(a, a[:1])
+    assert div.index == 1 and div.replayed is None
+    assert "<journal ended>" in div.format()
+    # tuples canonicalize like the JSON round-trip the journal went through
+    assert canonical_event({"kind": "defrag", "moves": [(5, 1)]}) == \
+        {"kind": "defrag", "moves": [[5, 1]]}
+
+
+def test_replay_clock_scripts_tape_then_holds():
+    clk = ReplayClock([1.0, 2.5, 7.0])
+    assert [clk(), clk(), clk()] == [1.0, 2.5, 7.0]
+    assert clk() == 7.0 and clk() == 7.0  # exhausted: hold the last instant
+    assert clk.exhausted_reads == 2
+    assert ReplayClock([])() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# record -> replay: bitwise fidelity (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+def _mixed_runtime(record_path=None, spec=True, eviction="budget",
+                   admission="fifo"):
+    """The everything-on paged engine: prefix cache + chunked prefill +
+    (optionally) speculative decoding."""
+    return RuntimeConfig(
+        reduced=True,
+        kv=KVConfig(mode="paged", page_size=8, prefix_cache=True),
+        scheduler=SchedulerConfig(n_slots=2, prefill_chunk=8,
+                                  admission=admission, eviction=eviction),
+        spec=SpecConfig(enabled=spec, k=2, drafter="ngram"),
+        obs=ObsConfig(record_path=record_path),
+    )
+
+
+def _record_mixed_run(path, seed=0, deadlines=(None, 120.0, None, 120.0)):
+    """Record one staggered paged+prefix+spec run; returns recorded
+    per-request token streams keyed by req_id."""
+    llm = LLM(arch="llama3.2-1b", runtime=_mixed_runtime(record_path=path))
+    eng = llm.build_engine(25, 6)
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, llm.config.vocab_size, 16).tolist()
+    arrivals = []
+    for s, n in enumerate((5, 9, 3, 7)):
+        prompt = shared + rng.integers(0, llm.config.vocab_size, n).tolist()
+        arrivals.append((s * 2, prompt, 6,
+                         SamplingParams(deadline_s=deadlines[s])))
+    eng.run(arrivals=arrivals)
+    tokens = {r.req_id: list(r.output_tokens) for r in eng.metrics.finished}
+    llm.close()
+    return tokens
+
+
+def test_record_replay_mixed_paged_prefix_spec_bitwise(tmp_path):
+    bundle = str(tmp_path / "bundle")
+    recorded = _record_mixed_run(bundle)
+    b = load_bundle(bundle)
+    assert b.manifest["arch"] == "llama3.2-1b"
+    assert b.manifest["engine"]["cache_mode"] == "paged"
+    assert b.manifest["fingerprint"]["jax"]
+    assert len(b.arrivals) == 4 and len(b.outputs) == 4
+    assert {e["kind"] for e in b.journal} >= {"queued", "admitted",
+                                              "spec_verify", "finished"}
+    # admit decisions carry re-executable operands, not just reasons
+    admits = [e for e in b.journal if e["kind"] == "admitted"]
+    assert all("pages" in e or e["mode"] in ("chunked", "cold")
+               for e in admits)
+    assert any(e.get("mode") == "prefix" and e.get("pages") for e in admits)
+    assert all(len(b.clock) > 0 for _ in [0])
+
+    res = LLM.replay(bundle)  # the api-level entrypoint
+    assert res.ok, res.summary()
+    assert res.token_mismatches == [] and res.divergence is None
+    assert res.n_recorded_events == res.n_replayed_events > 0
+    # outputs in the bundle match what the recording engine produced
+    assert {o["req_id"]: o["tokens"] for o in b.outputs} == recorded
+
+
+def test_perturbed_replay_names_first_divergent_decision(tmp_path):
+    bundle = str(tmp_path / "bundle")
+    _record_mixed_run(bundle)
+
+    def shrink(rt):
+        # a smaller page pool: admissions that fit on record now reject
+        return dataclasses.replace(
+            rt, kv=dataclasses.replace(rt.kv, n_pages=6))
+
+    res = replay_bundle(bundle, runtime_transform=shrink, max_steps=2000)
+    assert not res.ok
+    assert res.divergence is not None
+    msg = res.divergence.format()
+    assert "diverged at event" in msg
+    # the differ shows both contexts: the recorded decision and what the
+    # perturbed engine did instead
+    assert "recorded " in msg and "replayed " in msg
+    rec, rep = res.divergence.recorded, res.divergence.replayed
+    assert canonical_event(rec) != canonical_event(rep)
+
+
+def test_fuzz_random_workloads_record_replay_bitwise(tmp_path):
+    """Property-style: random stagger / priorities / deadlines /
+    prefix-shared prompts / spec on-off -> record -> replay -> bitwise."""
+    for case, fuzz_seed in enumerate((7, 23, 101)):
+        rng = np.random.default_rng(fuzz_seed)
+        spec = bool(case % 2 == 0)
+        admission = ["fifo", "priority", "deadline"][case % 3]
+        bundle = str(tmp_path / f"fuzz{case}")
+        llm = LLM(arch="llama3.2-1b",
+                  runtime=_mixed_runtime(record_path=bundle, spec=spec,
+                                         admission=admission))
+        eng = llm.build_engine(25, 6)
+        shared = rng.integers(0, llm.config.vocab_size, 16).tolist()
+        n_req = int(rng.integers(3, 6))
+        step = 0
+        for _ in range(n_req):
+            use_prefix = rng.random() < 0.6
+            n = int(rng.integers(2, 9))
+            prompt = ((shared if use_prefix else []) +
+                      rng.integers(0, llm.config.vocab_size, n).tolist())
+            gen = int(rng.integers(2, 7))
+            # a mix of no deadline, generous, and already-blown (the
+            # tiny one exercises shed/lateness through the clock tape)
+            deadline = [None, 120.0, 1e-6][int(rng.integers(0, 3))]
+            eng.add_request(prompt, gen,
+                            sampling=SamplingParams(deadline_s=deadline),
+                            priority=int(rng.integers(0, 3)))
+            for _ in range(int(rng.integers(0, 3))):  # arrival stagger
+                if eng.has_work:
+                    eng.step()
+                step += 1
+        eng.run()
+        llm.close()
+        res = replay_bundle(bundle)
+        assert res.ok, (f"fuzz case {case} (seed {fuzz_seed}, spec={spec}, "
+                        f"admission={admission}):\n" + res.summary())
+
+
+# ---------------------------------------------------------------------------
+# disarmed recorder: zero overhead, identical decisions
+# ---------------------------------------------------------------------------
+
+def test_recorder_disarmed_zero_overhead_and_output_invisible(tmp_path):
+    llm_off = LLM(arch="llama3.2-1b", runtime=_mixed_runtime())
+    eng_off = llm_off.build_engine(25, 6)
+    # disarmed: no recorder object, and the decision clock IS
+    # time.perf_counter (no wrapper on any host path)
+    assert llm_off.obs.recorder is None
+    assert eng_off._recorder is None
+    assert eng_off._clock is time.perf_counter
+    assert eng_off.scheduler.clock is time.perf_counter
+
+    llm_on = LLM(arch="llama3.2-1b",
+                 runtime=_mixed_runtime(record_path=str(tmp_path / "b")))
+    eng_on = llm_on.build_engine(25, 6)
+    # recording is host-side only: armed and disarmed engines share the
+    # exact same jitted callables (same lru_cache entries -> same jaxprs)
+    assert eng_on._decode_sample is eng_off._decode_sample
+
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, llm_off.config.vocab_size, 16).tolist()
+    arrivals = [(s * 2, shared + rng.integers(
+        0, llm_off.config.vocab_size, n).tolist(), 5)
+        for s, n in enumerate((4, 8, 6))]
+    eng_off.run(arrivals=list(arrivals))
+    eng_on.run(arrivals=list(arrivals))
+    off = {r.req_id: r.output_tokens for r in eng_off.metrics.finished}
+    on = {r.req_id: r.output_tokens for r in eng_on.metrics.finished}
+    assert off == on  # recording never steers the run
+    llm_on.close()
+    llm_off.close()
+
+
+# ---------------------------------------------------------------------------
+# DeadlinePreemption (satellite): SLO eviction, recorded + replayable
+# ---------------------------------------------------------------------------
+
+def test_deadline_preemption_frees_lane_for_ontime_work(tmp_path):
+    bundle = str(tmp_path / "preempt")
+    rt = RuntimeConfig(
+        reduced=True,
+        kv=KVConfig(cache_len=64),
+        scheduler=SchedulerConfig(n_slots=1, eviction="deadline-preempt"),
+        obs=ObsConfig(record_path=bundle),
+    )
+    llm = LLM(arch="llama3.2-1b", runtime=rt)
+    eng = llm.engine
+    assert isinstance(llm._policies.eviction, DeadlinePreemption)
+    rng = np.random.default_rng(0)
+    doomed = eng.add_request(
+        rng.integers(0, llm.config.vocab_size, 8).tolist(), 32,
+        sampling=SamplingParams(deadline_s=1e-6))  # missed before it starts
+    ontime = eng.add_request(
+        rng.integers(0, llm.config.vocab_size, 8).tolist(), 4)
+    eng.run()
+    # the doomed lane was preempted (not run to its 32-token budget) so
+    # the on-time request could have the only slot
+    assert doomed.finish_reason == "deadline"
+    assert len(doomed.output_tokens) < 32
+    assert len(ontime.output_tokens) == 4
+    assert eng.metrics.deadline_preempt == 1
+    evicted = [e for e in llm.obs.events.events if e["kind"] == "evicted"]
+    assert len(evicted) == 1
+    assert evicted[0]["req_id"] == doomed.req_id
+    assert evicted[0]["reason"] == "deadline"
+    assert eng.metrics.report()["deadline_preempt"] == 1
+    llm.close()
+
+    # the preemption is a *time-dependent* decision: replay must reproduce
+    # it (same step, same lane) from the decision-clock tape alone
+    res = replay_bundle(bundle)
+    assert res.ok, res.summary()
+    replays = [e for e in load_bundle(bundle).journal
+               if e["kind"] == "evicted"]
+    assert len(replays) == 1 and replays[0]["reason"] == "deadline"
+
+
+def test_deadline_preemption_keeps_lane_when_nothing_waiting():
+    # with an empty queue a late request keeps running: a late answer
+    # beats an idle lane (the policy is work-conserving)
+    rt = RuntimeConfig(
+        reduced=True,
+        kv=KVConfig(cache_len=64),
+        scheduler=SchedulerConfig(n_slots=1, eviction="deadline-preempt"),
+    )
+    llm = LLM(arch="llama3.2-1b", runtime=rt)
+    eng = llm.engine
+    rng = np.random.default_rng(1)
+    late = eng.add_request(
+        rng.integers(0, llm.config.vocab_size, 8).tolist(), 4,
+        sampling=SamplingParams(deadline_s=1e-6))
+    eng.run()
+    assert len(late.output_tokens) == 4  # ran to budget, never preempted
+    assert eng.metrics.deadline_preempt == 0
+    assert late.finish_reason == "length"
+    llm.close()
+
+
+def test_scheduler_config_rejects_unknown_eviction():
+    with pytest.raises(ValueError, match="eviction"):
+        SchedulerConfig(eviction="lru")
+
+
+# ---------------------------------------------------------------------------
+# /events endpoint (satellite)
+# ---------------------------------------------------------------------------
+
+def test_metrics_server_serves_event_tail(tmp_path):
+    rt = RuntimeConfig(
+        reduced=True,
+        kv=KVConfig(cache_len=64),
+        scheduler=SchedulerConfig(n_slots=2),
+        obs=ObsConfig(enabled=True, metrics_port=0),
+    )
+    llm = LLM(arch="llama3.2-1b", runtime=rt)
+    rng = np.random.default_rng(0)
+    llm.generate([rng.integers(0, llm.config.vocab_size, 8).tolist()],
+                 max_new_tokens=3)
+    base = llm.metrics_server.url
+    doc = json.loads(urllib.request.urlopen(base + "/events?n=2").read())
+    assert doc["returned"] == 2
+    assert doc["window"] == len(llm.obs.events)
+    assert doc["events"] == list(llm.obs.events.events)[-2:]
+    assert all({"seq", "t", "wall", "kind"} <= set(e)
+               for e in doc["events"])
+    # default tail without a query string
+    doc = json.loads(urllib.request.urlopen(base + "/events").read())
+    assert doc["returned"] == min(100, doc["window"]) > 0
+    # malformed n -> 400, not a dead server
+    with pytest.raises(urllib.error.HTTPError) as err:
+        urllib.request.urlopen(base + "/events?n=bogus")
+    assert err.value.code == 400
+    json.loads(urllib.request.urlopen(base + "/snapshot").read())  # still up
+    llm.close()

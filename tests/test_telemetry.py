@@ -10,6 +10,7 @@ registries, so a scrape mid-run perturbs nothing.
 """
 
 import json
+import os
 import pathlib
 import subprocess
 import sys
@@ -562,3 +563,25 @@ def test_bench_check_fails_on_corrupt_and_gates_goodput(tmp_path):
     runs[-1]["goodput_frac_overload"] = 0.79
     traj.write_text(json.dumps({"runs": runs}))
     assert _run_bench_check(traj).returncode == 0
+
+
+def test_bench_check_writes_github_step_summary(tmp_path):
+    runs = [{"platform": "cpu", "goodput_frac_overload": v}
+            for v in (0.8, 0.8, 0.8, 0.4)]
+    traj = tmp_path / "BENCH_goodput.json"
+    traj.write_text(json.dumps({"runs": runs}))
+    summary = tmp_path / "step_summary.md"
+    env = dict(os.environ, GITHUB_STEP_SUMMARY=str(summary))
+    r = subprocess.run(
+        [sys.executable, str(_BENCH_CHECK), str(traj)],
+        capture_output=True, text=True, env=env)
+    assert r.returncode == 1
+    table = summary.read_text()
+    assert "## Benchmark regression gate" in table
+    assert "| file | metric |" in table
+    assert "`goodput_frac_overload`" in table and "FAIL" in table
+    # appends (never truncates someone else's summary), and an unset env
+    # var means no file side effects at all
+    subprocess.run([sys.executable, str(_BENCH_CHECK), str(traj)],
+                   capture_output=True, text=True, env=env)
+    assert table * 2 == summary.read_text()
